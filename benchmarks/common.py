@@ -1,0 +1,36 @@
+"""Shared benchmark utilities."""
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+FL_DIR = ROOT / "experiments" / "fl"
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    """Median wall time per call in microseconds."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def load_fl(tag):
+    p = FL_DIR / f"{tag}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this container the kernels execute in interpret mode, so the derived
+column reports *correctness* (max abs err vs oracle) plus the reference path
+timing; TPU wall-clock comparisons belong on real hardware."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.proximity import proximity, proximity_ref
+from repro.kernels.tsgemm import tsgemm, tsgemm_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(quick=True):
+    rows = []
+    # proximity: K clients
+    K, n, p = (32, 256, 3) if quick else (100, 768, 5)
+    U = jnp.stack([
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(KEY, i), (n, p)))[0]
+        for i in range(K)
+    ])
+    ref = jax.jit(proximity_ref)
+    err = float(jnp.abs(proximity(U) - ref(U)).max())
+    rows.append(("kernels/proximity_ref", timed(ref, U), f"K={K},maxerr={err:.2e}"))
+    rows.append(("kernels/proximity_pallas_interpret", timed(proximity, U), "interpret=True"))
+
+    m, k_, pp = (1024, 512, 10) if quick else (4096, 3072, 13)
+    A = jax.random.normal(KEY, (m, k_))
+    B = jax.random.normal(jax.random.fold_in(KEY, 1), (k_, pp))
+    refm = jax.jit(tsgemm_ref)
+    err = float(jnp.abs(tsgemm(A, B) - refm(A, B)).max() / jnp.abs(refm(A, B)).max())
+    rows.append(("kernels/tsgemm_ref", timed(refm, A, B), f"{m}x{k_}x{pp},relerr={err:.2e}"))
+    rows.append(("kernels/tsgemm_pallas_interpret", timed(tsgemm, A, B), ""))
+
+    Bq, S, Hq, Hkv, hd = (1, 128, 4, 2, 32) if quick else (2, 512, 8, 4, 64)
+    q = jax.random.normal(KEY, (Bq, S, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (Bq, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (Bq, S, Hkv, hd))
+    refa = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    fa = lambda q, k, v: flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    err = float(jnp.abs(fa(q, k, v) - refa(q, k, v)).max())
+    rows.append(("kernels/flash_ref", timed(refa, q, k, v), f"S={S},maxerr={err:.2e}"))
+    rows.append(("kernels/flash_pallas_interpret", timed(fa, q, k, v), ""))
+    return rows

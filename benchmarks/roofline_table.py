@@ -1,0 +1,81 @@
+"""Roofline table emitter: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline."""
+import json
+
+from benchmarks.common import DRYRUN_DIR
+
+
+def load_records(mesh=None, scheme="fsdp_tp"):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("scheme", "fsdp_tp") != scheme and r.get("status") == "ok":
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(mesh="pod16x16", scheme="fsdp_tp"):
+    lines = [
+        "| arch | shape | compute(ms) | memory(ms) | collective(ms) | bound | "
+        "useful | HBM/dev(GB) | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh, scheme):
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | n/a |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR |||||||")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']*1e3:.1f} | "
+            f"{ro['memory_s']*1e3:.1f} | {ro['collective_s']*1e3:.1f} | "
+            f"{ro['dominant']} | {ro['useful_ratio']:.2f} | "
+            f"{ro['bytes_per_device']/2**30:.2f} | {ro['fits_hbm']} |"
+        )
+    return "\n".join(lines)
+
+
+def run(quick=True):
+    rows = []
+    ok = skip = err = 0
+    worst = None
+    most_coll = None
+    for r in load_records():
+        if r["status"] == "skip":
+            skip += 1
+            continue
+        if r["status"] != "ok":
+            err += 1
+            continue
+        ok += 1
+        ro = r["roofline"]
+        key = (r["arch"], r["shape"], r["mesh"])
+        # roofline fraction: useful compute time / dominant term
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        frac = (ro["model_flops_per_device"] / 197e12) / max(dom, 1e-12)
+        if worst is None or frac < worst[1]:
+            worst = (key, frac)
+        if r["mesh"] == "pod16x16":
+            if most_coll is None or ro["collective_s"] > most_coll[1]:
+                most_coll = (key, ro["collective_s"])
+    rows.append(("dryrun/compiled_ok", None, str(ok)))
+    rows.append(("dryrun/documented_skips", None, str(skip)))
+    rows.append(("dryrun/errors", None, str(err)))
+    if worst:
+        rows.append(("roofline/worst_fraction", None,
+                     f"{worst[0]}:{worst[1]:.4f}"))
+    if most_coll:
+        rows.append(("roofline/most_collective_bound", None,
+                     f"{most_coll[0]}:{most_coll[1]*1e3:.1f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table("pod16x16"))
+    print()
+    print(markdown_table("pod2x16x16"))

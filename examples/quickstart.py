@@ -1,0 +1,42 @@
+"""Quickstart: PACFL one-shot clustering in ~30 lines.
+
+Four clients hold data from two different distributions; each computes a
+truncated-SVD signature, the server builds the principal-angle proximity
+matrix and clusters them — no training round needed (Algorithm 1, lines 7-12).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PACFLConfig, one_shot_clustering
+
+key = jax.random.PRNGKey(0)
+
+# Two latent subspaces with decaying spectra (stand-ins for two datasets).
+B1, _ = jnp.linalg.qr(jax.random.normal(key, (128, 6)))
+B2, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (128, 6)))
+spec = (0.8 ** jnp.arange(6))[:, None]
+
+
+def client_data(basis, seed):
+    coeffs = jax.random.normal(jax.random.fold_in(key, seed), (6, 200)) * spec
+    return basis @ coeffs  # (features, samples) — samples as columns
+
+
+clients = [client_data(B1, 10), client_data(B1, 11),
+           client_data(B2, 20), client_data(B2, 21)]
+
+clustering = one_shot_clustering(clients, PACFLConfig(p=3, beta=45.0, measure="eq2"))
+print("proximity matrix (degrees):")
+print(np.round(clustering.A, 1))
+print("cluster labels:", clustering.labels)          # -> [0 0 1 1]
+print("signature upload:", clustering.signature_bytes, "bytes total")
+assert clustering.n_clusters == 2
+print("OK: clients grouped by data subspace, one shot, no training.")

@@ -1,0 +1,128 @@
+"""Full FL experiment suite — reproduces every paper table at container scale.
+
+Writes one JSON per experiment under experiments/fl/.  Scaled protocol
+(documented in EXPERIMENTS.md): 100 clients, 10% sampling per round, MLP
+(128, 64) on 256-dim synthetic datasets, 3 local epochs, batch 20, SGD
+momentum 0.5 — the paper's LeNet/200-round protocol shrunk to a 1-core CPU
+budget while keeping the partition protocols exact.
+
+Run:  PYTHONPATH=src python experiments/run_fl_suite.py [--quick]
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import sys
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.pacfl import PACFLConfig
+from repro.data import make_dataset
+from repro.fl import FLConfig, dirichlet_skew, label_skew, mix_datasets, run_federation
+from repro.models.cnn import init_mlp_clf, mlp_clf_apply
+
+OUT = Path(__file__).resolve().parent / "fl"
+OUT.mkdir(parents=True, exist_ok=True)
+
+DIM = 256
+HID = (128, 64)
+STRATS = ["solo", "fedavg", "fedprox", "fednova", "scaffold",
+          "lg", "perfedavg", "ifca", "cfl", "pacfl"]
+
+# eq3/beta chosen via the Fig-2 sweep (benchmarks/fig2_beta_sweep.py)
+PACFL_LS = PACFLConfig(p=3, beta=175.0, measure="eq3")
+PACFL_MIX = PACFLConfig(p=3, beta=50.0, measure="eq2")
+
+
+def fl_cfg(rounds, pacfl):
+    return FLConfig(rounds=rounds, sample_frac=0.1, local_epochs=3,
+                    batch_size=20, lr=0.05, momentum=0.5, pacfl=pacfl,
+                    ifca_clusters=2)
+
+
+def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,)):
+    path = OUT / f"{tag}.json"
+    if path.exists():
+        print(f"skip {tag} (exists)")
+        return
+    results = {}
+    for name in strategies:
+        accs, rounds_hist = [], None
+        for seed in seeds:
+            init_fn = lambda key: init_mlp_clf(key, DIM, n_classes, hidden=HID)
+            t0 = time.time()
+            r = run_federation(name, clients, mlp_clf_apply, init_fn, cfg,
+                               seed=seed, eval_every=5)
+            accs.append(r.final_mean)
+            rounds_hist = [
+                {"rnd": rec.rnd, "acc": rec.mean_acc,
+                 "comm_mb": rec.comm_up_mb + rec.comm_down_mb}
+                for rec in r.records
+            ]
+            extra = {}
+            if name == "pacfl":
+                extra["n_clusters"] = int(r.strategy_obj.clustering.n_clusters)
+                extra["signature_mb"] = r.strategy_obj.clustering.signature_bytes / 1e6
+            print(f"  [{tag}] {name} seed{seed}: {r.final_mean:.4f} "
+                  f"({time.time()-t0:.0f}s) {extra}")
+        results[name] = {
+            "mean": float(np.mean(accs)), "std": float(np.std(accs)),
+            "history": rounds_hist,
+            **(extra if name == "pacfl" else {}),
+        }
+    path.write_text(json.dumps(results, indent=2))
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    R = 12 if args.quick else 40
+    N_CLIENTS = 20 if args.quick else 100
+    NTR = 1500 if args.quick else 4000
+    seeds = (0,) if args.quick else (0, 1)
+
+    t0 = time.time()
+    dss = {
+        n: make_dataset(n, n_train=NTR, n_test=1000, dim=DIM, seed=0)
+        for n in ("cifar10s", "svhns", "fmnists", "uspss", "cifar100s")
+    }
+
+    # ---- Table 2: Non-IID label skew 20% ------------------------------------
+    for dname in ("fmnists", "cifar10s", "cifar100s", "svhns"):
+        ds = dss[dname]
+        clients = label_skew(ds, N_CLIENTS, rho=0.2, seed=0, test_per_client=100)
+        _run(f"table2_label20_{dname}", STRATS, clients, ds.n_classes,
+             fl_cfg(R, PACFL_LS), seeds=seeds)
+
+    # ---- Table 7: label skew 30% (2 datasets at this budget) ----------------
+    for dname in ("cifar10s", "svhns"):
+        ds = dss[dname]
+        clients = label_skew(ds, N_CLIENTS, rho=0.3, seed=0, test_per_client=100)
+        _run(f"table7_label30_{dname}", STRATS, clients, ds.n_classes,
+             fl_cfg(R, PACFL_LS), seeds=(0,))
+
+    # ---- Table 8: Dirichlet(0.1) --------------------------------------------
+    for dname in ("fmnists", "cifar10s", "cifar100s"):
+        ds = dss[dname]
+        clients = dirichlet_skew(ds, N_CLIENTS, alpha=0.1, seed=0, test_per_client=100)
+        _run(f"table8_dir01_{dname}",
+             STRATS, clients, ds.n_classes,
+             fl_cfg(R, PACFLConfig(p=5, beta=175.0, measure="eq3")), seeds=(0,))
+
+    # ---- Table 3: MIX-4 ------------------------------------------------------
+    mix_counts = [6, 5, 5, 4] if args.quick else [31, 25, 27, 14]
+    clients = mix_datasets(
+        [dss[n] for n in ("cifar10s", "svhns", "fmnists", "uspss")],
+        mix_counts, samples_per_client=500 if not args.quick else 150, seed=0,
+    )
+    _run("table3_mix4", STRATS, clients, 40, fl_cfg(R, PACFL_MIX), seeds=seeds)
+
+    print(f"suite done in {(time.time()-t0)/60:.1f} min")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Checkpointing: pytree save/restore with structure + metadata.
+
+Flat-key npz for arrays + JSON sidecar for step/config.  Used by the FL
+trainer (cluster models) and the LM training driver.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(kp)] = np.asarray(leaf)
+    return flat
+
+
+def save(path, tree, *, step: int = 0, config: Optional[dict] = None) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path / "arrays.npz", **{k: v for k, v in flat.items()})
+    treedef = jax.tree_util.tree_structure(tree)
+    (path / "meta.json").write_text(json.dumps({
+        "step": step,
+        "config": config or {},
+        "treedef": str(treedef),
+        "keys": list(flat.keys()),
+    }))
+
+
+def restore(path, like: Any = None):
+    """Returns (tree, meta).  If `like` is given, arrays are restored into its
+    structure; otherwise a nested dict keyed by path strings is returned."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+    data = np.load(path / "arrays.npz")
+    if like is not None:
+        leaves = []
+        for kp, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
+            leaves.append(data[jax.tree_util.keystr(kp)])
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves
+        )
+        return tree, meta
+    # rebuild nested dict from key strings like "['a']['b']"
+    out: dict = {}
+    for k in meta["keys"]:
+        parts = [p.strip("'\"") for p in k.replace("]", "").split("[") if p]
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = data[k]
+    return out, meta

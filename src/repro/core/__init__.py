@@ -1,0 +1,37 @@
+"""PACFL core: signatures, principal angles, clustering, newcomers."""
+from repro.core.angles import (
+    principal_angles,
+    proximity_matrix,
+    smallest_principal_angle_deg,
+    trace_angle_deg,
+)
+from repro.core.hc import beta_sweep, hierarchical_clustering, n_clusters_for_beta
+from repro.core.pacfl import (
+    PACFLClustering,
+    PACFLConfig,
+    cluster_clients,
+    compute_signatures,
+    one_shot_clustering,
+)
+from repro.core.pme import assign_newcomers, extend_proximity_matrix
+from repro.core.svd import client_signature, randomized_truncated_svd, truncated_svd
+
+__all__ = [
+    "principal_angles",
+    "proximity_matrix",
+    "smallest_principal_angle_deg",
+    "trace_angle_deg",
+    "hierarchical_clustering",
+    "n_clusters_for_beta",
+    "beta_sweep",
+    "PACFLClustering",
+    "PACFLConfig",
+    "cluster_clients",
+    "compute_signatures",
+    "one_shot_clustering",
+    "assign_newcomers",
+    "extend_proximity_matrix",
+    "client_signature",
+    "randomized_truncated_svd",
+    "truncated_svd",
+]

@@ -1,0 +1,75 @@
+"""Principal angles between client data subspaces and the proximity matrix.
+
+Implements Eq. 1-3 of the paper.  Given orthonormal bases ``U in R^{n x p}``
+and ``W in R^{n x q}`` the principal angles are ``arccos`` of the singular
+values of ``U^T W``.  The paper's two proximity measures:
+
+* Eq. 2 — smallest principal angle ``Theta_1`` (needs the SVD of ``U^T W``).
+* Eq. 3 — ``tr(arccos(U^T W))`` over *identically ordered* singular-vector
+  pairs (no inner SVD; the measure the paper calls the more rigorous one).
+
+Angles are reported in **degrees** to match the paper's Tables 1 and 6.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def principal_angles(U: jax.Array, W: jax.Array) -> jax.Array:
+    """All principal angles (radians, ascending) between span(U), span(W)."""
+    G = U.astype(jnp.float32).T @ W.astype(jnp.float32)
+    s = jnp.linalg.svd(G, compute_uv=False)
+    s = jnp.clip(s, -1.0, 1.0)
+    return jnp.sort(jnp.arccos(s))
+
+
+def smallest_principal_angle_deg(U: jax.Array, W: jax.Array) -> jax.Array:
+    """Eq. 2 entry: smallest principal angle, in degrees."""
+    return jnp.degrees(principal_angles(U, W)[0])
+
+
+def trace_angle_deg(U: jax.Array, W: jax.Array) -> jax.Array:
+    """Eq. 3 entry: sum of arccos of the diagonal of U^T W, in degrees."""
+    G = U.astype(jnp.float32).T @ W.astype(jnp.float32)
+    d = jnp.clip(jnp.diagonal(G), -1.0, 1.0)
+    return jnp.degrees(jnp.sum(jnp.arccos(jnp.abs(d))))
+
+
+@functools.partial(jax.jit, static_argnames=("measure",))
+def proximity_matrix(U_stack: jax.Array, measure: str = "eq3") -> jax.Array:
+    """Proximity matrix A (K x K, degrees) from stacked signatures.
+
+    Parameters
+    ----------
+    U_stack: (K, n, p) stacked orthonormal client signatures.
+    measure: "eq2" (smallest principal angle) or "eq3" (trace of arccos).
+
+    Pure-jnp reference; ``repro.kernels.proximity`` is the Pallas TPU tiling
+    of the same computation and is tested against this function.
+    """
+    U_stack = U_stack.astype(jnp.float32)
+    # Gram tensor over all client pairs: (K, K, p, p)
+    G = jnp.einsum("inp,jnq->ijpq", U_stack, U_stack)
+    if measure == "eq3":
+        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
+        A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    elif measure == "eq2":
+        s = jnp.linalg.svd(G, compute_uv=False)          # (K, K, p)
+        smax = jnp.clip(s[..., 0], -1.0, 1.0)            # largest cosine
+        A = jnp.degrees(jnp.arccos(smax))
+    else:
+        raise ValueError(f"unknown measure: {measure!r}")
+    # Numerical hygiene: exact zeros on the diagonal, exact symmetry.
+    A = 0.5 * (A + A.T)
+    A = A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))
+    return A
+
+
+def proximity_matrix_pallas(U_stack: jax.Array) -> jax.Array:
+    """Eq. 3 proximity matrix through the Pallas kernel (interpret on CPU)."""
+    from repro.kernels.proximity import ops as pops
+
+    return pops.proximity(U_stack)

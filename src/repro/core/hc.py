@@ -1,0 +1,115 @@
+"""Agglomerative hierarchical clustering on the PACFL proximity matrix.
+
+The server clusters clients from the proximity matrix ``A`` (pairwise
+principal-angle distances, degrees) with a distance threshold ``beta`` — the
+paper's globalization/personalization knob (Fig. 2).  No a-priori number of
+clusters is required; optionally a fixed ``n_clusters`` stops the merging at a
+target count (used for ablations vs IFCA).
+
+Implemented from scratch (Lance-Williams updates) so the framework has no
+SciPy dependency at runtime; tests cross-check against
+``scipy.cluster.hierarchy`` as an oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+_LINKAGES = ("single", "complete", "average")
+
+
+def hierarchical_clustering(
+    A: np.ndarray,
+    beta: Optional[float] = None,
+    *,
+    n_clusters: Optional[int] = None,
+    linkage: str = "average",
+) -> np.ndarray:
+    """Cluster clients from proximity matrix ``A``.
+
+    Parameters
+    ----------
+    A: (K, K) symmetric distance matrix, zero diagonal.
+    beta: distance threshold — merging stops once the closest pair of
+        clusters is farther than ``beta``.  (Paper's ``HC(A, beta)``.)
+    n_clusters: alternatively stop at exactly this many clusters.
+    linkage: "single" | "complete" | "average".
+
+    Returns
+    -------
+    labels: (K,) int cluster ids in [0, Z).  Label ids are canonicalized by
+        first client occurrence so results are deterministic.
+    """
+    if (beta is None) == (n_clusters is None):
+        raise ValueError("specify exactly one of beta / n_clusters")
+    if linkage not in _LINKAGES:
+        raise ValueError(f"linkage must be one of {_LINKAGES}")
+    A = np.asarray(A, dtype=np.float64)
+    K = A.shape[0]
+    if A.shape != (K, K):
+        raise ValueError("A must be square")
+    if K == 1:
+        return np.zeros(1, dtype=np.int64)
+
+    # Working copy of cluster-cluster distances; `size[i]` tracks members for
+    # average linkage; `active[i]` marks live clusters; `members` the client
+    # ids merged into cluster i.
+    D = A.copy()
+    np.fill_diagonal(D, np.inf)
+    active = np.ones(K, dtype=bool)
+    size = np.ones(K, dtype=np.int64)
+    members: list[list[int]] = [[i] for i in range(K)]
+    remaining = K
+
+    target = 1 if n_clusters is None else max(int(n_clusters), 1)
+    while remaining > target:
+        sub = np.where(active)[0]
+        block = D[np.ix_(sub, sub)]
+        flat = np.argmin(block)
+        ii, jj = divmod(flat, block.shape[1])
+        i, j = int(sub[ii]), int(sub[jj])
+        dmin = block[ii, jj]
+        if beta is not None and dmin > beta:
+            break
+        if i > j:
+            i, j = j, i
+        # Lance-Williams update of distances from merged (i u j) to others.
+        for k in np.where(active)[0]:
+            if k == i or k == j:
+                continue
+            if linkage == "single":
+                d = min(D[i, k], D[j, k])
+            elif linkage == "complete":
+                d = max(D[i, k], D[j, k])
+            else:  # average (UPGMA)
+                d = (size[i] * D[i, k] + size[j] * D[j, k]) / (size[i] + size[j])
+            D[i, k] = D[k, i] = d
+        size[i] += size[j]
+        members[i].extend(members[j])
+        active[j] = False
+        D[j, :] = np.inf
+        D[:, j] = np.inf
+        remaining -= 1
+
+    labels = np.full(K, -1, dtype=np.int64)
+    next_id = 0
+    order = sorted(np.where(active)[0], key=lambda c: min(members[c]))
+    for c in order:
+        for m in members[c]:
+            labels[m] = next_id
+        next_id += 1
+    assert (labels >= 0).all()
+    return labels
+
+
+def n_clusters_for_beta(A: np.ndarray, beta: float, linkage: str = "average") -> int:
+    """Number of clusters HC(A, beta) forms (Fig. 2 red bars)."""
+    return int(hierarchical_clustering(A, beta, linkage=linkage).max()) + 1
+
+
+def beta_sweep(
+    A: np.ndarray, betas: np.ndarray, linkage: str = "average"
+) -> list[tuple[float, int]]:
+    """(beta, n_clusters) pairs across a threshold sweep (Fig. 2)."""
+    return [(float(b), n_clusters_for_beta(A, float(b), linkage)) for b in betas]

@@ -1,0 +1,125 @@
+"""PACFL orchestrator (Algorithm 1, server side).
+
+Separates the paper's two concerns:
+
+* **Clustering state machine** (this module) — signatures in, cluster ids out,
+  one-shot at federation start, extendable for newcomers (Algorithms 2-3).
+* **Per-cluster federated optimization** — ``repro.fl.trainer`` runs the round
+  loop with the ``pacfl`` strategy, which consumes :class:`PACFLClustering`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pme
+from repro.core.angles import proximity_matrix
+from repro.core.hc import hierarchical_clustering
+from repro.core.svd import client_signature
+
+
+@dataclass
+class PACFLConfig:
+    p: int = 3                     # number of principal vectors per client (paper: 3-5)
+    beta: float = 10.0             # HC distance threshold (degrees)
+    measure: str = "eq3"           # "eq2" | "eq3"
+    linkage: str = "average"
+    svd_method: str = "exact"      # "exact" | "randomized" | "randomized_tsgemm"
+    n_clusters: Optional[int] = None  # fixed cluster count overrides beta when set
+    use_pallas_proximity: bool = False
+
+
+@dataclass
+class PACFLClustering:
+    """Server-side clustering state after the one-shot phase."""
+
+    config: PACFLConfig
+    U: jnp.ndarray                  # (K, n, p) stacked signatures
+    A: np.ndarray                   # (K, K) proximity matrix, degrees
+    labels: np.ndarray              # (K,) cluster ids
+    signature_bytes: int = 0        # uplink cost of the one-shot phase
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.labels.max()) + 1 if self.labels.size else 0
+
+    def cluster_members(self, z: int) -> np.ndarray:
+        return np.where(self.labels == z)[0]
+
+    def extend(self, U_new: jnp.ndarray) -> "PACFLClustering":
+        """Algorithms 2+3: admit newcomers, preserving seen-client ids."""
+        A_ext, U_ext, assignment = pme.assign_newcomers(
+            self.A,
+            self.U,
+            U_new,
+            self.config.beta,
+            measure=self.config.measure,
+            linkage=self.config.linkage,
+            old_labels=self.labels,
+        )
+        extra_bytes = int(U_new.size * U_new.dtype.itemsize)
+        return PACFLClustering(
+            config=self.config,
+            U=U_ext,
+            A=A_ext,
+            labels=assignment.labels,
+            signature_bytes=self.signature_bytes + extra_bytes,
+        )
+
+
+def compute_signatures(
+    client_data: list[jnp.ndarray],
+    config: PACFLConfig,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Client-side one-shot phase: stacked ``U_p`` over clients.
+
+    ``client_data[k]`` is the data matrix ``D_k`` (N features x M_k samples).
+    Clients may own different numbers of samples; signatures all have shape
+    (N, p).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    sigs = []
+    for k, D in enumerate(client_data):
+        sub = jax.random.fold_in(key, k)
+        sigs.append(client_signature(D, config.p, method=config.svd_method, key=sub))
+    return jnp.stack(sigs)
+
+
+def cluster_clients(
+    U_stack: jnp.ndarray, config: PACFLConfig
+) -> PACFLClustering:
+    """Server-side one-shot phase: proximity matrix + HC -> clustering."""
+    if config.use_pallas_proximity:
+        from repro.core.angles import proximity_matrix_pallas
+
+        A = np.asarray(proximity_matrix_pallas(U_stack))
+    else:
+        A = np.asarray(proximity_matrix(U_stack, measure=config.measure))
+    if config.n_clusters is not None:
+        labels = hierarchical_clustering(
+            A, n_clusters=config.n_clusters, linkage=config.linkage
+        )
+    else:
+        labels = hierarchical_clustering(A, config.beta, linkage=config.linkage)
+    sig_bytes = int(U_stack.size * U_stack.dtype.itemsize)
+    return PACFLClustering(
+        config=config, U=U_stack, A=A, labels=labels, signature_bytes=sig_bytes
+    )
+
+
+def one_shot_clustering(
+    client_data: list[jnp.ndarray],
+    config: PACFLConfig,
+    *,
+    key: Optional[jax.Array] = None,
+) -> PACFLClustering:
+    """End-to-end one-shot phase (lines 7-12 of Algorithm 1)."""
+    U = compute_signatures(client_data, config, key=key)
+    return cluster_clients(U, config)

@@ -1,0 +1,95 @@
+"""Proximity Matrix Extension (Algorithm 2) and newcomer handling (Algorithm 3).
+
+PME extends an existing (M x M) proximity matrix with B newcomer signatures
+without recomputing seen-client pairs — newcomers join in O((M+B) * B) angle
+evaluations, and with an unchanged ``beta`` the old clients keep their cluster
+ids (tested as an invariant).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.angles import proximity_matrix
+from repro.core.hc import hierarchical_clustering
+
+
+def extend_proximity_matrix(
+    A_old: np.ndarray,
+    U_old: jnp.ndarray,
+    U_new: jnp.ndarray,
+    *,
+    measure: str = "eq3",
+) -> tuple[np.ndarray, jnp.ndarray]:
+    """Algorithm 2: returns (A_extended, U_extended).
+
+    Parameters
+    ----------
+    A_old: (M, M) existing proximity matrix (degrees).
+    U_old: (M, n, p) stacked seen-client signatures.
+    U_new: (B, n, p) stacked newcomer signatures.
+    """
+    A_old = np.asarray(A_old)
+    M = A_old.shape[0]
+    B = U_new.shape[0]
+    U_ext = jnp.concatenate([U_old, U_new], axis=0)
+    # Only the new block columns/rows need fresh angle computations; reuse the
+    # full kernel over the stacked matrix for the cross terms then splice.
+    A_full = np.asarray(proximity_matrix(U_ext, measure=measure))
+    A_ext = np.zeros((M + B, M + B), dtype=A_old.dtype)
+    A_ext[:M, :M] = A_old
+    A_ext[:M, M:] = A_full[:M, M:]
+    A_ext[M:, :M] = A_full[M:, :M]
+    A_ext[M:, M:] = A_full[M:, M:]
+    return A_ext, U_ext
+
+
+@dataclass
+class NewcomerAssignment:
+    labels: np.ndarray          # (M+B,) labels after extension
+    newcomer_labels: np.ndarray  # (B,) labels of the newcomers
+    new_cluster: np.ndarray      # (B,) bool — True if newcomer formed a new cluster
+
+
+def assign_newcomers(
+    A_old: np.ndarray,
+    U_old: jnp.ndarray,
+    U_new: jnp.ndarray,
+    beta: float,
+    *,
+    measure: str = "eq3",
+    linkage: str = "average",
+    old_labels: Optional[np.ndarray] = None,
+) -> tuple[np.ndarray, jnp.ndarray, NewcomerAssignment]:
+    """Algorithm 3: extend A, re-run HC with the same beta, read off newcomer ids.
+
+    Returns (A_extended, U_extended, assignment).  If ``old_labels`` is given,
+    newcomer labels are remapped onto the old cluster ids via majority overlap
+    so existing cluster identities are preserved for the caller.
+    """
+    M = np.asarray(A_old).shape[0]
+    B = U_new.shape[0]
+    A_ext, U_ext = extend_proximity_matrix(A_old, U_old, U_new, measure=measure)
+    labels = hierarchical_clustering(A_ext, beta, linkage=linkage)
+
+    if old_labels is not None:
+        # Map each extended-cluster id to the dominant old id among seen clients.
+        mapping: dict[int, int] = {}
+        next_new = int(np.max(old_labels)) + 1 if M else 0
+        for c in np.unique(labels):
+            olds = old_labels[labels[:M] == c] if M else np.array([])
+            if olds.size:
+                vals, counts = np.unique(olds, return_counts=True)
+                mapping[int(c)] = int(vals[np.argmax(counts)])
+            else:
+                mapping[int(c)] = next_new
+                next_new += 1
+        labels = np.array([mapping[int(c)] for c in labels], dtype=np.int64)
+
+    newcomer_labels = labels[M:]
+    seen = set(labels[:M].tolist())
+    new_cluster = np.array([lbl not in seen for lbl in newcomer_labels])
+    return A_ext, U_ext, NewcomerAssignment(labels, newcomer_labels, new_cluster)

@@ -1,0 +1,70 @@
+"""Reference distribution-distance measures (supplementary Table 6).
+
+The paper argues principal-angle proximity is *consistent* with classical
+distribution distances that FL privacy forbids (they need raw data/moments):
+Bhattacharyya distance, KL divergence (Gaussian closed forms) and kernel MMD.
+These are used only by the Table-6 consistency benchmark and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gaussian_stats(X: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean and (regularized) covariance of rows of X (samples x dims)."""
+    mu = jnp.mean(X, axis=0)
+    Xc = X - mu
+    cov = (Xc.T @ Xc) / (X.shape[0] - 1)
+    cov = cov + 1e-6 * jnp.eye(cov.shape[0], dtype=cov.dtype)
+    return mu, cov
+
+
+def bhattacharyya_gaussian(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """BD between Gaussian fits of two sample sets (Kailath 1967)."""
+    mu1, S1 = _gaussian_stats(X)
+    mu2, S2 = _gaussian_stats(Y)
+    S = 0.5 * (S1 + S2)
+    dmu = mu1 - mu2
+    term1 = 0.125 * dmu @ jnp.linalg.solve(S, dmu)
+    _, ld = jnp.linalg.slogdet(S)
+    _, ld1 = jnp.linalg.slogdet(S1)
+    _, ld2 = jnp.linalg.slogdet(S2)
+    term2 = 0.5 * (ld - 0.5 * (ld1 + ld2))
+    return term1 + term2
+
+
+def kl_gaussian(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """KL(N_X || N_Y) between Gaussian fits (Hershey & Olsen 2007 setting)."""
+    mu1, S1 = _gaussian_stats(X)
+    mu2, S2 = _gaussian_stats(Y)
+    d = mu1.shape[0]
+    S2inv_S1 = jnp.linalg.solve(S2, S1)
+    dmu = mu2 - mu1
+    _, ld1 = jnp.linalg.slogdet(S1)
+    _, ld2 = jnp.linalg.slogdet(S2)
+    return 0.5 * (
+        jnp.trace(S2inv_S1) + dmu @ jnp.linalg.solve(S2, dmu) - d + ld2 - ld1
+    )
+
+
+def mmd_rbf(X: jax.Array, Y: jax.Array, gamma: float | None = None) -> jax.Array:
+    """Unbiased kernel two-sample MMD^2 with an RBF kernel (Gretton 2012)."""
+    if gamma is None:
+        Z = jnp.concatenate([X, Y], axis=0)
+        d2 = jnp.sum((Z[:, None] - Z[None]) ** 2, axis=-1)
+        med = jnp.median(d2) + 1e-12
+        gamma = 1.0 / med
+
+    def k(A, B):
+        d2 = jnp.sum((A[:, None] - B[None]) ** 2, axis=-1)
+        return jnp.exp(-gamma * d2)
+
+    m, n = X.shape[0], Y.shape[0]
+    Kxx = k(X, X)
+    Kyy = k(Y, Y)
+    Kxy = k(X, Y)
+    sxx = (jnp.sum(Kxx) - jnp.trace(Kxx)) / (m * (m - 1))
+    syy = (jnp.sum(Kyy) - jnp.trace(Kyy)) / (n * (n - 1))
+    sxy = jnp.mean(Kxy)
+    return jnp.sqrt(jnp.maximum(sxx + syy - 2 * sxy, 0.0))

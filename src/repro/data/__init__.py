@@ -1,0 +1,4 @@
+"""Synthetic datasets with controllable subspace structure."""
+from repro.data.synthetic import DATASET_NAMES, SyntheticDataset, data_matrix, make_dataset
+
+__all__ = ["DATASET_NAMES", "SyntheticDataset", "make_dataset", "data_matrix"]

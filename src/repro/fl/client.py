@@ -1,0 +1,168 @@
+"""Client-side local training: jitted, vmapped across clients.
+
+All clients' data is pre-stacked into fixed-shape arrays (padding by cycling
+samples) so one ``vmap(local_sgd)`` call trains every sampled client of a
+round — the CPU-friendly *and* TPU-friendly formulation (the client axis maps
+onto the mesh data axis in ``launch/fl_train.py``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.partition import ClientData
+
+PyTree = Any
+
+
+@dataclass
+class StackedClients:
+    """Fixed-shape client tensors."""
+
+    x: np.ndarray          # (K, n_max, d)
+    y: np.ndarray          # (K, n_max)
+    n: np.ndarray          # (K,) true sample counts (aggregation weights)
+    x_test: np.ndarray     # (K, t_max, d)
+    y_test: np.ndarray     # (K, t_max)
+    t: np.ndarray          # (K,) true test counts
+    names: list[str]
+
+    @property
+    def n_clients(self) -> int:
+        return self.x.shape[0]
+
+
+def stack_clients(clients: list[ClientData]) -> StackedClients:
+    K = len(clients)
+    n_max = max(c.x_train.shape[0] for c in clients)
+    t_max = max(c.x_test.shape[0] for c in clients)
+    d = clients[0].x_train.shape[1]
+    x = np.zeros((K, n_max, d), np.float32)
+    y = np.zeros((K, n_max), np.int64)
+    xt = np.zeros((K, t_max, d), np.float32)
+    yt = np.zeros((K, t_max), np.int64)
+    n = np.zeros((K,), np.int64)
+    t = np.zeros((K,), np.int64)
+    for k, c in enumerate(clients):
+        nk, tk = c.x_train.shape[0], c.x_test.shape[0]
+        reps = -(-n_max // nk)
+        x[k] = np.tile(c.x_train, (reps, 1))[:n_max]
+        y[k] = np.tile(c.y_train, reps)[:n_max]
+        reps_t = -(-t_max // tk)
+        xt[k] = np.tile(c.x_test, (reps_t, 1))[:t_max]
+        yt[k] = np.tile(c.y_test, reps_t)[:t_max]
+        n[k], t[k] = nk, tk
+    return StackedClients(x, y, n, xt, yt, t, [c.dataset_name for c in clients])
+
+
+def ce_loss(apply_fn: Callable, params: PyTree, xb: jax.Array, yb: jax.Array) -> jax.Array:
+    logits = apply_fn(params, xb)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_local_sgd(
+    apply_fn: Callable,
+    *,
+    steps: int,
+    batch_size: int,
+    lr: float,
+    momentum: float = 0.5,
+    prox_mu: float = 0.0,
+    use_control_variates: bool = False,
+):
+    """Build local_sgd(params, x, y, n, key, anchor, c_diff) -> new_params.
+
+    * ``anchor``   — global params theta_g (FedProx proximal term); pass params
+                     when unused.
+    * ``c_diff``   — SCAFFOLD drift correction (c - c_k); zeros when unused.
+    Returns plain SGD with heavy-ball momentum (paper setup).
+    """
+
+    def loss_fn(params, anchor, xb, yb):
+        l = ce_loss(apply_fn, params, xb, yb)
+        if prox_mu > 0.0:
+            sq = sum(
+                jnp.sum(jnp.square(p - a))
+                for p, a in zip(jax.tree.leaves(params), jax.tree.leaves(anchor))
+            )
+            l = l + 0.5 * prox_mu * sq
+        return l
+
+    def local_sgd(params, x, y, n, key, anchor, c_diff):
+        mu0 = jax.tree.map(jnp.zeros_like, params)
+
+        def step(carry, key_t):
+            params, mu = carry
+            idx = jax.random.randint(key_t, (batch_size,), 0, jnp.maximum(n, 1))
+            xb, yb = x[idx], y[idx]
+            g = jax.grad(loss_fn)(params, anchor, xb, yb)
+            if use_control_variates:
+                g = jax.tree.map(lambda gi, ci: gi + ci, g, c_diff)
+            mu = jax.tree.map(lambda m, gi: momentum * m + gi, mu, g)
+            params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+            return (params, mu), None
+
+        keys = jax.random.split(key, steps)
+        (params, _), _ = jax.lax.scan(step, (params, mu0), keys)
+        return params
+
+    return local_sgd
+
+
+def make_perfedavg_local(
+    apply_fn: Callable, *, steps: int, batch_size: int, alpha: float, beta: float
+):
+    """Per-FedAvg (FO-MAML): theta' = theta - a*g(B1); theta -= b*g(theta', B2)."""
+
+    def local(params, x, y, n, key, anchor, c_diff):
+        del anchor, c_diff
+
+        def step(params, key_t):
+            k1, k2 = jax.random.split(key_t)
+            i1 = jax.random.randint(k1, (batch_size,), 0, jnp.maximum(n, 1))
+            i2 = jax.random.randint(k2, (batch_size,), 0, jnp.maximum(n, 1))
+            g1 = jax.grad(lambda p: ce_loss(apply_fn, p, x[i1], y[i1]))(params)
+            inner = jax.tree.map(lambda p, g: p - alpha * g, params, g1)
+            g2 = jax.grad(lambda p: ce_loss(apply_fn, p, x[i2], y[i2]))(inner)
+            params = jax.tree.map(lambda p, g: p - beta * g, params, g2)
+            return params, None
+
+        keys = jax.random.split(key, steps)
+        params, _ = jax.lax.scan(step, params, keys)
+        return params
+
+    return local
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn",))
+def batch_eval(apply_fn, stacked_params, xt, yt, t):
+    """Per-client top-1 accuracy. stacked_params: (K, ...) pytree."""
+
+    def one(params, x, y, tk):
+        logits = apply_fn(params, x)
+        pred = jnp.argmax(logits, axis=-1)
+        mask = jnp.arange(x.shape[0]) < tk
+        return jnp.sum((pred == y) * mask) / jnp.maximum(tk, 1)
+
+    return jax.vmap(one)(stacked_params, xt, yt, t)
+
+
+def weighted_average(stacked: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted mean over the leading (client) axis."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    def avg(leaf):
+        return jnp.tensordot(w, leaf, axes=(0, 0))
+
+    return jax.tree.map(avg, stacked)
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    return int(sum(l.size * 4 for l in jax.tree.leaves(tree)))

@@ -1,0 +1,537 @@
+"""Federated strategies: PACFL + every baseline the paper compares against.
+
+Global: FedAvg, FedProx, FedNova, SCAFFOLD.
+Personalized: SOLO, LG-FedAvg, Per-FedAvg.
+Clustered: IFCA (fixed C), CFL (Sattler bipartitioning), PACFL (this paper).
+
+Each strategy implements ``setup``/``run_round``/``eval_params`` over the
+stacked-clients representation.  Communication bytes are tracked per round
+(``comm_up``/``comm_down``) for the Table 5/9/10 reproductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pacfl import PACFLConfig, cluster_clients, compute_signatures
+from repro.fl.client import (
+    StackedClients,
+    batch_eval,
+    ce_loss,
+    make_local_sgd,
+    make_perfedavg_local,
+    tree_size_bytes,
+    weighted_average,
+)
+
+PyTree = Any
+
+
+@dataclass
+class FLConfig:
+    rounds: int = 50
+    sample_frac: float = 0.1
+    local_epochs: int = 5
+    batch_size: int = 20
+    lr: float = 0.01
+    momentum: float = 0.5
+    # strategy-specific knobs (paper defaults)
+    prox_mu: float = 0.01
+    perfed_alpha: float = 1e-2
+    perfed_beta: float = 1e-3
+    ifca_clusters: int = 2
+    cfl_eps1: float = 0.4
+    cfl_eps2: float = 1.6
+    pacfl: PACFLConfig = field(default_factory=PACFLConfig)
+    personalize_steps: int = 25   # eval-time fine-tune for Per-FedAvg
+
+    def local_steps(self, n_avg: int) -> int:
+        return max(1, self.local_epochs * max(1, n_avg // self.batch_size))
+
+
+def _take(tree: PyTree, idx: np.ndarray) -> PyTree:
+    return jax.tree.map(lambda l: l[idx], tree)
+
+
+def _broadcast(tree: PyTree, m: int) -> PyTree:
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (m,) + l.shape), tree)
+
+
+def _zeros_like_stack(tree: PyTree, m: int) -> PyTree:
+    return jax.tree.map(lambda l: jnp.zeros((m,) + l.shape, l.dtype), tree)
+
+
+class Strategy:
+    """Base: holds jitted vmapped local updates and communication counters."""
+
+    name = "base"
+    uses_anchor = False
+    uses_cv = False
+
+    def __init__(self, apply_fn: Callable, init_fn: Callable, cfg: FLConfig):
+        self.apply_fn = apply_fn
+        self.init_fn = init_fn
+        self.cfg = cfg
+        self.comm_up = 0      # cumulative bytes clients -> server
+        self.comm_down = 0    # cumulative bytes server -> clients
+        self.history: list[dict] = []
+
+    # -- to be provided by subclasses -------------------------------------
+    def setup(self, key: jax.Array, data: StackedClients) -> None:
+        raise NotImplementedError
+
+    def run_round(self, rnd: int, sampled: np.ndarray, key: jax.Array) -> None:
+        raise NotImplementedError
+
+    def eval_params(self) -> PyTree:
+        """Stacked per-client params (K, ...) used for local-test evaluation."""
+        raise NotImplementedError
+
+    # -- shared machinery ---------------------------------------------------
+    def _build(self, data: StackedClients, *, prox_mu: float = 0.0, use_cv: bool = False):
+        steps = self.cfg.local_steps(int(np.mean(data.n)))
+        self._steps = steps
+        local = make_local_sgd(
+            self.apply_fn,
+            steps=steps,
+            batch_size=self.cfg.batch_size,
+            lr=self.cfg.lr,
+            momentum=self.cfg.momentum,
+            prox_mu=prox_mu,
+            use_control_variates=use_cv,
+        )
+        self._vupdate = jax.jit(jax.vmap(local))
+        self.data = data
+        self._P = None  # model bytes, set after init
+
+    def _model_bytes(self, params: PyTree) -> int:
+        if self._P is None:
+            self._P = tree_size_bytes(params)
+        return self._P
+
+    def _run_local(self, stacked_params, sampled, key, anchors=None, c_diffs=None):
+        m = len(sampled)
+        x = jnp.asarray(self.data.x[sampled])
+        y = jnp.asarray(self.data.y[sampled])
+        n = jnp.asarray(self.data.n[sampled])
+        keys = jax.random.split(key, m)
+        if anchors is None:
+            anchors = stacked_params
+        if c_diffs is None:
+            c_diffs = _zeros_like_stack(jax.tree.map(lambda l: l[0], stacked_params), m)
+        return self._vupdate(stacked_params, x, y, n, keys, anchors, c_diffs)
+
+    def evaluate(self) -> np.ndarray:
+        params = self.eval_params()
+        acc = batch_eval(
+            self.apply_fn, params,
+            jnp.asarray(self.data.x_test), jnp.asarray(self.data.y_test),
+            jnp.asarray(self.data.t),
+        )
+        return np.asarray(acc)
+
+
+# ===========================================================================
+# Global strategies
+# ===========================================================================
+
+
+class FedAvg(Strategy):
+    name = "fedavg"
+
+    def setup(self, key, data):
+        self._build(data)
+        self.global_params = self.init_fn(key)
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        P = self._model_bytes(self.global_params)
+        stacked = _broadcast(self.global_params, m)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        self.global_params = weighted_average(new, w)
+        self.comm_down += P * m
+        self.comm_up += P * m
+
+    def eval_params(self):
+        return _broadcast(self.global_params, self.data.n_clients)
+
+
+class FedProx(FedAvg):
+    name = "fedprox"
+
+    def setup(self, key, data):
+        self._build(data, prox_mu=self.cfg.prox_mu)
+        self.global_params = self.init_fn(key)
+
+
+class FedNova(FedAvg):
+    name = "fednova"
+
+    def run_round(self, rnd, sampled, key):
+        # With uniform local steps FedNova == FedAvg up to the tau_eff scale;
+        # we implement the normalized-update form explicitly.
+        m = len(sampled)
+        P = self._model_bytes(self.global_params)
+        stacked = _broadcast(self.global_params, m)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        w = w / jnp.sum(w)
+        tau = jnp.full((m,), float(self._steps))
+        tau_eff = jnp.sum(w * tau)
+
+        def nova(g, ns):
+            # d_k = (g - theta_k) / tau_k ; g' = g - tau_eff * sum_k w_k d_k
+            d = (g[None] - ns) / tau[(...,) + (None,) * (ns.ndim - 1)]
+            return g - tau_eff * jnp.tensordot(w, d, axes=(0, 0))
+
+        self.global_params = jax.tree.map(nova, self.global_params, new)
+        self.comm_down += P * m
+        self.comm_up += P * m
+
+
+class Scaffold(Strategy):
+    name = "scaffold"
+
+    def setup(self, key, data):
+        self._build(data, use_cv=True)
+        self.global_params = self.init_fn(key)
+        self.c = jax.tree.map(jnp.zeros_like, self.global_params)
+        self.c_k = _zeros_like_stack(self.global_params, data.n_clients)
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        P = self._model_bytes(self.global_params)
+        stacked = _broadcast(self.global_params, m)
+        c_k_s = _take(self.c_k, sampled)
+        c_diffs = jax.tree.map(lambda c, ck: c[None] - ck, self.c, c_k_s)
+        new = self._run_local(stacked, sampled, key, c_diffs=c_diffs)
+        # option II control-variate update
+        coef = 1.0 / (self._steps * self.cfg.lr)
+        new_c_k = jax.tree.map(
+            lambda ck, c, g, nn: ck - c[None] + coef * (g[None] - nn),
+            c_k_s, self.c, self.global_params, new,
+        )
+        dc = jax.tree.map(lambda a, b: jnp.mean(a - b, axis=0), new_c_k, c_k_s)
+        frac = m / self.data.n_clients
+        self.c = jax.tree.map(lambda c, d: c + frac * d, self.c, dc)
+        self.c_k = jax.tree.map(
+            lambda all_, upd: all_.at[jnp.asarray(sampled)].set(upd), self.c_k, new_c_k
+        )
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        self.global_params = weighted_average(new, w)
+        self.comm_down += 2 * P * m   # model + server control variate
+        self.comm_up += 2 * P * m
+
+    def eval_params(self):
+        return _broadcast(self.global_params, self.data.n_clients)
+
+
+# ===========================================================================
+# Personalized strategies
+# ===========================================================================
+
+
+class Solo(Strategy):
+    name = "solo"
+
+    def setup(self, key, data):
+        self._build(data)
+        keys = jax.random.split(key, data.n_clients)
+        self.params = jax.vmap(self.init_fn)(keys)
+
+    def run_round(self, rnd, sampled, key):
+        stacked = _take(self.params, sampled)
+        new = self._run_local(stacked, sampled, key)
+        self.params = jax.tree.map(
+            lambda all_, upd: all_.at[jnp.asarray(sampled)].set(upd), self.params, new
+        )
+        # no communication
+
+    def eval_params(self):
+        return self.params
+
+
+class LGFedAvg(Strategy):
+    """LG-FedAvg: local representation layers + global head.
+
+    Param split: leaves whose path contains one of ``global_keys`` are
+    aggregated; the rest stay per-client.
+    """
+
+    name = "lg"
+
+    def __init__(self, apply_fn, init_fn, cfg, global_keys=("layers_-1", "f3", "fc")):
+        super().__init__(apply_fn, init_fn, cfg)
+        self.global_keys = global_keys
+
+    def _is_global(self, path: str) -> bool:
+        return any(g in path for g in self.global_keys)
+
+    def setup(self, key, data):
+        self._build(data)
+        keys = jax.random.split(key, data.n_clients)
+        self.params = jax.vmap(self.init_fn)(keys)
+        # label each leaf by path
+        paths = []
+        jax.tree_util.tree_map_with_path(
+            lambda p, l: paths.append(jax.tree_util.keystr(p)), self.params
+        )
+        self._paths = paths
+        # auto-detect the classifier head for list-of-layers models (MLP):
+        # the LAST entry of a "layers" list is global, the rest local.
+        idxs = [
+            int(m.group(1))
+            for p in paths
+            for m in [re.match(r".*\['layers'\]\[(\d+)\]", p)]
+            if m
+        ]
+        if idxs:
+            self.global_keys = tuple(self.global_keys) + (f"['layers'][{max(idxs)}]",)
+
+    def _split_bytes(self) -> int:
+        sizes = []
+        jax.tree_util.tree_map_with_path(
+            lambda p, l: sizes.append(
+                l.size // l.shape[0] * 4 if self._is_global(jax.tree_util.keystr(p)) else 0
+            ),
+            self.params,
+        )
+        return int(sum(sizes))
+
+    def run_round(self, rnd, sampled, key):
+        stacked = _take(self.params, sampled)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+
+        def agg(path, all_, upd):
+            upd_new = upd
+            if self._is_global(jax.tree_util.keystr(path)):
+                g = weighted_average(upd, w)
+                upd_new = jnp.broadcast_to(g, upd.shape)
+            return all_.at[jnp.asarray(sampled)].set(upd_new)
+
+        self.params = jax.tree_util.tree_map_with_path(agg, self.params, new)
+        gb = self._split_bytes()
+        self.comm_down += gb * len(sampled)
+        self.comm_up += gb * len(sampled)
+
+    def eval_params(self):
+        return self.params
+
+
+class PerFedAvg(Strategy):
+    name = "perfedavg"
+
+    def setup(self, key, data):
+        self._build(data)
+        local = make_perfedavg_local(
+            self.apply_fn,
+            steps=self.cfg.local_steps(int(np.mean(data.n))),
+            batch_size=self.cfg.batch_size,
+            alpha=self.cfg.perfed_alpha,
+            beta=self.cfg.perfed_beta,
+        )
+        self._vupdate = jax.jit(jax.vmap(local))
+        self.global_params = self.init_fn(key)
+        # personalization fine-tune (eval time)
+        pers = make_local_sgd(
+            self.apply_fn, steps=self.cfg.personalize_steps,
+            batch_size=self.cfg.batch_size, lr=self.cfg.perfed_alpha, momentum=0.0,
+        )
+        self._vpers = jax.jit(jax.vmap(pers))
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        P = self._model_bytes(self.global_params)
+        stacked = _broadcast(self.global_params, m)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        self.global_params = weighted_average(new, w)
+        self.comm_down += P * m
+        self.comm_up += P * m
+
+    def eval_params(self):
+        K = self.data.n_clients
+        stacked = _broadcast(self.global_params, K)
+        keys = jax.random.split(jax.random.PRNGKey(1234), K)
+        c0 = _zeros_like_stack(self.global_params, K)
+        return self._vpers(
+            stacked, jnp.asarray(self.data.x), jnp.asarray(self.data.y),
+            jnp.asarray(self.data.n), keys, stacked, c0,
+        )
+
+
+# ===========================================================================
+# Clustered strategies
+# ===========================================================================
+
+
+class IFCA(Strategy):
+    name = "ifca"
+
+    def setup(self, key, data):
+        self._build(data)
+        C = self.cfg.ifca_clusters
+        keys = jax.random.split(key, C)
+        self.cluster_params = jax.vmap(self.init_fn)(keys)
+        self.assign = np.zeros(data.n_clients, np.int64)
+
+        def losses(cparams, x, y, n):
+            # loss of every cluster model on one client's train data head
+            xb, yb = x[:64], y[:64]
+            return jax.vmap(lambda p: ce_loss(self.apply_fn, p, xb, yb))(cparams)
+
+        self._vlosses = jax.jit(jax.vmap(losses, in_axes=(None, 0, 0, 0)))
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        C = self.cfg.ifca_clusters
+        P = self._model_bytes(jax.tree.map(lambda l: l[0], self.cluster_params))
+        x = jnp.asarray(self.data.x[sampled])
+        y = jnp.asarray(self.data.y[sampled])
+        n = jnp.asarray(self.data.n[sampled])
+        ls = np.asarray(self._vlosses(self.cluster_params, x, y, n))   # (m, C)
+        pick = ls.argmin(axis=1)
+        self.assign[sampled] = pick
+        stacked = _take(self.cluster_params, pick)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        for c in range(C):
+            mask = pick == c
+            if not mask.any():
+                continue
+            avg = weighted_average(_take(new, np.where(mask)[0]), w[np.asarray(mask)])
+            self.cluster_params = jax.tree.map(
+                lambda all_, a: all_.at[c].set(a), self.cluster_params, avg
+            )
+        # every sampled client downloads ALL C cluster models (IFCA's cost)
+        self.comm_down += C * P * m
+        self.comm_up += P * m
+
+    def eval_params(self):
+        # unsampled clients pick their best cluster at eval
+        x = jnp.asarray(self.data.x)
+        y = jnp.asarray(self.data.y)
+        n = jnp.asarray(self.data.n)
+        ls = np.asarray(self._vlosses(self.cluster_params, x, y, n))
+        pick = ls.argmin(axis=1)
+        return _take(self.cluster_params, pick)
+
+
+class CFL(Strategy):
+    """Sattler et al. recursive bipartitioning on client-update cosine sim."""
+
+    name = "cfl"
+
+    def setup(self, key, data):
+        self._build(data)
+        self.labels = np.zeros(data.n_clients, np.int64)
+        self.models: list[PyTree] = [self.init_fn(key)]
+
+    @staticmethod
+    def _flat(tree) -> np.ndarray:
+        return np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(tree)])
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        P = self._model_bytes(self.models[0])
+        stacked = jax.tree.map(
+            lambda *ls: jnp.stack([ls[self.labels[k]] for k in sampled]),
+            *[jax.tree.map(lambda l: l, mp) for mp in self.models],
+        ) if len(self.models) > 1 else _broadcast(self.models[0], m)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        # aggregate per cluster + collect update vectors
+        updates = {}
+        for c in range(len(self.models)):
+            mask = self.labels[sampled] == c
+            if not mask.any():
+                continue
+            idx = np.where(mask)[0]
+            new_c = _take(new, idx)
+            self.models[c] = weighted_average(new_c, w[np.asarray(idx)])
+            du = [
+                self._flat(jax.tree.map(lambda a, b: a - b, _take(new_c, np.array([i])),
+                                        _broadcast(self.models[c], 1)))
+                for i in range(len(idx))
+            ]
+            updates[c] = (sampled[idx], np.stack(du))
+        # split check (Sattler criteria)
+        for c, (cl_ids, du) in list(updates.items()):
+            if len(cl_ids) < 4:
+                continue
+            norms = np.linalg.norm(du, axis=1)
+            mean_norm = np.linalg.norm(du.mean(axis=0))
+            if mean_norm < self.cfg.cfl_eps1 and norms.max() > self.cfg.cfl_eps2:
+                sim = (du @ du.T) / (
+                    np.linalg.norm(du, axis=1)[:, None] * np.linalg.norm(du, axis=1)[None] + 1e-9
+                )
+                i, j = np.unravel_index(np.argmin(sim), sim.shape)
+                part = sim[i] >= sim[j]
+                new_label = len(self.models)
+                self.models.append(jax.tree.map(jnp.copy, self.models[c]))
+                moved = cl_ids[~part]
+                self.labels[moved] = new_label
+        self.comm_down += P * m
+        self.comm_up += P * m
+
+    def eval_params(self):
+        return jax.tree.map(
+            lambda *ls: jnp.stack([ls[self.labels[k]] for k in range(self.data.n_clients)]),
+            *self.models,
+        )
+
+
+class PACFL(Strategy):
+    """The paper's method: one-shot principal-angle clustering + per-cluster
+    FedAvg (Algorithm 1)."""
+
+    name = "pacfl"
+
+    def setup(self, key, data):
+        self._build(data)
+        # one-shot phase: clients compute + upload U_p signatures
+        mats = [
+            jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
+        ]  # (features, samples)
+        U = compute_signatures(mats, self.cfg.pacfl, key=key)
+        self.clustering = cluster_clients(U, self.cfg.pacfl)
+        self.labels = self.clustering.labels
+        Z = self.clustering.n_clusters
+        self.cluster_params = jax.vmap(self.init_fn)(
+            jnp.broadcast_to(key, (Z,) + key.shape)
+        )  # all clusters start from the same theta_g^0 (Algorithm 1 line 12)
+        self.comm_up += self.clustering.signature_bytes
+
+    def run_round(self, rnd, sampled, key):
+        m = len(sampled)
+        P = self._model_bytes(jax.tree.map(lambda l: l[0], self.cluster_params))
+        pick = self.labels[sampled]
+        stacked = _take(self.cluster_params, pick)
+        new = self._run_local(stacked, sampled, key)
+        w = jnp.asarray(self.data.n[sampled], jnp.float32)
+        for z in np.unique(pick):
+            mask = pick == z
+            idx = np.where(mask)[0]
+            avg = weighted_average(_take(new, idx), w[np.asarray(idx)])
+            self.cluster_params = jax.tree.map(
+                lambda all_, a: all_.at[int(z)].set(a), self.cluster_params, avg
+            )
+        self.comm_down += P * m   # each client downloads only ITS cluster model
+        self.comm_up += P * m
+
+    def eval_params(self):
+        return _take(self.cluster_params, self.labels)
+
+
+STRATEGIES: dict[str, type] = {
+    s.name: s
+    for s in [FedAvg, FedProx, FedNova, Scaffold, Solo, LGFedAvg, PerFedAvg, IFCA, CFL, PACFL]
+}

@@ -1,0 +1,98 @@
+"""Federation driver: round loop, client sampling, evaluation, history.
+
+``run_federation`` is the single entry point used by benchmarks, examples and
+tests.  It is model-agnostic: pass an ``apply_fn`` / ``init_fn`` pair from
+``repro.models.cnn.MODEL_ZOO`` (or any functional model).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.fl.client import StackedClients, stack_clients
+from repro.fl.partition import ClientData
+from repro.fl.strategies import STRATEGIES, FLConfig, Strategy
+
+
+@dataclass
+class RoundRecord:
+    rnd: int
+    mean_acc: float
+    std_acc: float
+    comm_up_mb: float
+    comm_down_mb: float
+    seconds: float
+
+
+@dataclass
+class FederationResult:
+    strategy: str
+    records: list[RoundRecord]
+    final_accs: np.ndarray          # (K,) per-client final local test accuracy
+    strategy_obj: Strategy
+
+    @property
+    def final_mean(self) -> float:
+        return float(self.final_accs.mean())
+
+    @property
+    def final_std(self) -> float:
+        return float(self.final_accs.std())
+
+    def rounds_to_target(self, target: float) -> Optional[int]:
+        for r in self.records:
+            if r.mean_acc >= target:
+                return r.rnd
+        return None
+
+    def comm_mb_to_target(self, target: float) -> Optional[float]:
+        for r in self.records:
+            if r.mean_acc >= target:
+                return r.comm_up_mb + r.comm_down_mb
+        return None
+
+
+def run_federation(
+    strategy_name: str,
+    clients: list[ClientData],
+    apply_fn: Callable,
+    init_fn: Callable,
+    cfg: FLConfig,
+    *,
+    seed: int = 0,
+    eval_every: int = 5,
+    verbose: bool = False,
+    strategy_kwargs: Optional[dict] = None,
+) -> FederationResult:
+    key = jax.random.PRNGKey(seed)
+    data = stack_clients(clients)
+    cls = STRATEGIES[strategy_name]
+    strat: Strategy = cls(apply_fn, init_fn, cfg, **(strategy_kwargs or {}))
+    strat.setup(jax.random.fold_in(key, 0), data)
+
+    rng = np.random.default_rng(seed)
+    K = data.n_clients
+    m = max(1, int(round(cfg.sample_frac * K)))
+    records: list[RoundRecord] = []
+    t0 = time.time()
+    for rnd in range(1, cfg.rounds + 1):
+        sampled = np.sort(rng.choice(K, size=m, replace=False))
+        strat.run_round(rnd, sampled, jax.random.fold_in(key, rnd))
+        if rnd % eval_every == 0 or rnd == cfg.rounds:
+            accs = strat.evaluate()
+            rec = RoundRecord(
+                rnd, float(accs.mean()), float(accs.std()),
+                strat.comm_up / 1e6, strat.comm_down / 1e6, time.time() - t0,
+            )
+            records.append(rec)
+            if verbose:
+                print(
+                    f"[{strategy_name}] round {rnd:4d} acc {rec.mean_acc:.4f} "
+                    f"± {rec.std_acc:.4f}  comm {rec.comm_up_mb + rec.comm_down_mb:.1f} MB"
+                )
+    final = strat.evaluate()
+    return FederationResult(strategy_name, records, final, strat)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash attention (GQA, causal, sliding window).
+
+The prefill hot spot of the architecture zoo — and the fix for the baseline
+roofline finding that score-tensor HBM traffic dominates prefill/train
+(EXPERIMENTS.md §Perf): scores and probabilities live in VMEM tiles and
+never round-trip to HBM.
+
+Tiling: grid (B, Hq, nq, nk) with kv iterating fastest; (bq, hd) query tiles
+and (bk, hd) KV tiles; online-softmax state (m, l, acc) in VMEM scratch that
+persists across the kv grid dimension.  MXU-aligned: bq, bk multiples of 128
+in production (smaller in tests/interpret).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  bq: int, bk: int, nk: int, scale: float,
+                  causal: bool, window: int | None, q_offset: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale       # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (bq, bk)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = jnp.ones((bq, bk), bool)
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))          # (bq,)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    m_s[...] = m_new
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == nk - 1)
+    def _():
+        o_ref[0, :, 0, :] = (
+            acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "q_offset", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,      # (B, Sq, Hq, hd)
+    k: jax.Array,      # (B, Skv, Hkv, hd)
+    v: jax.Array,      # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, scale=scale,
+        causal=causal, window=window, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, iq, ik, g=G: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, iq, ik, g=G: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),       # l (running denom)
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )
+    return out(q, k, v)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, bq: int = 128, bk: int = 128):
+    """(B,Sq,Hq,hd) x (B,Skv,Hkv,hd)^2 -> (B,Sq,Hq,hd); GQA aware.
+
+    Pallas kernel; interpret mode on non-TPU backends.
+    """
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=interpret,
+    )

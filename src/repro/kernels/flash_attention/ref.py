@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, windowed)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,      # (B, Sq, Hq, hd)
+    k: jnp.ndarray,      # (B, Skv, Hkv, hd)
+    v: jnp.ndarray,      # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qs = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bqhgd,bchd->bqhgc", qs, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(Skv)
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgc,bchd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd)

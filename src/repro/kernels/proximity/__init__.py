@@ -1,0 +1,4 @@
+from repro.kernels.proximity.ops import proximity
+from repro.kernels.proximity.ref import proximity_ref
+
+__all__ = ["proximity", "proximity_ref"]

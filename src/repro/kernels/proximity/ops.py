@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the proximity kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.proximity.proximity import proximity_pallas
+
+
+def proximity(U: jax.Array, *, bk: int = 8) -> jax.Array:
+    """(K, n, p) signatures -> (K, K) Eq.-3 proximity matrix (degrees).
+
+    Runs the Pallas kernel; on CPU backends it executes in interpret mode
+    (the TPU path compiles the same kernel).
+    """
+    interpret = jax.default_backend() != "tpu"
+    return proximity_pallas(U, bk=bk, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the proximity-matrix kernel (Eq. 3, degrees)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def proximity_ref(U: jnp.ndarray) -> jnp.ndarray:
+    """U: (K, n, p) orthonormal signatures -> (K, K) trace-angle degrees."""
+    U = U.astype(jnp.float32)
+    G = jnp.einsum("inp,jnq->ijpq", U, U)
+    diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
+    A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    A = 0.5 * (A + A.T)
+    return A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))

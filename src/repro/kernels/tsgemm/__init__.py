@@ -1,0 +1,4 @@
+from repro.kernels.tsgemm.ops import tsgemm
+from repro.kernels.tsgemm.ref import tsgemm_ref
+
+__all__ = ["tsgemm", "tsgemm_ref"]

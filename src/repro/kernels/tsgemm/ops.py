@@ -1,0 +1,12 @@
+"""Jitted public wrapper for the tall-skinny GEMM kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.tsgemm.tsgemm import tsgemm_pallas
+
+
+def tsgemm(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Blocked tall-skinny GEMM (randomized-SVD sketch hot spot)."""
+    interpret = jax.default_backend() != "tpu"
+    return tsgemm_pallas(A, B, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the tall-skinny GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tsgemm_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    return A.astype(jnp.float32) @ B.astype(jnp.float32)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: blocked tall-skinny GEMM ``C = A @ B``.
+
+The PACFL *client* hot spot: the randomized-SVD sketch ``Y = D @ Omega`` and
+power-iteration products, where ``D`` is (n_features, m_samples) and the
+other operand is skinny (p + oversample columns).
+
+Tiling: grid (m_blocks, k_blocks); each cell multiplies an (bm, bk) A-tile
+by a (bk, p) B-slab in VMEM and accumulates into the (bm, p) output block —
+k iterates fastest so accumulation stays resident.  MXU-aligned tiles
+(multiples of 128 where the problem allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tsgemm_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def tsgemm_pallas(A: jax.Array, B: jax.Array, *, bm: int = 256, bk: int = 512,
+                  interpret: bool = True) -> jax.Array:
+    """A: (m, k) @ B: (k, p) -> (m, p) fp32."""
+    m, k = A.shape
+    k2, p = B.shape
+    assert k == k2, (A.shape, B.shape)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    pad_m = (-m) % bm
+    pad_k = (-k) % bk
+    if pad_m or pad_k:
+        A = jnp.pad(A, ((0, pad_m), (0, pad_k)))
+        B = jnp.pad(B, ((0, pad_k), (0, 0)))
+    mp, kp = A.shape
+    grid = (mp // bm, kp // bk)
+    C = pl.pallas_call(
+        functools.partial(_tsgemm_kernel, nk=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, p), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, p), jnp.float32),
+        interpret=interpret,
+    )(A, B)
+    return C[:m]

@@ -1,0 +1,4 @@
+from repro.kernels.wkv.ops import wkv
+from repro.kernels.wkv.ref import wkv_ref
+
+__all__ = ["wkv", "wkv_ref"]

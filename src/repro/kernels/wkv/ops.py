@@ -1,0 +1,12 @@
+"""Jitted public wrapper for the WKV6 recurrence kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.wkv.wkv import wkv_pallas
+
+
+def wkv(r, k, v, w, u, state0=None):
+    """WKV6 recurrence with VMEM-resident state (interpret mode off-TPU)."""
+    interpret = jax.default_backend() != "tpu"
+    return wkv_pallas(r, k, v, w, u, state0, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV6 recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, state0=None):
+    """RWKV6 WKV recurrence.
+
+    r,k,v,w: (B, S, H, hd); u: (H, hd); state0: (B, H, hd, hd) or None.
+    Returns (out (B,S,H,hd), final_state).
+      out_t = r_t . (u k_t v_t^T + S_t);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    B, S, H, hd = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 0, 2, 3), state

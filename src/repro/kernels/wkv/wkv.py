@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence with VMEM-resident state.
+
+The rwkv6 train_4k roofline (EXPERIMENTS.md §Perf) shows the XLA lowering is
+memory/collective-bound on per-step state round-trips: every one of S x L
+time steps reads and writes the (B, H, hd, hd) state through HBM and the
+sharded einsum inserts a per-step all-reduce.  This kernel keeps the state in
+VMEM for the whole sequence: HBM traffic collapses to streaming r/k/v/w in
+and y out once (about 60x less traffic at 4k sequence length), and head
+parallelism maps onto the grid, so there are no per-step collectives at all.
+
+Tiling: grid (B, H); each cell owns one head's (hd, hd) fp32 state in VMEM
+scratch and loops the sequence with ``fori_loop``; r/k/v/w stream per (1, S,
+1, hd) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref, s_scr,
+                *, seq_len: int):
+    s_scr[...] = s0_ref[0, 0].astype(jnp.float32)           # (hd, hd)
+    u = u_ref[0].astype(jnp.float32)                        # (hd,)
+
+    def body(t, _):
+        rt = r_ref[0, t, 0, :].astype(jnp.float32)          # (hd,)
+        kt = k_ref[0, t, 0, :].astype(jnp.float32)
+        vt = v_ref[0, t, 0, :].astype(jnp.float32)
+        wt = w_ref[0, t, 0, :].astype(jnp.float32)
+        s = s_scr[...]
+        kv = kt[:, None] * vt[None, :]                      # (hd_k, hd_v)
+        out = (rt[:, None] * (s + (u * kt)[:, None] * vt[None, :])).sum(axis=0)
+        o_ref[0, t, 0, :] = out.astype(o_ref.dtype)
+        s_scr[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, body, 0)
+    sT_ref[0, 0] = s_scr[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_pallas(r, k, v, w, u, state0=None, *, interpret: bool = True):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd) -> (out (B,S,H,hd), state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    kernel = functools.partial(_wkv_kernel, seq_len=S)
+    out, stateT = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, S, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, hd), lambda b, h: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)
+    return out, stateT

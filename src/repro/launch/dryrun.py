@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+# TPU compute policy (bf16 matmuls) — this module only lowers, never executes.
+os.environ.setdefault("REPRO_COMPUTE_DTYPE", "bfloat16")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) combination this lowers and
+compiles the appropriate step (train / prefill / serve) against
+ShapeDtypeStruct stand-ins (no allocation), prints ``memory_analysis()`` and
+``cost_analysis()``, runs the trip-count-aware HLO analyzer, and emits a JSON
+roofline record under ``experiments/dryrun/``.
+
+Usage:
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import build_report
+from repro.models import lm
+from repro.optim import adamw
+from repro.sharding import batch_specs, cache_specs, opt_state_specs, param_specs
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.is_enc_dec:
+            batch["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+            )
+    return batch
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> str | None:
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return (
+            "full-attention architecture: long_500k requires sub-quadratic "
+            "attention or O(1) state (DESIGN.md §4)"
+        )
+    return None
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool, *, scheme: str = "fsdp_tp",
+              microbatches: int = 1, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "note": reason}
+
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    # Megatron-style sequence parallelism on the residual stream for full-
+    # sequence modes (bounds the remat residual stack per device).
+    from jax.sharding import PartitionSpec as P
+    dp = ("pod", "data") if multi_pod else ("data",)
+    from repro.models import layers as layers_lib
+    if shape.kind in ("train", "prefill") and shape.seq_len % 512 == 0:
+        lm.set_activation_sharding(NamedSharding(mesh, P(dp, "model", None)))
+    else:
+        lm.set_activation_sharding(None)
+    # head-sharding hints for recurrent blocks (see EXPERIMENTS.md §Perf)
+    layers_lib.set_sharding_hints(
+        rwkv_seq=NamedSharding(mesh, P(None, dp, "model", None)),
+        rwkv_state=NamedSharding(mesh, P(dp, "model", None, None)),
+        ssm_heads=NamedSharding(mesh, P(dp, None, "model", None)),
+        logits=NamedSharding(mesh, P(dp, None, "model"))
+        if shape.kind in ("train", "prefill") else None,
+    )
+
+    aparams = lm.abstract_params(cfg)
+    pspecs = param_specs(aparams, cfg, scheme=scheme)
+    # per-stage shardings (stacked dim stripped) for the bf16 weight-copy
+    # constraint inside the layer scan (see lm._apply_stage)
+    stage_specs = [
+        jax.tree.map(
+            lambda sp: NamedSharding(mesh, P(*tuple(sp)[1:])), st,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        for st in pspecs["stages"]
+    ]
+    from repro.models import layers as _ll
+    _ll._SHARDING_HINTS["stage_specs"] = stage_specs
+    batch = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, batch, multi_pod=multi_pod, global_batch=shape.global_batch)
+
+    def shard(tree, specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    if shape.kind == "train":
+        opt = adamw(3e-4)
+        aopt = jax.eval_shape(opt.init, aparams)
+        ospecs = opt_state_specs(aopt, aparams, pspecs)
+        step = lm.make_train_step(cfg, opt, microbatches=microbatches)
+        in_sh = (shard(aparams, pspecs), shard(aopt, ospecs), shard(batch, bspecs))
+        out_sh = (shard(aparams, pspecs), shard(aopt, ospecs), None)
+        args = (aparams, aopt, batch)
+    elif shape.kind == "prefill":
+        acache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = cache_specs(cfg, acache, multi_pod=multi_pod, global_batch=shape.global_batch)
+        step = lm.make_prefill_step(cfg)
+        in_sh = (shard(aparams, pspecs), shard(batch, bspecs))
+        out_sh = (None, shard(acache, cspecs))
+        args = (aparams, batch)
+    else:  # decode
+        acache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = cache_specs(cfg, acache, multi_pod=multi_pod, global_batch=shape.global_batch)
+        step = lm.make_serve_step(cfg)
+        csh = shard(acache, cspecs)
+        in_sh = (shard(aparams, pspecs), csh,
+                 shard(batch, bspecs)["tokens"], None)
+        out_sh = (None, csh)
+        args = (aparams, acache, batch["tokens"], jax.ShapeDtypeStruct((), jnp.int32))
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    lm.set_activation_sharding(None)
+    layers_lib.set_sharding_hints()
+    report = build_report(
+        arch=arch, shape_name=shape_name, mesh_name=mesh_name, n_chips=n_chips,
+        hlo=hlo, memory_stats=ma, cfg=cfg,
+    )
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+        "scheme": scheme,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "total_bytes_per_device": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes accessed": float(ca.get("bytes accessed", -1.0)),
+        },
+        "roofline": report.to_dict(),
+        "top_ops": hlo["top_ops"][:12],
+        "top_bytes": hlo.get("top_bytes", [])[:12],
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compile ok "
+              f"({t_lower:.1f}s lower, {t_compile:.1f}s compile)")
+        print("  memory_analysis:", rec["memory_analysis"])
+        print("  cost_analysis:  ", rec["xla_cost_analysis"])
+        for name, fl in hlo["top_ops"][:6]:
+            print(f"    topF: {fl:.3e}  {name[:110]}")
+        for name, b in hlo.get("top_bytes", [])[:6]:
+            print(f"    topB: {b:.3e}  {name[:110]}")
+        print(f"  roofline: compute {report.compute_s*1e3:.2f}ms  "
+              f"memory {report.memory_s*1e3:.2f}ms  "
+              f"collective {report.collective_s*1e3:.2f}ms  -> {report.dominant}-bound; "
+              f"useful_ratio {report.useful_ratio:.2f}  fits_hbm={report.fits_hbm}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--scheme", default="fsdp_tp",
+                    choices=("fsdp_tp", "tp_only", "ddp"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    out_dir = Path(args.out) if args.out else OUT_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for a, s, mp in combos:
+        try:
+            rec = lower_one(a, s, mp, scheme=args.scheme)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s,
+                   "mesh": "pod2x16x16" if mp else "pod16x16",
+                   "status": "error", "error": str(e)[-2000:]}
+            failures += 1
+        mesh_name = rec["mesh"]
+        fn = out_dir / f"{a.replace('.', '_')}__{s}__{mesh_name}__{args.scheme}.json"
+        fn.write_text(json.dumps(rec, indent=2))
+    print(f"done: {len(combos)} combos, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders on CPU).
+
+Defined as functions so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~effective per-chip collective bw)
+HBM_BYTES = 16 * 2**30            # 16 GiB HBM per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_device_count(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

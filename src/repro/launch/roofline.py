@@ -1,0 +1,139 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16, v5e)
+    memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+    collective = effective_collective_bytes / link_bw        (~50 GB/s)
+
+HLO terms come from :mod:`repro.launch.hlo_analysis` (trip-count-aware), run
+over the *post-SPMD per-device* module, so dividing by per-chip peaks gives
+per-chip seconds directly.  Effective collective bytes apply ring factors:
+all-reduce 2(G-1)/G, all-gather/reduce-scatter (G-1)/G, all-to-all (G-1)/G,
+collective-permute 1.
+
+``MODEL_FLOPS`` is the analytic useful work (6·N·D train; 2·N_active·D
+decode/prefill, + attention window terms), used for the
+``MODEL_FLOPS / HLO_FLOPs`` efficiency ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_RING = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+    "collective-broadcast": lambda g: 1.0,
+}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes_eff: float
+    model_flops_per_device: float
+    useful_ratio: float
+    bytes_per_device: float
+    fits_hbm: bool
+    collective_counts: dict
+    note: str = ""
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """Analytic useful FLOPs for one step (global, all chips)."""
+    n_active = cfg.active_param_count()
+    hd = cfg.resolved_head_dim
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        # quadratic attention term (fwd+bwd = 3x of 4*S^2*H*hd per layer)
+        if cfg.block_kind == "attn":
+            att = 4.0 * S * S * cfg.n_heads * hd * B * cfg.n_layers
+            flops += 3.0 * att / 2.0  # causal halves the useful pairs
+        return flops
+    if shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        if cfg.block_kind == "attn":
+            flops += 4.0 * S * S * cfg.n_heads * hd * B * cfg.n_layers / 2.0
+        return flops
+    # decode: one token per sequence
+    flops = 2.0 * n_active * B
+    if cfg.block_kind == "attn":
+        flops += 4.0 * S * cfg.n_heads * hd * B * cfg.n_layers
+    return flops
+
+
+def effective_collective_seconds(coll_bytes: dict, coll_counts: dict,
+                                 group_sizes: dict | None = None) -> tuple[float, float]:
+    total_eff = 0.0
+    for kind, nbytes in coll_bytes.items():
+        g = (group_sizes or {}).get(kind, 16)
+        total_eff += nbytes * _RING[kind](max(g, 2))
+    return total_eff, total_eff / ICI_BW
+
+
+def build_report(
+    *,
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    n_chips: int,
+    hlo: dict,
+    memory_stats,
+    cfg: ArchConfig,
+    group_sizes: dict | None = None,
+    note: str = "",
+) -> RooflineReport:
+    shape = INPUT_SHAPES[shape_name]
+    flops_dev = hlo["flops"]
+    # fusion-boundary byte model (TPU-like); hlo["bytes"] is the unfused
+    # upper bound and is recorded alongside in the JSON.
+    bytes_dev = hlo.get("bytes_major", hlo["bytes"])
+    coll_eff, coll_s = effective_collective_seconds(
+        hlo["collective_bytes"], hlo["collective_counts"], group_sizes
+    )
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_chips
+    dev_bytes = (
+        memory_stats.argument_size_in_bytes
+        + memory_stats.output_size_in_bytes
+        + memory_stats.temp_size_in_bytes
+    )
+    return RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        hlo_flops=flops_dev,
+        hlo_bytes=bytes_dev,
+        collective_bytes_eff=coll_eff,
+        model_flops_per_device=mf,
+        useful_ratio=mf / max(flops_dev, 1.0),
+        bytes_per_device=float(dev_bytes),
+        fits_hbm=dev_bytes < 16 * 2**30,
+        collective_counts=hlo["collective_counts"],
+        note=note,
+    )

@@ -1,0 +1,67 @@
+"""LM training driver: ``python -m repro.launch.train --arch <id> [--reduced]``.
+
+On real hardware this runs the sharded train step on the production mesh; on
+this CPU container use ``--reduced`` (the smoke-scale config) to actually
+execute steps, or ``--dry`` to lower/compile only (see dryrun.py for the full
+matrix).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import lm
+from repro.optim import adamw, cosine_schedule
+
+
+def synthetic_batch(cfg, batch, seq, key):
+    out = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab)}
+    if cfg.vision_tokens:
+        out["vision_embeds"] = 0.02 * jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model)
+        )
+    if cfg.is_enc_dec:
+        out["encoder_frames"] = 0.02 * jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model)
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M reduced={args.reduced}")
+
+    opt = adamw(cosine_schedule(args.lr, warmup=10, total=args.steps))
+    opt_state = opt.init(params)
+    step = jax.jit(lm.make_train_step(cfg, opt, microbatches=args.microbatches))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = synthetic_batch(cfg, args.batch, args.seq, jax.random.fold_in(key, i))
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""GQA attention with RoPE, sliding windows, KV caches and chunked
+(flash-style) computation that never materializes the full S x S score
+matrix — required for prefill_32k / long_500k to lower with bounded memory.
+
+``repro.kernels.flash_attention`` is the Pallas/TPU realization of
+:func:`chunked_attention`; this pure-JAX version is what the dry-run lowers
+(XLA GSPMD partitions it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init, mm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (S,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]      # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (pure JAX reference / dry-run path)
+# ---------------------------------------------------------------------------
+
+def _mask_for(p_c: jax.Array, q_pos: jax.Array, causal: bool, window: Optional[int]):
+    """(Sq, c) validity mask from absolute positions (-1 = invalid slot)."""
+    valid = p_c[None, :] >= 0
+    if causal:
+        valid = valid & (p_c[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (p_c[None, :] > q_pos[:, None] - window)
+    return valid
+
+
+def _flash_forward(qg, ks, vs, ps, q_pos, causal, window):
+    """Online-softmax scan over KV chunks -> (out_unnormalized/l, m, l)."""
+    B, Sq, Hkv, G, hd = qg.shape
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, p_c = xs                                   # (B,c,Hkv,hd),(c,)
+        s = jnp.einsum(
+            "bqhgd,bchd->bqhgc", qg, k_c.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )                                                     # (B,Sq,Hkv,G,c)
+        valid = _mask_for(p_c, q_pos, causal, window)
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bqhgc,bchd->bqhgd", p.astype(qg.dtype), v_c.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), dtype=jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, hd), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _flash(qg, ks, vs, ps, q_pos, causal, window):
+    out, _, _ = _flash_forward(qg, ks, vs, ps, q_pos, causal, window)
+    return out
+
+
+def _flash_fwd(qg, ks, vs, ps, q_pos, causal, window):
+    out, m, l = _flash_forward(qg, ks, vs, ps, q_pos, causal, window)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, (qg, ks, vs, ps, q_pos, out, lse)
+
+
+def _flash_bwd(causal, window, res, do):
+    """Flash-attention backward: recompute scores per KV chunk — O(S) memory
+    (never stores the (Sq x Skv) probability tensor)."""
+    qg, ks, vs, ps, q_pos, out, lse = res
+    do = do.astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                        # (B,Sq,Hkv,G)
+
+    def body(dq_acc, xs):
+        k_c, v_c, p_c = xs
+        s = jnp.einsum(
+            "bqhgd,bchd->bqhgc", qg, k_c.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        valid = _mask_for(p_c, q_pos, causal, window)[None, :, None, None, :]
+        p = jnp.where(valid, jnp.exp(s - lse[..., None]), 0.0)
+        dv_c = jnp.einsum(
+            "bqhgc,bqhgd->bchd", p.astype(qg.dtype), do.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        dp = jnp.einsum(
+            "bqhgd,bchd->bqhgc", do.astype(qg.dtype), v_c.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum(
+            "bqhgc,bchd->bqhgd", ds.astype(qg.dtype), k_c.astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        dk_c = jnp.einsum(
+            "bqhgc,bqhgd->bchd", ds.astype(qg.dtype), qg,
+            preferred_element_type=jnp.float32,
+        )
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (ks, vs, ps))
+    return (dq.astype(qg.dtype), dk.astype(ks.dtype), dv.astype(vs.dtype),
+            None, None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,                 # (B, Sq, Hq, hd)
+    k: jax.Array,                 # (B, Skv, Hkv, hd)
+    v: jax.Array,                 # (B, Skv, Hkv, hd)
+    q_pos: jax.Array,             # (Sq,) int32 absolute positions
+    kv_pos: jax.Array,            # (Skv,) int32; -1 marks invalid slots
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention over KV chunks. Returns (B, Sq, Hq, hd).
+
+    Forward is an online-softmax scan; backward is a custom VJP that
+    recomputes per chunk (O(S) memory).  ``repro.kernels.flash_attention`` is
+    the Pallas/TPU tiling of the same math.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    if Sq == 1:
+        # Decode: the (B, 1, H, Skv) score tensor is small — dense attention
+        # in one einsum partitions cleanly over a sequence-sharded cache
+        # (GSPMD reduces partial softmax terms), whereas a chunk scan would
+        # slice across shards and insert per-chunk collectives.
+        qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, hd)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, k.astype(jnp.float32))
+        valid = _mask_for(kv_pos, q_pos, causal, window)
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqhgc,bchd->bqhgd", p, v.astype(jnp.float32))
+        return out.reshape(B, Sq, Hq, hd).astype(COMPUTE_DTYPE)
+
+    # Pad KV to a multiple of `chunk`; padded slots get kv_pos = -1 (masked).
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    nk = k.shape[1] // chunk
+
+    qg = (q.astype(COMPUTE_DTYPE) * scale).reshape(B, Sq, Hkv, G, hd)
+    ks = k.astype(COMPUTE_DTYPE).reshape(B, nk, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.astype(COMPUTE_DTYPE).reshape(B, nk, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(nk, chunk)
+
+    out = _flash(qg, ks, vs, ps, q_pos, causal, window)
+    return out.reshape(B, Sq, Hq, hd).astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Attention module (projections + cache handling)
+# ---------------------------------------------------------------------------
+
+def init_attn(key: jax.Array, d: int, n_heads: int, n_kv: int, hd: int) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": dense_init(kq, d, n_heads * hd),
+        "k": dense_init(kk, d, n_kv * hd),
+        "v": dense_init(kv, d, n_kv * hd),
+        "o": dense_init(ko, n_heads * hd, d, scale=(n_heads * hd) ** -0.5),
+    }
+
+
+class AttnCache(NamedTuple):
+    """KV cache for one attention layer (possibly a ring buffer)."""
+
+    k: jax.Array        # (B, S_cache, Hkv, hd)
+    v: jax.Array        # (B, S_cache, Hkv, hd)
+
+
+def init_attn_cache(batch: int, s_cache: int, n_kv: int, hd: int,
+                    dtype=COMPUTE_DTYPE) -> AttnCache:
+    shape = (batch, s_cache, n_kv, hd)
+    return AttnCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_positions(s_cache: int, pos: jax.Array, *, ring: bool) -> jax.Array:
+    """Absolute token position stored in each cache slot at decode step `pos`
+    (the slot for token `pos` itself has just been written).  Invalid slots
+    get -1.  ``ring=True`` for sliding-window ring buffers."""
+    idx = jnp.arange(s_cache, dtype=jnp.int32)
+    if not ring:
+        return jnp.where(idx <= pos, idx, -1)
+    # slot j holds the latest token t <= pos with t % s_cache == j
+    t = pos - ((pos - idx) % s_cache)
+    return jnp.where(t >= 0, t, -1)
+
+
+def attend(
+    params: dict,
+    x: jax.Array,                 # (B, Sq, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    theta: float,
+    q_pos: jax.Array,             # (Sq,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    cache: Optional[AttnCache] = None,
+    decode_pos: Optional[jax.Array] = None,   # scalar int32 when decoding
+    kv_x: Optional[jax.Array] = None,         # cross-attention source
+    cached_kv_valid: Optional[jax.Array] = None,  # (Skv,) positions for cross
+) -> tuple[jax.Array, Optional[AttnCache]]:
+    """One attention call covering train/prefill/decode/cross modes."""
+    B, Sq, D = x.shape
+    src = x if kv_x is None else kv_x
+    q = mm(x, params["q"]).reshape(B, Sq, n_heads, hd)
+    q = rope(q, q_pos, theta) if kv_x is None else q
+
+    if kv_x is not None and cache is not None:
+        # Cross attention against a precomputed (already-projected) cache.
+        k, v = cache.k, cache.v
+        kv_pos = cached_kv_valid
+        out = chunked_attention(q, k, v, q_pos, kv_pos, causal=False, chunk=chunk)
+        return mm(out.reshape(B, Sq, n_heads * hd), params["o"]), cache
+
+    k = mm(src, params["k"]).reshape(B, src.shape[1], n_kv, hd)
+    v = mm(src, params["v"]).reshape(B, src.shape[1], n_kv, hd)
+
+    if decode_pos is None:
+        # Train / prefill: keys at the same positions as queries (or encoder).
+        kv_pos = q_pos if kv_x is None else jnp.arange(src.shape[1], dtype=jnp.int32)
+        k = rope(k, kv_pos, theta) if kv_x is None else k
+        out = chunked_attention(
+            q, k, v, q_pos, kv_pos, causal=causal and kv_x is None,
+            window=window, chunk=chunk,
+        )
+        new_cache = None
+        if cache is not None:
+            s_cache = cache.k.shape[1]
+            if s_cache >= k.shape[1]:
+                new_cache = AttnCache(
+                    jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+                    jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+                )
+            else:  # ring buffer smaller than the prefill: keep the tail
+                tail_k = k[:, -s_cache:]
+                tail_v = v[:, -s_cache:]
+                # Place tail entries at slot = pos % s_cache to stay consistent
+                # with ring addressing.
+                start = k.shape[1] - s_cache
+                roll = start % s_cache
+                new_cache = AttnCache(
+                    jnp.roll(tail_k, roll, axis=1).astype(cache.k.dtype),
+                    jnp.roll(tail_v, roll, axis=1).astype(cache.v.dtype),
+                )
+        return mm(out.reshape(B, Sq, n_heads * hd), params["o"]), new_cache
+
+    # ----- decode: single new token against the cache -----------------------
+    assert cache is not None
+    s_cache = cache.k.shape[1]
+    ring = window is not None and s_cache < 10**9 and s_cache == min(s_cache, window)
+    k = rope(k, q_pos, theta)
+    slot = jnp.mod(decode_pos, s_cache) if ring else decode_pos
+    new_cache = AttnCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0)),
+    )
+    kv_pos = cache_positions(s_cache, decode_pos, ring=ring)
+    out = chunked_attention(
+        q, new_cache.k, new_cache.v, q_pos, kv_pos,
+        causal=True, window=window, chunk=chunk,
+    )
+    return mm(out.reshape(B, Sq, n_heads * hd), params["o"]), new_cache

@@ -1,0 +1,106 @@
+"""Shared pure-JAX layers and initializers for the model zoo.
+
+Conventions
+-----------
+* Params are nested dicts of ``jnp.float32`` arrays (master weights).
+* Matmuls run in bf16 with fp32 accumulation via :func:`mm` (TPU MXU policy).
+* Everything is functional and scan/vmap friendly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# TPU target policy is bf16 matmuls with fp32 accumulation.  The XLA *CPU*
+# thunk runtime cannot execute bf16 dots, so anything that actually runs in
+# this container (tests, FL experiments) uses fp32; the dry-run — which only
+# lowers and compiles — sets REPRO_COMPUTE_DTYPE=bfloat16 before importing to
+# lower the TPU-policy program.
+COMPUTE_DTYPE = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+    os.environ.get("REPRO_COMPUTE_DTYPE", "float32")
+]
+
+
+# ---------------------------------------------------------------------------
+# Sharding hints: the launcher registers NamedShardings for named tensor roles
+# (set inside a mesh context); models apply them via `constrain`.  None = let
+# GSPMD decide (single-host tests never set hints).
+# ---------------------------------------------------------------------------
+_SHARDING_HINTS: dict = {}
+
+
+def set_sharding_hints(**hints) -> None:
+    _SHARDING_HINTS.clear()
+    _SHARDING_HINTS.update({k: v for k, v in hints.items() if v is not None})
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    s = _SHARDING_HINTS.get(role)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """bf16 matmul with fp32 accumulation (last dim of x contracts)."""
+    return jax.lax.dot_general(
+        x.astype(COMPUTE_DTYPE),
+        w.astype(COMPUTE_DTYPE),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(COMPUTE_DTYPE)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, scale: Optional[float] = None) -> jax.Array:
+    if scale is None:
+        scale = d_in ** -0.5
+    return scale * jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> jax.Array:
+    return 0.02 * jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(COMPUTE_DTYPE)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return y.astype(COMPUTE_DTYPE)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama-style); used by every attention block and as shared expert.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, d, f),
+        "w_gate": dense_init(k2, d, f),
+        "w_out": dense_init(k3, f, d),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = act_fn(act)(mm(x, params["w_gate"])) * mm(x, params["w_in"])
+    return mm(h, params["w_out"])
+
+
+def stack_layer_params(keys: jax.Array, init_fn) -> dict:
+    """vmap an init function over layer keys -> stacked (L, ...) params."""
+    return jax.vmap(init_fn)(keys)

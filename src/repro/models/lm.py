@@ -1,0 +1,551 @@
+"""Unified sequence-model zoo: one config-driven implementation covering all
+ten assigned architectures (dense / GQA / sliding-window / MoE / Mamba2-hybrid
+/ RWKV6 / enc-dec / VLM-stub).
+
+Structure: a model is a list of *stages*; each stage is a ``lax.scan`` over
+``repeats`` identical super-blocks, each super-block a short static list of
+sub-layers (e.g. gemma3: 5 local + 1 global per super-block; zamba2: 6 mamba
+layers + one application of the *shared* attention block).  Scanning keeps the
+HLO compact enough to compile for a 512-device mesh.
+
+Modes:
+* ``train``    — full-sequence causal forward (+remat), loss over all tokens.
+* ``prefill``  — full-sequence forward that also fills the KV/state caches.
+* ``decode``   — one new token against caches at scalar position ``pos``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm
+from repro.models.attention import (
+    AttnCache,
+    attend,
+    cache_positions,
+    chunked_attention,
+    init_attn,
+    init_attn_cache,
+)
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    dense_init,
+    embed_init,
+    init_mlp,
+    mlp_apply,
+    mm,
+    rmsnorm,
+)
+from repro.models.moe import init_moe, moe_apply
+
+AUX_LOSS_COEF = 0.01
+
+# Optional activation-sharding constraint (Megatron-style sequence
+# parallelism): set by the launcher inside a mesh context to shard the
+# (B, S, D) residual stream over (dp, model) between blocks, bounding the
+# remat residual stack per device.  None = let GSPMD decide (single-host runs).
+_ACTIVATION_SPEC: Optional[Any] = None
+
+
+def set_activation_sharding(spec) -> None:
+    global _ACTIVATION_SPEC
+    _ACTIVATION_SPEC = spec
+
+
+def _constrain(x: jax.Array) -> jax.Array:
+    if _ACTIVATION_SPEC is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, _ACTIVATION_SPEC)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Stage specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    kind: str                  # "attn" | "mamba" | "rwkv"
+    repeats: int               # scan length
+    sub: tuple[str, ...]       # per-sublayer kinds: "global"|"local"|"m"|"rwkv"
+    shared_attn: bool = False  # zamba2: shared attention after each super-block
+    cross_attn: bool = False   # whisper decoder
+
+
+def stages_for(cfg: ArchConfig) -> list[StageSpec]:
+    if cfg.block_kind == "rwkv6":
+        return [StageSpec("rwkv", cfg.n_layers, ("rwkv",))]
+    if cfg.block_kind == "mamba2":
+        if cfg.attn_every:
+            full = cfg.n_layers // cfg.attn_every
+            rem = cfg.n_layers - full * cfg.attn_every
+            stages = [StageSpec("mamba", full, ("m",) * cfg.attn_every, shared_attn=True)]
+            if rem:
+                stages.append(StageSpec("mamba", rem, ("m",)))
+            return stages
+        return [StageSpec("mamba", cfg.n_layers, ("m",))]
+    # attention families
+    cross = cfg.is_enc_dec
+    if cfg.swa_pattern is not None:
+        n_local, n_global = cfg.swa_pattern
+        blk = n_local + n_global
+        full = cfg.n_layers // blk
+        rem = cfg.n_layers - full * blk
+        stages = [StageSpec("attn", full, ("local",) * n_local + ("global",) * n_global)]
+        if rem:
+            stages.append(StageSpec("attn", rem, ("local",)))
+        return stages
+    return [StageSpec("attn", cfg.n_layers, ("global",), cross_attn=cross)]
+
+
+def encoder_stages(cfg: ArchConfig) -> list[StageSpec]:
+    return [StageSpec("attn", cfg.encoder_layers, ("global",))]
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key: jax.Array, cfg: ArchConfig, cross: bool) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "attn": init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln2": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    if cross:
+        p["lnx"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = init_attn(ks[2], d, cfg.n_heads, cfg.n_kv_heads, hd)
+    return p
+
+
+def _init_superblock(key: jax.Array, cfg: ArchConfig, stage: StageSpec) -> dict:
+    subs = {}
+    for i, kind in enumerate(stage.sub):
+        kk = jax.random.fold_in(key, i)
+        if stage.kind == "attn":
+            subs[f"sub{i}"] = _init_attn_block(kk, cfg, stage.cross_attn)
+        elif stage.kind == "mamba":
+            subs[f"sub{i}"] = ssm.init_mamba(kk, cfg)
+        elif stage.kind == "rwkv":
+            subs[f"sub{i}"] = ssm.init_rwkv(kk, cfg)
+    return subs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {"embed": embed_init(ks[0], Vp, D)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], D, Vp, scale=D**-0.5)
+    params["final_norm"] = jnp.zeros((D,), jnp.float32)
+
+    stages = stages_for(cfg)
+    params["stages"] = []
+    for si, stage in enumerate(stages):
+        keys = jax.random.split(jax.random.fold_in(ks[2], si), stage.repeats)
+        params["stages"].append(
+            jax.vmap(lambda k, st=stage: _init_superblock(k, cfg, st))(keys)
+        )
+    if any(s.shared_attn for s in stages):
+        # one set of shared-attention-block params (zamba2)
+        shared_cfg = dataclasses.replace(cfg, n_experts=0)
+        params["shared_attn"] = _init_attn_block(ks[3], shared_cfg, cross=False)
+    if cfg.is_enc_dec:
+        enc = {"final_norm": jnp.zeros((D,), jnp.float32), "stages": []}
+        for si, stage in enumerate(encoder_stages(cfg)):
+            keys = jax.random.split(jax.random.fold_in(ks[4], si), stage.repeats)
+            enc["stages"].append(
+                jax.vmap(lambda k, st=stage: _init_superblock(k, cfg, st))(keys)
+            )
+        params["encoder"] = enc
+    return params
+
+
+def abstract_params(cfg: ArchConfig, key: Optional[jax.Array] = None):
+    """ShapeDtypeStruct pytree of the params (no allocation — for dry-runs)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    if kind == "local":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> list[dict]:
+    """Cache pytree: one dict per stage, stacked over `repeats`."""
+    hd = cfg.resolved_head_dim
+    stages = stages_for(cfg)
+    caches = []
+    for stage in stages:
+        entry: dict[str, Any] = {}
+        for i, kind in enumerate(stage.sub):
+            if stage.kind == "attn":
+                sc = _cache_len(cfg, kind, seq_len)
+                c = init_attn_cache(batch, sc, cfg.n_kv_heads, hd)
+                entry[f"sub{i}"] = {"kv": c}
+                if stage.cross_attn:
+                    pad = (-cfg.encoder_seq) % 128
+                    xc = init_attn_cache(batch, cfg.encoder_seq + pad, cfg.n_kv_heads, hd)
+                    entry[f"sub{i}"]["cross"] = xc
+            elif stage.kind == "mamba":
+                entry[f"sub{i}"] = ssm.init_mamba_state(cfg, batch)
+            elif stage.kind == "rwkv":
+                entry[f"sub{i}"] = ssm.init_rwkv_state(cfg, batch)
+        if stage.shared_attn:
+            entry["shared"] = {"kv": init_attn_cache(batch, seq_len, cfg.n_kv_heads, hd)}
+        # stack over repeats
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (stage.repeats,) + a.shape), entry))
+    return caches
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_block(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    kind: str,
+    q_pos: jax.Array,
+    mode: str,
+    cache: Optional[dict],
+    decode_pos: Optional[jax.Array],
+    enc_out: Optional[jax.Array],
+    causal: bool = True,
+) -> tuple[jax.Array, Optional[dict], jax.Array]:
+    hd = cfg.resolved_head_dim
+    window = cfg.window if kind == "local" else None
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    kv_cache = cache["kv"] if cache is not None else None
+    attn_out, new_kv = attend(
+        p["attn"], h,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=hd, theta=cfg.rope_theta,
+        q_pos=q_pos, causal=causal, window=window, chunk=cfg.attn_chunk,
+        cache=kv_cache, decode_pos=decode_pos if mode == "decode" else None,
+    )
+    x = x + attn_out
+    new_cache: Optional[dict] = None
+    if cache is not None:
+        new_cache = {"kv": new_kv if new_kv is not None else kv_cache}
+
+    if "xattn" in p:
+        hx = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        if mode == "decode":
+            # cross K/V already cached (projected at prefill)
+            xc = cache["cross"]
+            pad_pos = jnp.where(
+                jnp.arange(xc.k.shape[1]) < cfg.encoder_seq, jnp.arange(xc.k.shape[1]), -1
+            ).astype(jnp.int32)
+            out, _ = attend(
+                p["xattn"], hx,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=hd, theta=cfg.rope_theta,
+                q_pos=q_pos, chunk=cfg.attn_chunk,
+                cache=xc, kv_x=hx, cached_kv_valid=pad_pos,
+            )
+            new_cache["cross"] = xc
+        else:
+            B = hx.shape[0]
+            k = mm(enc_out, p["xattn"]["k"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, hd)
+            v = mm(enc_out, p["xattn"]["v"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, hd)
+            q = mm(hx, p["xattn"]["q"]).reshape(B, hx.shape[1], cfg.n_heads, hd)
+            kv_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+            o = chunked_attention(q, k, v, q_pos, kv_pos, causal=False, chunk=cfg.attn_chunk)
+            out = mm(o.reshape(B, hx.shape[1], cfg.n_heads * hd), p["xattn"]["o"])
+            if cache is not None:
+                xc = cache["cross"]
+                pad = xc.k.shape[1] - k.shape[1]
+                new_cache["cross"] = AttnCache(
+                    jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(xc.k.dtype),
+                    jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(xc.v.dtype),
+                )
+        x = x + out
+    elif cache is not None and "cross" in cache:
+        new_cache["cross"] = cache["cross"]
+
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], h2, cfg)
+    else:
+        y, aux = mlp_apply(p["mlp"], h2, cfg.act), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def _apply_mamba_block(p, cfg, x, *, mode, state):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    if mode == "decode":
+        out, new_state = ssm.mamba_decode(p, cfg, h, state)
+    elif state is not None:  # prefill: outputs + final recurrent state
+        out, new_state = ssm.mamba_ssd(p, cfg, h, return_state=True)
+    else:
+        out, new_state = ssm.mamba_ssd(p, cfg, h), None
+    return x + out, new_state
+
+
+def _apply_rwkv_block(p, cfg, x, *, mode, state):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    tm_out, state = ssm.rwkv_time_mix(p, cfg, h, state)
+    x = x + tm_out
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    cm_out, state = ssm.rwkv_channel_mix(p, cfg, h2, state)
+    return x + cm_out, state
+
+
+# ---------------------------------------------------------------------------
+# Stage application (scan over super-blocks)
+# ---------------------------------------------------------------------------
+
+
+def _apply_stage(
+    stage_params,
+    stage: StageSpec,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    mode: str,
+    cache,
+    q_pos: jax.Array,
+    decode_pos,
+    enc_out,
+    shared_attn_params,
+    causal: bool = True,
+    stage_index: int = 0,
+):
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        xx, aux = carry
+        if has_cache:
+            p_rep, c_rep = xs
+        else:
+            p_rep, c_rep = xs, None
+        # Cast weights to the compute dtype BEFORE first use, and (when the
+        # launcher registered per-stage specs) pin the bf16 copies to the
+        # params' own sharding — this forces GSPMD to all-gather the bf16
+        # tensors instead of the fp32 masters (halves FSDP weight-gather
+        # traffic and gathered-weight transients; EXPERIMENTS.md §Perf).
+        from repro.models.layers import _SHARDING_HINTS
+
+        p_rep = jax.tree.map(
+            lambda a: a.astype(COMPUTE_DTYPE)
+            if a.dtype == jnp.float32 and a.ndim >= 2 else a,
+            p_rep,
+        )
+        stage_specs = _SHARDING_HINTS.get("stage_specs")
+        if stage_specs is not None and stage_index >= 0:
+            p_rep = jax.tree.map(
+                lambda a, s: jax.lax.with_sharding_constraint(a, s)
+                if a.ndim >= 2 else a,
+                p_rep, stage_specs[stage_index],
+            )
+        new_c: dict[str, Any] = {}
+        for i, kind in enumerate(stage.sub):
+            p = p_rep[f"sub{i}"]
+            c = c_rep[f"sub{i}"] if has_cache else None
+            if stage.kind == "attn":
+                xx, nc, a = _apply_attn_block(
+                    p, cfg, xx, kind=kind, q_pos=q_pos, mode=mode, cache=c,
+                    decode_pos=decode_pos, enc_out=enc_out, causal=causal,
+                )
+                aux = aux + a
+            elif stage.kind == "mamba":
+                xx, nc = _apply_mamba_block(p, cfg, xx, mode=mode, state=c)
+            else:
+                xx, nc = _apply_rwkv_block(p, cfg, xx, mode=mode, state=c)
+            if has_cache:
+                new_c[f"sub{i}"] = nc
+        if stage.shared_attn:
+            c = c_rep["shared"] if has_cache else None
+            xx, nc, a = _apply_attn_block(
+                shared_attn_params, cfg, xx, kind="global", q_pos=q_pos, mode=mode,
+                cache=c, decode_pos=decode_pos, enc_out=None, causal=causal,
+            )
+            aux = aux + a
+            if has_cache:
+                new_c["shared"] = nc
+        xx = _constrain(xx)   # seq-parallel residual stream (bounds remat stack)
+        return (xx, aux), (new_c if has_cache else None)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+    xs = (stage_params, cache) if has_cache else stage_params
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,                       # (B, S) int32
+    *,
+    mode: str = "train",                     # train | prefill | decode
+    cache: Optional[list] = None,
+    decode_pos: Optional[jax.Array] = None,  # scalar int32
+    vision_embeds: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Optional[list], jax.Array]:
+    """Returns (logits, new_cache, aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    if vision_embeds is not None and mode != "decode":
+        nv = vision_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(x.dtype), (0, 0, 0))
+        del nv
+    if mode == "decode":
+        q_pos = decode_pos[None].astype(jnp.int32)
+    else:
+        q_pos = jnp.arange(S, dtype=jnp.int32)
+
+    enc_out = None
+    if cfg.is_enc_dec and mode != "decode":
+        assert encoder_frames is not None
+        e = encoder_frames.astype(COMPUTE_DTYPE)
+        e_pos = jnp.arange(e.shape[1], dtype=jnp.int32)
+        for si, stage in enumerate(encoder_stages(cfg)):
+            e, _, _ = _apply_stage(
+                params["encoder"]["stages"][si], stage, cfg, e,
+                mode="train", cache=None, q_pos=e_pos, decode_pos=None,
+                enc_out=None, shared_attn_params=None, causal=False,
+                stage_index=-1,
+            )
+        enc_out = rmsnorm(e, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    stages = stages_for(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[list] = [] if cache is not None else None
+    for si, stage in enumerate(stages):
+        x, aux, nc = _apply_stage(
+            params["stages"][si], stage, cfg, x,
+            mode=mode, cache=cache[si] if cache is not None else None,
+            q_pos=q_pos, decode_pos=decode_pos, enc_out=enc_out,
+            shared_attn_params=params.get("shared_attn"),
+            stage_index=si,
+        )
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches.append(nc)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    from repro.models.layers import constrain
+    # Vocab-parallel logits: force the (B, S, V) output to shard V over
+    # `model` so GSPMD computes per-vocab-shard partials locally instead of
+    # all-reducing full logits (EXPERIMENTS.md §Perf iteration).
+    logits = constrain(mm(x, head), "logits")
+    return logits, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux)."""
+    tokens = batch["tokens"]
+    logits, _, aux = forward(
+        params, cfg, tokens,
+        mode="train",
+        vision_embeds=batch.get("vision_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+    )
+    logits = logits[:, :-1].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + AUX_LOSS_COEF * aux
+
+
+def make_train_step(cfg: ArchConfig, optimizer, *, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    split along the batch dim and scanned, bounding activation memory at the
+    cost of re-running the forward per microbatch (a §Perf lever for combos
+    that exceed HBM at full batch).
+    """
+    from repro.optim import apply_updates
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(lambda p: lm_loss(p, cfg, batch))(params)
+        else:
+            def micro(carry, mb):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(lambda p: lm_loss(p, cfg, mb))(params)
+                grads_acc = jax.tree.map(lambda a, b: a + b, grads_acc, g)
+                return (loss_acc + l, grads_acc), None
+
+            mbs = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache = init_cache(cfg, B, max_len or S)
+        logits, cache, _ = forward(
+            params, cfg, tokens, mode="prefill", cache=cache,
+            vision_embeds=batch.get("vision_embeds"),
+            encoder_frames=batch.get("encoder_frames"),
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """decode: one token (B,1) against a cache at scalar position `pos`."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache, _ = forward(
+            params, cfg, tokens, mode="decode", cache=cache, decode_pos=pos
+        )
+        return logits[:, -1], cache
+
+    return serve_step

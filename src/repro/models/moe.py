@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: top-k router, capacity-bounded einsum dispatch.
+
+TPU-idiomatic GShard/Switch-style dense dispatch, *chunked over the sequence*
+so the (B, T, E, C) one-hot tensors stay small enough for VMEM/HBM at 32k
+sequence lengths.  Shared experts run as dense gated MLPs on every token
+(Qwen-MoE: 4 shared; Llama-4: 1 shared).
+
+Sharding: expert weights are (E, D, F).  For E divisible by the model axis
+(llama4: 16) we shard E (pure expert parallelism -> all-to-all dispatch);
+otherwise (qwen2: 60) we shard F (tensor parallelism inside each expert).
+The choice lives in ``repro.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE, act_fn, dense_init, init_mlp, mlp_apply, mm
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    kr, ki, kg, ko, ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(kr, d, e),
+        "w_in": jax.vmap(lambda k: dense_init(k, d, f))(jax.random.split(ki, e)),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, f))(jax.random.split(kg, e)),
+        "w_out": jax.vmap(lambda k: dense_init(k, f, d, scale=f**-0.5))(
+            jax.random.split(ko, e)
+        ),
+    }
+    if cfg.n_shared_experts:
+        # Shared experts fused into one wide gated MLP (mathematically the sum
+        # of n_shared parallel MLPs of width f).
+        params["shared"] = init_mlp(ks, d, cfg.n_shared_experts * f)
+    return params
+
+
+def _capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN.  x: (B, S, D) -> (out, aux_loss)."""
+    B, S0, D = x.shape
+    cs = min(cfg.moe_chunk, S0)
+    pad = (-S0) % cs
+    S = S0 + pad
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = S // cs
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(cs, cfg)
+
+    valid = (jnp.arange(S) < S0).astype(jnp.float32)      # padded tokens get no capacity
+    vc = jnp.broadcast_to(valid, (B, S)).reshape(B, nc, cs).transpose(1, 0, 2)
+    xc = x.reshape(B, nc, cs, D).transpose(1, 0, 2, 3)   # (nc, B, cs, D)
+
+    def chunk_fn(carry, xs_c):                            # x_c: (B, cs, D)
+        x_c, v_c = xs_c
+        logits = mm(x_c, params["router"]).astype(jnp.float32)       # (B,cs,E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(gates, K)                        # (B,cs,K)
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+        # Position of each (token, choice) in its expert queue.
+        oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)              # (B,cs,K,E)
+        ohf = oh.reshape(B, cs * K, E)
+        pos = jnp.cumsum(ohf, axis=1) - ohf                           # (B,cs*K,E)
+        pos_in_e = jnp.sum(pos * ohf, axis=-1).reshape(B, cs, K)      # (B,cs,K)
+        keep = (pos_in_e < C).astype(jnp.float32) * v_c[..., None]
+
+        slot_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
+        # (B, cs, K, E, C) -> sum over K for token-level tensors
+        dis = jnp.einsum("bske,bskc->bsec", oh * keep[..., None], slot_oh)
+        com = jnp.einsum(
+            "bske,bskc->bsec", oh * (keep * top_w)[..., None], slot_oh
+        )
+
+        xd = jnp.einsum(
+            "bsec,bsd->becd", dis.astype(COMPUTE_DTYPE), x_c.astype(COMPUTE_DTYPE),
+            preferred_element_type=jnp.float32,
+        ).astype(COMPUTE_DTYPE)                                        # (B,E,C,D)
+        h = jnp.einsum("becd,edf->becf", xd, params["w_in"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+        g = jnp.einsum("becd,edf->becf", xd, params["w_gate"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+        h = act_fn(cfg.act)(g) * h
+        y = jnp.einsum("becf,efd->becd", h, params["w_out"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+        out = jnp.einsum("bsec,becd->bsd", com.astype(COMPUTE_DTYPE), y,
+                         preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+
+        # Switch-style load-balancing aux loss for this chunk.
+        me = jnp.mean(gates, axis=(0, 1))                              # (E,)
+        ce = jnp.mean(oh[:, :, 0, :], axis=(0, 1))                     # top-1 assignment
+        aux = E * jnp.sum(me * ce)
+        return carry + aux, out
+
+    # Remat the chunk body: the (B, cs, E, C) dispatch tensors are recomputed
+    # in the backward pass instead of being stored for every chunk.
+    aux, outs = jax.lax.scan(jax.checkpoint(chunk_fn), jnp.zeros((), jnp.float32), (xc, vc))
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, D)[:, :S0]
+    x = x[:, :S0]
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x, cfg.act)
+    return out, aux / nc

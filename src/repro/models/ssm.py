@@ -1,0 +1,388 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RWKV6.
+
+Mamba2 trains with the chunked SSD form (intra-chunk attention-like einsums +
+inter-chunk state scan) — O(S·Q) memory instead of O(S·state) — and decodes
+with the O(1) recurrence.  RWKV6 ("Finch") keeps the paper's data-dependent
+decay; training uses a time scan (compact HLO), decode is a single recurrence
+step.  Tests verify chunked SSD == naive recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE, dense_init, mm
+
+# ===========================================================================
+# Mamba2
+# ===========================================================================
+
+
+class MambaState(NamedTuple):
+    h: jax.Array            # (B, H, hd, N) fp32 SSM state
+    conv: jax.Array         # (B, W-1, conv_ch) conv tail state
+
+
+def mamba_dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = d_in // hd
+    N = cfg.ssm_state
+    return d_in, hd, H, N
+
+
+def init_mamba(key: jax.Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, hd, H, N = mamba_dims(cfg)
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_width, conv_ch), jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(0.01 * jnp.ones((H,), jnp.float32))),
+        "out_norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. xbc: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    out = xbc * w[-1][None, None, :]
+    for i in range(1, W):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[-1 - i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(params: dict, cfg: ArchConfig, u: jax.Array):
+    d_in, hd, H, N = mamba_dims(cfg)
+    proj = mm(u, params["in_proj"])                       # (B,S,2d_in+2N+H)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = proj[..., 2 * d_in + 2 * N :].astype(jnp.float32)
+    return z, xbc, dt_raw
+
+
+def mamba_ssd(params: dict, cfg: ArchConfig, u: jax.Array,
+              return_state: bool = False):
+    """Training/prefill forward. u: (B, S, D) (pre-normed) -> (B, S, D)
+    or (out, final MambaState) when ``return_state``."""
+    B, S0, D = u.shape
+    d_in, hd, H, N = mamba_dims(cfg)
+    Q = min(cfg.ssd_chunk, S0)
+    pad = (-S0) % Q
+    S = S0 + pad
+
+    from repro.models.layers import constrain
+
+    z, xbc_raw, dt_raw = _split_proj(params, cfg, u)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    if pad:
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+    nc = S // Q
+    # NOTE: forcing head sharding here was tried and REFUTED — it adds
+    # resharding collectives (+5s) without reducing the dominant byte terms
+    # (EXPERIMENTS.md §Perf, zamba2 iteration 1).
+    x = xbc[..., :d_in].reshape(B, S, H, hd)
+    Bm = xbc[..., d_in : d_in + N].astype(jnp.float32)    # (B,S,N)
+    Cm = xbc[..., d_in + N :].astype(jnp.float32)         # (B,S,N)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])      # (B,S,H)
+    if pad:
+        # Padded positions must neither inject input nor decay the state:
+        # dt -> 0 gives x_dt = 0 and log_a = 0 (a = 1).
+        valid = (jnp.arange(S) < S0)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    log_a = -jnp.exp(params["A_log"])[None, None] * dt    # (B,S,H) <= 0
+
+    # chunk views
+    xq = x.reshape(B, nc, Q, H, hd)
+    Bq = Bm.reshape(B, nc, Q, N)
+    Cq = Cm.reshape(B, nc, Q, N)
+    dtq = dt.reshape(B, nc, Q, H)
+    la = log_a.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,Q,H)
+
+    x_dt = (xq.astype(jnp.float32) * dtq[..., None])      # (B,nc,Q,H,hd)
+
+    # ---- intra-chunk (attention-like, causal) ----
+    scores = jnp.einsum("bcjn,bcin->bcji", Cq, Bq)        # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,j,i,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = scores[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum(
+        "bcjih,bcihp->bcjhp",
+        M.astype(COMPUTE_DTYPE),
+        x_dt.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk boundary states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    S_c = jnp.einsum(
+        "bcin,bcihp->bchpn",
+        Bq.astype(COMPUTE_DTYPE),
+        (x_dt * decay_to_end[..., None]).astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )                                                      # (B,nc,H,hd,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(h, xs):
+        s_c, cd = xs                                       # (B,H,hd,N),(B,H)
+        # carry stays fp32; the stacked per-chunk snapshots are only consumed
+        # by the bf16 y_inter einsum, so store them in bf16 (halves the
+        # dominant boundary-state traffic; EXPERIMENTS.md §Perf zamba2 it. 3)
+        h_out = h.astype(COMPUTE_DTYPE)                    # state at chunk START
+        h_next = cd[..., None, None] * h + s_c
+        return h_next, h_out
+
+    h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    h_final, h_starts = jax.lax.scan(
+        scan_fn, h0, (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)           # (B,nc,H,hd,N)
+
+    y_inter = jnp.einsum(
+        "bcjn,bcjh,bchpn->bcjhp",
+        Cq.astype(COMPUTE_DTYPE),
+        jnp.exp(cum).astype(COMPUTE_DTYPE),
+        h_starts.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    y = y + params["D_skip"][None, None, :, None] * xq.reshape(B, S, H, hd).astype(jnp.float32)
+    y = y.reshape(B, S, d_in)[:, :S0]
+
+    # gated RMSNorm + out proj
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["out_norm"])
+    out = mm(y.astype(COMPUTE_DTYPE), params["out_proj"])
+    if not return_state:
+        return out
+    conv_tail = xbc_raw[:, -(cfg.conv_width - 1):].astype(COMPUTE_DTYPE)
+    return out, MambaState(h_final, conv_tail)
+
+
+def mamba_decode(params: dict, cfg: ArchConfig, u: jax.Array,
+                 state: MambaState) -> tuple[jax.Array, MambaState]:
+    """Single-token recurrence. u: (B, 1, D) -> ((B, 1, D), state)."""
+    B = u.shape[0]
+    d_in, hd, H, N = mamba_dims(cfg)
+    z, xbc, dt_raw = _split_proj(params, cfg, u)           # (B,1,...)
+    # conv over [state.conv ; xbc_t]
+    seq = jnp.concatenate([state.conv, xbc.astype(state.conv.dtype)], axis=1)  # (B,W,ch)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32), w)
+    xbc_t = jax.nn.silu(conv_out + params["conv_b"])       # (B,ch)
+    new_conv = seq[:, 1:]
+
+    x_t = xbc_t[:, :d_in].reshape(B, H, hd)
+    B_t = xbc_t[:, d_in : d_in + N]
+    C_t = xbc_t[:, d_in + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0] + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["A_log"])[None] * dt)       # (B,H)
+
+    h = a[..., None, None] * state.h + jnp.einsum(
+        "bn,bhp->bhpn", B_t, x_t.astype(jnp.float32) * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+    y = y + params["D_skip"][None, :, None] * x_t.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["out_norm"])
+    out = mm(y.astype(COMPUTE_DTYPE), params["out_proj"])
+    return out, MambaState(h, new_conv)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> MambaState:
+    d_in, hd, H, N = mamba_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return MambaState(
+        jnp.zeros((batch, H, hd, N), jnp.float32),
+        jnp.zeros((batch, cfg.conv_width - 1, conv_ch), COMPUTE_DTYPE),
+    )
+
+
+def mamba_recurrent_ref(params: dict, cfg: ArchConfig, u: jax.Array) -> jax.Array:
+    """Naive per-token recurrence — oracle for mamba_ssd in tests."""
+    B, S, D = u.shape
+    state = init_mamba_state(cfg, B)
+
+    def step(state, u_t):
+        out, state = mamba_decode(params, cfg, u_t[:, None], state)
+        return state, out[:, 0]
+
+    _, ys = jax.lax.scan(step, state, u.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, hd, hd) fp32
+    x_tm: jax.Array       # (B, D) last input to time-mix
+    x_cm: jax.Array       # (B, D) last input to channel-mix
+
+
+def rwkv_dims(cfg: ArchConfig) -> tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),        # r,k,v,g,w token-shift mix
+        "Wr": dense_init(ks[0], d, d),
+        "Wk": dense_init(ks[1], d, d),
+        "Wv": dense_init(ks[2], d, d),
+        "Wg": dense_init(ks[3], d, d),
+        "Wo": dense_init(ks[4], d, d),
+        "w_base": -6.0 * jnp.ones((d,), jnp.float32),     # decay ~ exp(-exp(-6)) ≈ slow
+        "w_A": 0.01 * jax.random.normal(ks[5], (d, lora), jnp.float32),
+        "w_B": 0.01 * jax.random.normal(ks[6], (lora, d), jnp.float32),
+        "u": 0.1 * jax.random.normal(ks[7], (H, hd), jnp.float32),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        "mu_c": 0.5 * jnp.ones((2, d), jnp.float32),      # channel-mix k,r
+        "Wck": dense_init(ks[8], d, f),
+        "Wcv": dense_init(ks[9], f, d),
+        "Wcr": dense_init(jax.random.fold_in(key, 99), d, d),
+    }
+
+
+def _rwkv_projections(params: dict, cfg: ArchConfig, x: jax.Array, x_prev: jax.Array):
+    """Shared by train and decode. x, x_prev: (B, S, D)."""
+    B, S, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    mu = params["mu"]
+
+    def mixed(i):
+        return x + mu[i][None, None] * (x_prev - x)
+
+    r = mm(mixed(0), params["Wr"]).reshape(B, S, H, hd)
+    k = mm(mixed(1), params["Wk"]).reshape(B, S, H, hd)
+    v = mm(mixed(2), params["Wv"]).reshape(B, S, H, hd)
+    g = mm(mixed(3), params["Wg"])
+    # data-dependent decay (the RWKV6 contribution)
+    ww = params["w_base"][None, None] + mm(
+        jnp.tanh(mm(mixed(4), params["w_A"])), params["w_B"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, hd)        # in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_step(state, rkvw, u):
+    """One WKV recurrence step. state: (B,H,hd,hd) [k-dim, v-dim]."""
+    r, k, v, w = rkvw                                      # each (B,H,hd)
+    kv = k[..., :, None] * v[..., None, :]                 # (B,H,hd_k,hd_v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return new_state, out
+
+
+def rwkv_time_mix(params: dict, cfg: ArchConfig, x: jax.Array,
+                  state: RWKVState | None) -> tuple[jax.Array, RWKVState | None]:
+    """Time-mix over a full sequence (train/prefill).  x: (B, S, D)."""
+    B, S, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    if state is not None:
+        x_prev = x_prev.at[:, 0].set(state.x_tm.astype(x.dtype))
+    r, k, v, g, w = _rwkv_projections(params, cfg, x, x_prev)
+
+    from repro.models.layers import constrain
+
+    # WKV is embarrassingly parallel over heads: pin (S,B,H,hd) streams and
+    # the (B,H,hd,hd) state to head-sharding so the per-step state traffic is
+    # divided across the model axis (perf iteration: EXPERIMENTS.md §Perf).
+    rf = constrain(r.astype(jnp.float32).transpose(1, 0, 2, 3), "rwkv_seq")
+    kf = constrain(k.astype(jnp.float32).transpose(1, 0, 2, 3), "rwkv_seq")
+    vf = constrain(v.astype(jnp.float32).transpose(1, 0, 2, 3), "rwkv_seq")
+    wf = constrain(w.transpose(1, 0, 2, 3), "rwkv_seq")
+
+    # Two-level scan: inner chunks are rematted so the backward pass only
+    # stores the WKV state at chunk boundaries (sqrt-T checkpointing) instead
+    # of at every time step (which is ~S x state bytes and explodes at 4k+).
+    tc = min(64, S)
+    pad = (-S) % tc
+    if pad:
+        zr = jnp.zeros((pad,) + rf.shape[1:], rf.dtype)
+        rf = jnp.concatenate([rf, zr])
+        kf = jnp.concatenate([kf, zr])
+        vf = jnp.concatenate([vf, zr])
+        wf = jnp.concatenate([wf, jnp.ones((pad,) + wf.shape[1:], wf.dtype)])
+    n_out = rf.shape[0] // tc
+    chunked = tuple(a.reshape(n_out, tc, *a.shape[1:]) for a in (rf, kf, vf, wf))
+
+    def inner(s, xs):
+        return _wkv_step(s, xs, params["u"])
+
+    @jax.checkpoint
+    def outer(s, xs_chunk):
+        return jax.lax.scan(inner, s, xs_chunk)
+
+    wkv0 = state.wkv if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    wkv0 = constrain(wkv0, "rwkv_state")
+    wkv, outs = jax.lax.scan(outer, wkv0, chunked)
+    outs = outs.reshape(n_out * tc, B, H, hd)[:S]
+    y = outs.transpose(1, 0, 2, 3).reshape(B, S, D)        # (B,S,D) fp32
+
+    # per-head group norm
+    yh = y.reshape(B, S, H, hd)
+    mu_ = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = (yh - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = yh.reshape(B, S, D) * (1.0 + params["ln_x"])
+    y = y.astype(COMPUTE_DTYPE) * jax.nn.silu(g)
+    out = mm(y, params["Wo"])
+    new_state = None
+    if state is not None:
+        new_state = RWKVState(wkv, x[:, -1].astype(jnp.float32), state.x_cm)
+    return out, new_state
+
+
+def rwkv_channel_mix(params: dict, cfg: ArchConfig, x: jax.Array,
+                     state: RWKVState | None) -> tuple[jax.Array, RWKVState | None]:
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    if state is not None:
+        x_prev = x_prev.at[:, 0].set(state.x_cm.astype(x.dtype))
+    mu = params["mu_c"]
+    xk = x + mu[0][None, None] * (x_prev - x)
+    xr = x + mu[1][None, None] * (x_prev - x)
+    kk = jnp.square(jax.nn.relu(mm(xk, params["Wck"])))
+    out = jax.nn.sigmoid(mm(xr, params["Wcr"]).astype(jnp.float32)).astype(COMPUTE_DTYPE) * mm(
+        kk, params["Wcv"]
+    )
+    new_state = None
+    if state is not None:
+        new_state = RWKVState(state.wkv, state.x_tm, x[:, -1].astype(jnp.float32))
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> RWKVState:
+    H, hd = rwkv_dims(cfg)
+    return RWKVState(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), jnp.float32),
+    )

@@ -1,0 +1,170 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Default scheme ``fsdp_tp``:
+* weight matrices: "feature-in" dim sharded over ``data`` (FSDP — so fp32
+  master + AdamW state fit HBM for the 26B arch) and "feature-out" dim over
+  ``model`` (tensor parallelism); out-projections transpose the pattern.
+* expert weights: expert dim over ``model`` when divisible (llama4: 16e),
+  otherwise per-expert ffn dim over ``model`` (qwen2: 60e).
+* the ``pod`` axis only shards the batch (data parallel across pods);
+  params are replicated across pods and gradients all-reduce over it.
+
+Alternative schemes (hillclimb axes): ``tp_only`` (no FSDP; params replicated
+over data), ``ddp`` (pure data parallel).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _spec_for_leaf(path: str, ndim: int, cfg: ArchConfig, scheme: str) -> P:
+    """Classify one param leaf. `path` is the keystr; stacked stage dims are
+    handled by the caller (prepended Nones)."""
+    fsdp = "data" if scheme == "fsdp_tp" else None
+    tp = "model" if scheme in ("fsdp_tp", "tp_only") else None
+    name = path.split("'")[-2] if "'" in path else path  # last dict key
+
+    if scheme == "ddp":
+        return P(*([None] * ndim))
+
+    # embedding (V, D): vocab over model (token gather stays local-ish)
+    if name == "embed":
+        return P(tp, fsdp)
+    # lm head (D, V): VOCAB-parallel — D over data (FSDP), V over model.
+    # The transposed layout turns the logits matmul into partial sums over a
+    # model-sharded contraction: XLA then all-reduces the full (B, S, V)
+    # logits tensor (disastrous; see EXPERIMENTS.md §Perf iteration 3).
+    if name == "lm_head":
+        return P(fsdp, tp)
+    # attention projections
+    if name in ("q", "k", "v"):
+        return P(fsdp, tp)
+    if name == "o":
+        return P(tp, fsdp)
+    # mlp
+    if name in ("w_in", "w_gate"):
+        if ndim == 3:  # expert weights (E, D, F)
+            if cfg.n_experts and cfg.n_experts % 16 == 0:
+                return P(tp, fsdp, None)
+            return P(None, fsdp, tp)
+        return P(fsdp, tp)
+    if name == "w_out":
+        if ndim == 3:  # (E, F, D)
+            if cfg.n_experts and cfg.n_experts % 16 == 0:
+                return P(tp, None, fsdp)
+            return P(None, tp, fsdp)
+        return P(tp, fsdp)
+    if name == "router":
+        return P(fsdp, None)
+    # mamba
+    if name == "in_proj":
+        return P(fsdp, tp)
+    if name == "out_proj":
+        return P(tp, fsdp)
+    if name == "conv_w":
+        return P(None, tp)
+    # rwkv
+    if name in ("Wr", "Wk", "Wv", "Wg", "Wck", "Wcr"):
+        return P(fsdp, tp)
+    if name in ("Wo", "Wcv"):
+        return P(tp, fsdp)
+    if name == "w_A":
+        return P(fsdp, None)
+    if name == "w_B":
+        return P(None, fsdp)
+    if name == "u":
+        return P(None, None)
+    # everything else (norms, biases, scalars, small vectors): replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(abstract_params: PyTree, cfg: ArchConfig, *, scheme: str = "fsdp_tp") -> PyTree:
+    """PartitionSpec pytree matching the params pytree."""
+
+    def classify(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        stacked = 1 if "stages" in ks else 0
+        spec = _spec_for_leaf(ks, leaf.ndim - stacked, cfg, scheme)
+        if stacked:
+            spec = P(*((None,) * stacked + tuple(spec)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(classify, abstract_params)
+
+
+def opt_state_specs(abstract_opt_state: PyTree, abstract_params: PyTree,
+                    pspecs: PyTree) -> PyTree:
+    """AdamW m/v mirror the param specs; step scalar is replicated."""
+    flat_p = {jax.tree_util.keystr(kp): s
+              for kp, s in jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+
+    def classify(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        # strip the leading "['m']" / "['v']" / "['mu']" component
+        m = re.match(r"^\['(m|v|mu)'\](.*)$", ks)
+        if m and m.group(2) in flat_p:
+            return flat_p[m.group(2)]
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(classify, abstract_opt_state)
+
+
+def batch_specs(cfg: ArchConfig, batch_tree: PyTree, *, multi_pod: bool,
+                global_batch: int) -> PyTree:
+    """Shard the batch dim over (pod?, data); replicate when batch==1."""
+    dp = dp_axes(multi_pod)
+    first = dp if global_batch > 1 else None
+
+    def classify(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(classify, batch_tree)
+
+
+def cache_specs(cfg: ArchConfig, abstract_cache: PyTree, *, multi_pod: bool,
+                global_batch: int) -> PyTree:
+    """KV caches: (repeats, B, S, Hkv, hd) — batch over dp when divisible,
+    sequence over model (and over data too when batch==1, i.e. context
+    parallelism for long_500k).  SSM states: batch over dp, heads over model
+    (when divisible); for batch==1 replicate batch and shard heads."""
+    dp = dp_axes(multi_pod)
+    bspec = dp if global_batch > 1 else None
+
+    def classify(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        is_attn_cache = ("['kv']" in ks or "['cross']" in ks) and nd == 5
+        if is_attn_cache:
+            # AttnCache leaves: (repeats, B, S, Hkv, hd).  Small ring buffers
+            # (sliding-window locals) replicate — sharding a 1024-slot cache
+            # over 256 devices forces involuntary rematerialization.
+            seq = leaf.shape[2]
+            if seq < 8192:
+                return P(None, bspec, None, None, None)
+            if global_batch == 1:
+                # context parallelism: shard the sequence over data (+model)
+                seq_axes = tuple(a for a in ("data", "model") if seq % 512 == 0)
+                sspec = seq_axes if seq_axes else None
+                return P(None, None, sspec, None, None)
+            sspec = "model" if seq % 256 == 0 else None
+            return P(None, bspec, sspec, None, None)
+        # SSM states and misc: shard batch when possible
+        if nd >= 2:
+            return P(None, bspec, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(classify, abstract_cache)

@@ -1,0 +1,279 @@
+"""Unit + property tests for the PACFL core (SVD, angles, HC, PME)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PACFLConfig,
+    assign_newcomers,
+    cluster_clients,
+    compute_signatures,
+    hierarchical_clustering,
+    n_clusters_for_beta,
+    one_shot_clustering,
+    principal_angles,
+    proximity_matrix,
+    randomized_truncated_svd,
+    smallest_principal_angle_deg,
+    truncated_svd,
+)
+from repro.core.similarity import bhattacharyya_gaussian, kl_gaussian, mmd_rbf
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _subspace_data(key, n, m, basis_rank=5, noise=0.01, spectrum_decay=0.8):
+    """Data matrix (n, m) concentrated on a decaying-spectrum subspace."""
+    kb, kc, kn = jax.random.split(key, 3)
+    B, _ = jnp.linalg.qr(jax.random.normal(kb, (n, basis_rank)))
+    spec = spectrum_decay ** jnp.arange(basis_rank)
+    C = jax.random.normal(kc, (basis_rank, m)) * spec[:, None]
+    return B @ C + noise * jax.random.normal(kn, (n, m))
+
+
+# ---------------------------------------------------------------------------
+# SVD signatures
+# ---------------------------------------------------------------------------
+
+
+class TestSVD:
+    def test_truncated_svd_orthonormal(self):
+        D = _subspace_data(KEY, 64, 200)
+        U = truncated_svd(D, 4)
+        assert U.shape == (64, 4)
+        np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(4), atol=1e-5)
+
+    @pytest.mark.parametrize("p", [2, 3, 5])
+    def test_randomized_matches_exact_subspace(self, p):
+        D = _subspace_data(KEY, 96, 300)
+        Ue = truncated_svd(D, p)
+        Ur = randomized_truncated_svd(D, p, key=KEY)
+        # subspaces agree: all principal angles tiny
+        ang = np.degrees(np.asarray(principal_angles(Ue, Ur)))
+        assert ang.max() < 1.0, ang
+
+    def test_tsgemm_svd_path(self):
+        D = _subspace_data(KEY, 80, 120)
+        Ue = truncated_svd(D, 3)
+        Uk = randomized_truncated_svd(D, 3, key=KEY, use_tsgemm=True)
+        ang = np.degrees(np.asarray(principal_angles(Ue, Uk)))
+        assert ang.max() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Principal angles / proximity matrix
+# ---------------------------------------------------------------------------
+
+
+class TestAngles:
+    def test_same_subspace_zero_angle(self):
+        U, _ = jnp.linalg.qr(jax.random.normal(KEY, (32, 3)))
+        # rotate within the subspace
+        R, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(KEY, 1), (3, 3)))
+        W = U @ R
+        assert float(smallest_principal_angle_deg(U, W)) < 0.1
+
+    def test_orthogonal_subspaces_90(self):
+        Q, _ = jnp.linalg.qr(jax.random.normal(KEY, (64, 6)))
+        U, W = Q[:, :3], Q[:, 3:]
+        ang = np.asarray(principal_angles(U, W))
+        np.testing.assert_allclose(np.degrees(ang), 90.0, atol=0.1)
+
+    @pytest.mark.parametrize("measure", ["eq2", "eq3"])
+    def test_proximity_matrix_properties(self, measure):
+        U = jnp.stack([
+            jnp.linalg.qr(jax.random.normal(jax.random.fold_in(KEY, i), (48, 3)))[0]
+            for i in range(6)
+        ])
+        A = np.asarray(proximity_matrix(U, measure=measure))
+        np.testing.assert_allclose(A, A.T, atol=1e-4)          # symmetric
+        np.testing.assert_allclose(np.diag(A), 0.0, atol=1e-3)  # zero diagonal
+        assert (A >= -1e-4).all()                                # nonnegative
+        if measure == "eq2":
+            assert (A <= 90.0 + 1e-3).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 8), st.integers(1, 4))
+    def test_proximity_symmetry_property(self, k, p):
+        key = jax.random.PRNGKey(k * 13 + p)
+        U = jnp.stack([
+            jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, i), (24, p)))[0]
+            for i in range(k)
+        ])
+        A = np.asarray(proximity_matrix(U, measure="eq2"))
+        np.testing.assert_allclose(A, A.T, atol=1e-4)
+        assert (np.diag(A) < 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical clustering
+# ---------------------------------------------------------------------------
+
+
+class TestHC:
+    def test_two_blobs(self):
+        A = np.array([
+            [0, 1, 9, 9],
+            [1, 0, 9, 9],
+            [9, 9, 0, 1],
+            [9, 9, 1, 0],
+        ], float)
+        labels = hierarchical_clustering(A, beta=5.0)
+        assert labels[0] == labels[1]
+        assert labels[2] == labels[3]
+        assert labels[0] != labels[2]
+
+    def test_beta_extremes(self):
+        rng = np.random.default_rng(0)
+        X = rng.random((10, 10))
+        A = (X + X.T) / 2
+        np.fill_diagonal(A, 0)
+        assert n_clusters_for_beta(A, 1e9) == 1          # pure globalization
+        assert n_clusters_for_beta(A, -1.0) == 10        # pure personalization
+
+    def test_monotone_in_beta(self):
+        rng = np.random.default_rng(1)
+        X = rng.random((12, 12)) * 10
+        A = (X + X.T) / 2
+        np.fill_diagonal(A, 0)
+        counts = [n_clusters_for_beta(A, b) for b in [0.5, 2, 5, 8, 1e3]]
+        assert all(a >= b for a, b in zip(counts, counts[1:]))
+
+    def test_matches_scipy(self):
+        from scipy.cluster.hierarchy import fcluster, linkage
+        from scipy.spatial.distance import squareform
+
+        rng = np.random.default_rng(2)
+        pts = np.concatenate([rng.normal(0, 1, (5, 3)), rng.normal(8, 1, (6, 3))])
+        D = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+        for link in ("single", "complete", "average"):
+            ours = hierarchical_clustering(D, beta=4.0, linkage=link)
+            Z = linkage(squareform(D, checks=False), method=link)
+            sp = fcluster(Z, t=4.0, criterion="distance")
+            # same partition up to relabeling
+            import itertools
+            pairs_ours = {(i, j) for i, j in itertools.combinations(range(11), 2)
+                          if ours[i] == ours[j]}
+            pairs_sp = {(i, j) for i, j in itertools.combinations(range(11), 2)
+                        if sp[i] == sp[j]}
+            assert pairs_ours == pairs_sp, link
+
+    def test_fixed_n_clusters(self):
+        rng = np.random.default_rng(3)
+        X = rng.random((9, 9))
+        A = (X + X.T) / 2
+        np.fill_diagonal(A, 0)
+        for z in (1, 3, 9):
+            labels = hierarchical_clustering(A, n_clusters=z)
+            assert labels.max() + 1 == z
+
+
+# ---------------------------------------------------------------------------
+# One-shot clustering + PME (Algorithms 1-3)
+# ---------------------------------------------------------------------------
+
+
+class TestPACFL:
+    def _four_clients(self, key):
+        k1, k2 = jax.random.split(key)
+        data = [
+            _subspace_data(jax.random.fold_in(k1, i), 64, 150) for i in range(2)
+        ] + [
+            _subspace_data(jax.random.fold_in(k2, i + 10), 64, 150) for i in range(2)
+        ]
+        return data
+
+    def test_one_shot_clusters_by_subspace(self):
+        # clients 0,1 share a basis; 2,3 share another
+        kb = jax.random.split(KEY, 2)
+        B1, _ = jnp.linalg.qr(jax.random.normal(kb[0], (64, 5)))
+        B2, _ = jnp.linalg.qr(jax.random.normal(kb[1], (64, 5)))
+
+        def make(B, i):
+            C = jax.random.normal(jax.random.fold_in(KEY, i), (5, 150)) \
+                * (0.8 ** jnp.arange(5))[:, None]
+            return B @ C + 0.01 * jax.random.normal(jax.random.fold_in(KEY, i + 50), (64, 150))
+
+        data = [make(B1, 1), make(B1, 2), make(B2, 3), make(B2, 4)]
+        cfg = PACFLConfig(p=3, beta=45.0, measure="eq2")
+        cl = one_shot_clustering(data, cfg)
+        assert cl.n_clusters == 2
+        assert cl.labels[0] == cl.labels[1]
+        assert cl.labels[2] == cl.labels[3]
+        assert cl.labels[0] != cl.labels[2]
+
+        # PME: newcomers from basis 1 join cluster of clients 0/1
+        U_new = compute_signatures([make(B1, 5)], cfg)
+        cl2 = cl.extend(U_new)
+        assert cl2.labels[-1] == cl.labels[0]
+        # old labels unchanged (the paper's invariant)
+        assert (cl2.labels[:4] == cl.labels).all()
+
+    def test_newcomer_forms_new_cluster_when_dissimilar(self):
+        kb = jax.random.split(KEY, 3)
+        bases = [jnp.linalg.qr(jax.random.normal(k, (64, 5)))[0] for k in kb]
+
+        def make(B, i):
+            C = jax.random.normal(jax.random.fold_in(KEY, i), (5, 150)) \
+                * (0.8 ** jnp.arange(5))[:, None]
+            return B @ C
+
+        data = [make(bases[0], 1), make(bases[0], 2), make(bases[1], 3), make(bases[1], 4)]
+        cfg = PACFLConfig(p=3, beta=45.0, measure="eq2")
+        cl = one_shot_clustering(data, cfg)
+        U_new = compute_signatures([make(bases[2], 9)], cfg)
+        cl2 = cl.extend(U_new)
+        assert cl2.labels[-1] not in set(cl.labels.tolist())
+
+    def test_pallas_proximity_in_pipeline(self):
+        data = self._four_clients(KEY)
+        cfg_ref = PACFLConfig(p=3, beta=20.0, measure="eq3")
+        cfg_pal = PACFLConfig(p=3, beta=20.0, measure="eq3", use_pallas_proximity=True)
+        U = compute_signatures(data, cfg_ref)
+        A_ref = np.asarray(proximity_matrix(U, "eq3"))
+        cl = cluster_clients(U, cfg_pal)
+        np.testing.assert_allclose(cl.A, A_ref, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Consistency with classical distribution distances (suppl. Table 6)
+# ---------------------------------------------------------------------------
+
+
+class TestSimilarityConsistency:
+    def test_angle_orders_like_bd_and_kl(self):
+        """Distributions with increasingly rotated principal axes: classical
+        distances and the principal-angle measure must agree on the ordering
+        (the paper's Table-6 consistency claim)."""
+        dim, n, r = 20, 300, 3
+        k = jax.random.split(KEY, 4)
+        Q, _ = jnp.linalg.qr(jax.random.normal(k[0], (dim, 2 * r)))
+        B_near = jnp.linalg.qr(
+            jnp.concatenate([Q[:, :r-1], Q[:, r:r+1]], axis=1))[0]  # overlaps 2/3
+        B_far = Q[:, r:]                                            # orthogonal
+
+        def sample(B, kk):
+            spec = (0.8 ** jnp.arange(B.shape[1]))[None, :]
+            z = jax.random.normal(kk, (n, B.shape[1])) * spec
+            return z @ B.T + 0.02 * jax.random.normal(jax.random.fold_in(kk, 9), (n, dim))
+
+        X = sample(Q[:, :r], k[1])
+        Y_near = sample(B_near, k[2])
+        Y_far = sample(B_far, k[3])
+        bd_n, bd_f = bhattacharyya_gaussian(X, Y_near), bhattacharyya_gaussian(X, Y_far)
+        kl_n, kl_f = kl_gaussian(X, Y_near), kl_gaussian(X, Y_far)
+        assert float(bd_n) < float(bd_f)
+        assert float(kl_n) < float(kl_f)
+        U = truncated_svd(X.T, r)
+        a_n = float(smallest_principal_angle_deg(U, truncated_svd(Y_near.T, r)))
+        a_f = float(smallest_principal_angle_deg(U, truncated_svd(Y_far.T, r)))
+        assert a_n < a_f
+
+    def test_mmd_positive(self):
+        k1, k2 = jax.random.split(KEY)
+        X = jax.random.normal(k1, (80, 10))
+        Y = 3.0 + jax.random.normal(k2, (80, 10))
+        assert float(mmd_rbf(X, Y)) > float(mmd_rbf(X, X + 1e-3))

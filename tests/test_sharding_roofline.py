@@ -1,0 +1,116 @@
+"""Sharding-rule invariants (all 10 archs) + roofline model + optim sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.launch.roofline import model_flops
+from repro.models import lm
+from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.sharding import batch_specs, cache_specs, opt_state_specs, param_specs
+
+AXIS_SIZE = {"data": 16, "model": 16, "pod": 2}
+
+
+def _shards_for(spec_entry):
+    if spec_entry is None:
+        return 1
+    if isinstance(spec_entry, (tuple, list)):
+        n = 1
+        for a in spec_entry:
+            n *= AXIS_SIZE[a]
+        return n
+    return AXIS_SIZE[spec_entry]
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_divisible(arch):
+    """Every sharded param dim divides evenly by its mesh-axis product —
+    the invariant that keeps GSPMD from padding/involuntary-remat."""
+    cfg = get_config(arch)
+    aparams = lm.abstract_params(cfg)
+    pspecs = param_specs(aparams, cfg)
+    flat_p = jax.tree_util.tree_flatten_with_path(aparams)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    for (kp, leaf), (_, spec) in zip(flat_p, flat_s):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n = _shards_for(entry)
+            assert dim % n == 0, (jax.tree_util.keystr(kp), leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-7b", "whisper-medium"])
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_cache_and_batch_specs_structure(arch, multi_pod):
+    cfg = get_config(arch)
+    for shape_name in ("decode_32k",):
+        shape = INPUT_SHAPES[shape_name]
+        acache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = cache_specs(cfg, acache, multi_pod=multi_pod,
+                             global_batch=shape.global_batch)
+        assert jax.tree_util.tree_structure(acache) == jax.tree_util.tree_structure(cspecs)
+        flat_c = jax.tree_util.tree_flatten_with_path(acache)[0]
+        flat_s = jax.tree_util.tree_flatten_with_path(cspecs)[0]
+        for (kp, leaf), (_, spec) in zip(flat_c, flat_s):
+            for dim, entry in zip(leaf.shape, tuple(spec)):
+                assert dim % _shards_for(entry) == 0, (jax.tree_util.keystr(kp), leaf.shape, spec)
+
+
+def test_opt_state_specs_mirror_params():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    aparams = lm.abstract_params(cfg)
+    pspecs = param_specs(aparams, cfg)
+    opt = adamw(1e-3)
+    aopt = jax.eval_shape(opt.init, aparams)
+    ospecs = opt_state_specs(aopt, aparams, pspecs)
+    # m/v leaves carry the same spec as their param
+    assert ospecs["m"]["embed"] == pspecs["embed"]
+    assert ospecs["v"]["final_norm"] == pspecs["final_norm"]
+
+
+class TestRooflineModel:
+    def test_train_flops_scale_with_tokens(self):
+        cfg = get_config("tinyllama-1.1b")
+        f_train = model_flops(cfg, INPUT_SHAPES["train_4k"])
+        f_prefill = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+        # equal token counts (256*4096 == 32*32768): train is 3x the param
+        # flops but prefill's quadratic attention term is 8x larger (S 32k
+        # vs 4k), so the ratio sits between 1.5 and 4.
+        assert 1.2 * f_prefill < f_train < 4.0 * f_prefill
+
+    def test_moe_active_params(self):
+        cfg = get_config("qwen2-moe-a2.7b")
+        assert cfg.active_param_count() < 0.3 * cfg.param_count()
+
+    def test_decode_much_cheaper_than_prefill(self):
+        cfg = get_config("granite-8b")
+        assert model_flops(cfg, INPUT_SHAPES["decode_32k"]) < 1e-3 * model_flops(
+            cfg, INPUT_SHAPES["prefill_32k"]
+        )
+
+
+class TestOptim:
+    def test_sgd_momentum_descends_quadratic(self):
+        opt = sgd(0.02, momentum=0.9)
+        p = {"w": jnp.array([5.0, -3.0])}
+        s = opt.init(p)
+        for _ in range(200):
+            g = {"w": 2 * p["w"]}
+            u, s = opt.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+    def test_adamw_descends(self):
+        opt = adamw(0.1)
+        p = {"w": jnp.array([5.0, -3.0])}
+        s = opt.init(p)
+        for _ in range(200):
+            g = {"w": 2 * p["w"]}
+            u, s = opt.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+    def test_clip(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        c = clip_by_global_norm(g, 1.0)
+        assert abs(float(jnp.linalg.norm(c["a"])) - 1.0) < 1e-5
