@@ -27,6 +27,9 @@ def run(quick=True):
     err = float(jnp.abs(proximity(U) - ref(U)).max())
     rows.append(("kernels/proximity_ref", timed(ref, U), f"K={K},maxerr={err:.2e}"))
     rows.append(("kernels/proximity_pallas_interpret", timed(proximity, U), "interpret=True"))
+    ref2 = jax.jit(lambda u: proximity_ref(u, measure="eq2"))
+    err2 = float(jnp.abs(proximity(U, measure="eq2") - ref2(U)).max())
+    rows.append(("kernels/proximity_eq2_ref", timed(ref2, U), f"K={K},maxerr={err2:.2e}"))
 
     m, k_, pp = (1024, 512, 10) if quick else (4096, 3072, 13)
     A = jax.random.normal(KEY, (m, k_))

@@ -1,0 +1,131 @@
+"""Proximity-matrix scale sweep: K x measure x backend.
+
+The one-shot phase's server cost is the (K, K) proximity matrix.  The dense
+einsum reference materializes a (K, K, p, p) Gram tensor — ~10 GB of f32 at
+K=10k, p=5 — while the blocked backend tiles it into (bk, bk) client blocks
+(peak intermediate O(bk^2 p^2)).  This sweep times both (plus the Pallas
+kernel where sensible) across K in {128, 512, 2048} and both paper measures,
+verifies cross-backend parity at K=128, and writes
+``BENCH_proximity_scale.json`` at the repo root.
+
+Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full]
+(also registered as the ``proximity_scale`` suite of benchmarks.run).
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # direct-run mode
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ROOT, timed
+from repro.core.angles import proximity_matrix
+
+KS = (128, 512, 2048)
+MEASURES = ("eq2", "eq3")
+BLOCK_SIZE = 64
+# The dense path's (K, K, p, p) tensor passes ~400 MB at K=2048; keep the
+# reference to sizes where it is the sensible baseline.
+DENSE_MAX_K = 512
+# Off-TPU the Pallas kernel runs in interpret mode — O(K^2/bk^2) Python-level
+# grid steps — so only sample it at the smallest K there.
+PALLAS_MAX_K_INTERPRET = 128
+PARITY_K = 128
+PARITY_TOL_DEG = 1e-3
+
+
+def _signatures(K: int, n: int = 64, p: int = 5) -> jax.Array:
+    """Stacked orthonormal signatures, vmapped QR (a K-long Python loop of
+    per-client QRs would dwarf the timings we are measuring)."""
+    X = jax.random.normal(jax.random.PRNGKey(0), (K, n, p))
+    return jax.vmap(lambda x: jnp.linalg.qr(x)[0])(X)
+
+
+def _backends_for(K: int) -> list[str]:
+    backends = []
+    if K <= DENSE_MAX_K:
+        backends.append("jnp")
+    backends.append("jnp_blocked")
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or K <= PALLAS_MAX_K_INTERPRET:
+        backends.append("pallas")
+    return backends
+
+
+def run(quick: bool = True):
+    rows = []
+    record = {
+        "jax_backend": jax.default_backend(),
+        "block_size": BLOCK_SIZE,
+        "parity_tol_deg": PARITY_TOL_DEG,
+        "sweep": [],
+        "parity": [],
+    }
+
+    for K in KS:
+        U = _signatures(K)
+        ref = None
+        if K <= DENSE_MAX_K:
+            ref = {
+                m: np.asarray(proximity_matrix(U, m, backend="jnp"))
+                for m in MEASURES
+            }
+        iters = 1 if (quick and K >= 2048) else 3
+        for measure in MEASURES:
+            for backend in _backends_for(K):
+                fn = lambda: proximity_matrix(
+                    U, measure, backend=backend, block_size=BLOCK_SIZE
+                )
+                us = timed(fn, warmup=1, iters=iters)
+                err = (
+                    float(np.abs(np.asarray(fn()) - ref[measure]).max())
+                    if ref is not None
+                    else None
+                )
+                entry = {
+                    "K": K,
+                    "measure": measure,
+                    "backend": backend,
+                    "us_per_call": us,
+                    "max_err_vs_ref_deg": err,
+                }
+                record["sweep"].append(entry)
+                rows.append((
+                    f"proximity_scale/K{K}_{measure}_{backend}",
+                    us,
+                    "" if err is None else f"maxerr={err:.2e}deg",
+                ))
+                if K == PARITY_K and err is not None:
+                    record["parity"].append(entry)
+                    assert err <= PARITY_TOL_DEG, (
+                        f"{backend}/{measure} diverged from the einsum "
+                        f"reference at K={PARITY_K}: {err:.3e} deg"
+                    )
+
+    parity_ok = all(
+        e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
+    )
+    record["parity_ok"] = parity_ok
+    rows.append((
+        "proximity_scale/parity_K128_ok", None, str(parity_ok)
+    ))
+
+    out = ROOT / "BENCH_proximity_scale.json"
+    out.write_text(json.dumps(record, indent=2))
+    rows.append(("proximity_scale/json", None, str(out)))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    emit(run(quick=not args.full))

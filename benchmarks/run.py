@@ -24,6 +24,7 @@ def main() -> None:
     from benchmarks import (
         fig2_beta_sweep,
         kernels_bench,
+        proximity_scale,
         roofline_table,
         table1_proximity,
         table4_newcomers,
@@ -40,6 +41,7 @@ def main() -> None:
         "fig2": fig2_beta_sweep.run,
         "table6": table6_gaussian.run,
         "kernels": kernels_bench.run,
+        "proximity_scale": proximity_scale.run,
         "roofline": roofline_table.run,
     }
     print("name,us_per_call,derived")

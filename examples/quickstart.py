@@ -40,3 +40,15 @@ print("cluster labels:", clustering.labels)          # -> [0 0 1 1]
 print("signature upload:", clustering.signature_bytes, "bytes total")
 assert clustering.n_clusters == 2
 print("OK: clients grouped by data subspace, one shot, no training.")
+
+# The proximity matrix is backend-dispatched (PACFLConfig.proximity_backend:
+# "auto" | "jnp" | "jnp_blocked" | "pallas").  The blocked path never
+# materializes the (K, K, p, p) Gram tensor — same labels, server scales to
+# thousands of clients.
+blocked = one_shot_clustering(
+    clients,
+    PACFLConfig(p=3, beta=45.0, measure="eq2",
+                proximity_backend="jnp_blocked", proximity_block=2),
+)
+assert (blocked.labels == clustering.labels).all()
+print("OK: blocked proximity backend agrees with the dense reference.")

@@ -1,5 +1,7 @@
 """PACFL core: signatures, principal angles, clustering, newcomers."""
 from repro.core.angles import (
+    PROXIMITY_BACKENDS,
+    cross_proximity,
     principal_angles,
     proximity_matrix,
     smallest_principal_angle_deg,
@@ -14,11 +16,19 @@ from repro.core.pacfl import (
     one_shot_clustering,
 )
 from repro.core.pme import assign_newcomers, extend_proximity_matrix
-from repro.core.svd import client_signature, randomized_truncated_svd, truncated_svd
+from repro.core.svd import (
+    batched_client_signatures,
+    bucket_samples,
+    client_signature,
+    randomized_truncated_svd,
+    truncated_svd,
+)
 
 __all__ = [
+    "PROXIMITY_BACKENDS",
     "principal_angles",
     "proximity_matrix",
+    "cross_proximity",
     "smallest_principal_angle_deg",
     "trace_angle_deg",
     "hierarchical_clustering",
@@ -31,6 +41,8 @@ __all__ = [
     "one_shot_clustering",
     "assign_newcomers",
     "extend_proximity_matrix",
+    "batched_client_signatures",
+    "bucket_samples",
     "client_signature",
     "randomized_truncated_svd",
     "truncated_svd",

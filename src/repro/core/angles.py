@@ -9,6 +9,23 @@ values of ``U^T W``.  The paper's two proximity measures:
   pairs (no inner SVD; the measure the paper calls the more rigorous one).
 
 Angles are reported in **degrees** to match the paper's Tables 1 and 6.
+
+Backends
+--------
+:func:`proximity_matrix` is the single entry point for the (K, K) matrix and
+dispatches across three implementations:
+
+* ``"jnp"`` — the einsum reference.  Materializes the full (K, K, p, p) Gram
+  tensor; simplest and fastest for small K, but O(K^2 p^2) peak memory
+  (~10 GB of f32 at K=10k, p=5).
+* ``"jnp_blocked"`` — tiles the computation into (bk, bk) client blocks with
+  ``lax.map``; peak intermediate memory is O(bk^2 p^2) plus the (K, K)
+  output, so the server scales to K far beyond the dense path.
+* ``"pallas"`` — the TPU kernel in ``repro.kernels.proximity`` (interpret
+  mode off-TPU); supports both measures.
+
+``"auto"`` picks pallas on TPU, else the dense path for small K and the
+blocked path beyond ``_AUTO_BLOCKED_MIN_K`` clients.
 """
 from __future__ import annotations
 
@@ -16,6 +33,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+PROXIMITY_BACKENDS = ("auto", "jnp", "jnp_blocked", "pallas")
+
+# "auto" switches from the dense einsum to the blocked path at this K: below
+# it the (K, K, p, p) tensor is tens of MB and einsum wins on latency.
+_AUTO_BLOCKED_MIN_K = 512
 
 
 def principal_angles(U: jax.Array, W: jax.Array) -> jax.Array:
@@ -38,38 +62,186 @@ def trace_angle_deg(U: jax.Array, W: jax.Array) -> jax.Array:
     return jnp.degrees(jnp.sum(jnp.arccos(jnp.abs(d))))
 
 
+def _measure_from_gram(G: jax.Array, measure: str) -> jax.Array:
+    """(..., p, p) pairwise Gram blocks -> (...,) angles in degrees."""
+    if measure == "eq3":
+        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=-2, axis2=-1)), 0.0, 1.0)
+        return jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    if measure == "eq2":
+        s = jnp.linalg.svd(G, compute_uv=False)
+        smax = jnp.clip(s[..., 0], -1.0, 1.0)  # largest cosine
+        return jnp.degrees(jnp.arccos(smax))
+    raise ValueError(f"unknown measure: {measure!r}")
+
+
+def _hygiene(A: jax.Array) -> jax.Array:
+    """Exact symmetry and exact zeros on the diagonal."""
+    A = 0.5 * (A + A.T)
+    return A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))
+
+
 @functools.partial(jax.jit, static_argnames=("measure",))
-def proximity_matrix(U_stack: jax.Array, measure: str = "eq3") -> jax.Array:
+def _proximity_dense(U_stack: jax.Array, measure: str) -> jax.Array:
+    """Einsum reference: materializes the full (K, K, p, p) Gram tensor."""
+    U_stack = U_stack.astype(jnp.float32)
+    G = jnp.einsum("inp,jnq->ijpq", U_stack, U_stack)
+    return _hygiene(_measure_from_gram(G, measure))
+
+
+@functools.partial(jax.jit, static_argnames=("measure", "block_size"))
+def _proximity_blocked(U_stack: jax.Array, measure: str, block_size: int) -> jax.Array:
+    """Tiled path: (bk, bk) client blocks, upper-triangular tiles only.
+
+    Peak intermediate memory is one (bk, bk, p, p) Gram block per step plus
+    the (K, K) output — never the full (K, K, p, p) tensor.  A is symmetric,
+    so only the nb*(nb+1)/2 upper tiles are computed and each is mirrored
+    into the lower triangle, halving the dominant O(K^2 n p^2) cost.
+    Zero-padded clients produce zero Gram blocks (90-degree angles) in
+    rows/cols that are sliced off before the hygiene pass.
+    """
+    U_stack = U_stack.astype(jnp.float32)
+    K, n, p = U_stack.shape
+    bk = block_size
+    pad = (-K) % bk
+    Up = jnp.pad(U_stack, ((0, pad), (0, 0), (0, 0)))
+    Kp = Up.shape[0]
+    nb = Kp // bk
+    blocks = Up.reshape(nb, bk, n, p)
+    ii, jj = np.triu_indices(nb)
+
+    def body(A, idx):
+        i, j = idx
+        Ui = jnp.take(blocks, i, axis=0)
+        Uj = jnp.take(blocks, j, axis=0)
+        G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+        tile = _measure_from_gram(G, measure)      # (bk, bk)
+        A = jax.lax.dynamic_update_slice(A, tile.T, (j * bk, i * bk))
+        A = jax.lax.dynamic_update_slice(A, tile, (i * bk, j * bk))
+        return A, None
+
+    A0 = jnp.zeros((Kp, Kp), jnp.float32)
+    idxs = jnp.stack([jnp.asarray(ii), jnp.asarray(jj)], axis=1)
+    A, _ = jax.lax.scan(body, A0, idxs)
+    return _hygiene(A[:K, :K])
+
+
+def _resolve_backend(backend: str, K: int) -> str:
+    if backend not in PROXIMITY_BACKENDS:
+        raise ValueError(
+            f"unknown proximity backend: {backend!r} (want one of {PROXIMITY_BACKENDS})"
+        )
+    if backend != "auto":
+        return backend
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "jnp" if K < _AUTO_BLOCKED_MIN_K else "jnp_blocked"
+
+
+# Per-backend tile defaults: the lax.map path amortizes best with big client
+# tiles; the Pallas kernel's tuned edge is small (VMEM slabs + K padded to a
+# multiple of bk).  An explicit block_size overrides both.
+_DEFAULT_BLOCK = {"jnp_blocked": 64, "pallas": 8}
+
+
+def proximity_matrix(
+    U_stack: jax.Array,
+    measure: str = "eq3",
+    *,
+    backend: str = "auto",
+    block_size: int | None = None,
+) -> jax.Array:
     """Proximity matrix A (K x K, degrees) from stacked signatures.
 
     Parameters
     ----------
     U_stack: (K, n, p) stacked orthonormal client signatures.
     measure: "eq2" (smallest principal angle) or "eq3" (trace of arccos).
+    backend: "auto" | "jnp" | "jnp_blocked" | "pallas" — see module docstring.
+    block_size: client tile edge for the blocked and pallas paths; None picks
+        the backend's tuned default (64 blocked, 8 pallas).
 
-    Pure-jnp reference; ``repro.kernels.proximity`` is the Pallas TPU tiling
-    of the same computation and is tested against this function.
+    All backends agree to ~1e-3 degrees on orthonormal f32 inputs; the dense
+    einsum path is the reference the others are tested against.
     """
-    U_stack = U_stack.astype(jnp.float32)
-    # Gram tensor over all client pairs: (K, K, p, p)
-    G = jnp.einsum("inp,jnq->ijpq", U_stack, U_stack)
-    if measure == "eq3":
-        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
-        A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
-    elif measure == "eq2":
-        s = jnp.linalg.svd(G, compute_uv=False)          # (K, K, p)
-        smax = jnp.clip(s[..., 0], -1.0, 1.0)            # largest cosine
-        A = jnp.degrees(jnp.arccos(smax))
-    else:
+    if measure not in ("eq2", "eq3"):
         raise ValueError(f"unknown measure: {measure!r}")
-    # Numerical hygiene: exact zeros on the diagonal, exact symmetry.
-    A = 0.5 * (A + A.T)
-    A = A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))
-    return A
-
-
-def proximity_matrix_pallas(U_stack: jax.Array) -> jax.Array:
-    """Eq. 3 proximity matrix through the Pallas kernel (interpret on CPU)."""
+    resolved = _resolve_backend(backend, int(U_stack.shape[0]))
+    if resolved == "jnp":
+        return _proximity_dense(U_stack, measure)
+    bk = block_size if block_size is not None else _DEFAULT_BLOCK[resolved]
+    if resolved == "jnp_blocked":
+        return _proximity_blocked(U_stack, measure, bk)
     from repro.kernels.proximity import ops as pops
 
-    return pops.proximity(U_stack)
+    # bk is honored as the kernel tile edge: K is padded to a multiple of it
+    # and each grid cell holds two (bk, n, p) slabs in VMEM, so large values
+    # trade padding waste + VMEM for fewer grid steps.
+    return pops.proximity(U_stack, measure=measure, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("measure",))
+def _cross_dense(U_a: jax.Array, U_b: jax.Array, measure: str) -> jax.Array:
+    U_a = U_a.astype(jnp.float32)
+    U_b = U_b.astype(jnp.float32)
+    G = jnp.einsum("inp,jnq->ijpq", U_a, U_b)
+    return _measure_from_gram(G, measure)
+
+
+@functools.partial(jax.jit, static_argnames=("measure", "block_size"))
+def _cross_blocked(
+    U_a: jax.Array, U_b: jax.Array, measure: str, block_size: int
+) -> jax.Array:
+    """Both operands are tiled, so peak intermediate memory is one
+    (bk, bk, p, p) Gram block regardless of which side is the huge one."""
+    U_a = U_a.astype(jnp.float32)
+    U_b = U_b.astype(jnp.float32)
+    Ka, n, p = U_a.shape
+    Kb = U_b.shape[0]
+    bk = block_size
+    Ua = jnp.pad(U_a, ((0, (-Ka) % bk), (0, 0), (0, 0)))
+    Ub = jnp.pad(U_b, ((0, (-Kb) % bk), (0, 0), (0, 0)))
+    na = Ua.shape[0] // bk
+    nbb = Ub.shape[0] // bk
+    blocks_a = Ua.reshape(na, bk, n, p)
+    blocks_b = Ub.reshape(nbb, bk, n, p)
+
+    def strip(Ui):  # (bk, n, p) -> (bk, nbb * bk)
+        def cell(Uj):
+            G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+            return _measure_from_gram(G, measure)  # (bk, bk)
+
+        s = jax.lax.map(cell, blocks_b)            # (nbb, bk, bk)
+        return s.transpose(1, 0, 2).reshape(bk, nbb * bk)
+
+    C = jax.lax.map(strip, blocks_a).reshape(na * bk, nbb * bk)
+    return C[:Ka, :Kb]
+
+
+def cross_proximity(
+    U_a: jax.Array,
+    U_b: jax.Array,
+    measure: str = "eq3",
+    *,
+    backend: str = "auto",
+    block_size: int | None = None,
+) -> jax.Array:
+    """Rectangular angle block: (Ka, n, p) x (Kb, n, p) -> (Ka, Kb) degrees.
+
+    The PME workhorse (Algorithm 2): newcomers need only the cross block
+    against seen clients, never a fresh (Ka+Kb)^2 recomputation.  The pallas
+    backend is square-only, so it falls back to the blocked path here.
+    """
+    if measure not in ("eq2", "eq3"):
+        raise ValueError(f"unknown measure: {measure!r}")
+    # auto must consider BOTH sides: the dense path materializes a
+    # (Ka, Kb, p, p) tensor, so a small Ka with a huge Kb still blows up.
+    resolved = _resolve_backend(backend, max(int(U_a.shape[0]), int(U_b.shape[0])))
+    if resolved == "jnp":
+        return _cross_dense(U_a, U_b, measure)
+    bk = block_size if block_size is not None else _DEFAULT_BLOCK["jnp_blocked"]
+    return _cross_blocked(U_a, U_b, measure, bk)
+
+
+def proximity_matrix_pallas(U_stack: jax.Array, measure: str = "eq3") -> jax.Array:
+    """Proximity matrix through the Pallas kernel (interpret mode off-TPU)."""
+    return proximity_matrix(U_stack, measure, backend="pallas")

@@ -19,7 +19,12 @@ import numpy as np
 from repro.core import pme
 from repro.core.angles import proximity_matrix
 from repro.core.hc import hierarchical_clustering
-from repro.core.svd import client_signature
+from repro.core.svd import batched_client_signatures, bucket_samples
+
+
+# Max clients per vmapped signature batch: bounds peak host memory of the
+# padded (B, N, M_bucket) stack while leaving the compile count O(#buckets).
+SIG_BATCH_MAX = 64
 
 
 @dataclass
@@ -30,7 +35,12 @@ class PACFLConfig:
     linkage: str = "average"
     svd_method: str = "exact"      # "exact" | "randomized" | "randomized_tsgemm"
     n_clusters: Optional[int] = None  # fixed cluster count overrides beta when set
-    use_pallas_proximity: bool = False
+    # Proximity backend dispatch (see repro.core.angles.proximity_matrix):
+    # "auto" | "jnp" | "jnp_blocked" | "pallas".
+    proximity_backend: str = "auto"
+    # Client tile edge for the blocked/pallas paths; None picks the
+    # backend's tuned default (64 blocked, 8 pallas kernel tile).
+    proximity_block: Optional[int] = None
 
 
 @dataclass
@@ -60,6 +70,8 @@ class PACFLClustering:
             measure=self.config.measure,
             linkage=self.config.linkage,
             old_labels=self.labels,
+            backend=self.config.proximity_backend,
+            block_size=self.config.proximity_block,
         )
         extra_bytes = int(U_new.size * U_new.dtype.itemsize)
         return PACFLClustering(
@@ -82,26 +94,67 @@ def compute_signatures(
     ``client_data[k]`` is the data matrix ``D_k`` (N features x M_k samples).
     Clients may own different numbers of samples; signatures all have shape
     (N, p).
+
+    Ragged clients are grouped into shape buckets (sample counts rounded up
+    to the next power of two, padded with zero columns — zero columns don't
+    change the left singular basis) and each bucket runs one vmapped
+    truncated-SVD batch.  Compile count is O(#buckets), not O(K); the
+    regression test in ``tests/test_recompilation.py`` locks this in via the
+    trace counter in ``repro.core.svd``.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
-    sigs = []
+    K = len(client_data)
+    if K == 0:
+        raise ValueError("compute_signatures needs at least one client")
+    n = int(client_data[0].shape[0])
+
+    buckets: dict[int, list[int]] = {}
     for k, D in enumerate(client_data):
-        sub = jax.random.fold_in(key, k)
-        sigs.append(client_signature(D, config.p, method=config.svd_method, key=sub))
-    return jnp.stack(sigs)
+        if D.ndim != 2 or int(D.shape[0]) != n:
+            raise ValueError(
+                f"client {k}: expected ({n}, M_k) data matrix, got {tuple(D.shape)}"
+            )
+        buckets.setdefault(bucket_samples(int(D.shape[1])), []).append(k)
+
+    # Cap clients per vmapped call so peak memory stays bounded by
+    # SIG_BATCH_MAX padded clients, not a whole bucket's dataset.  Each bucket
+    # costs at most two compiles (full chunks + one remainder), keeping the
+    # total O(#buckets).  Chunk results land in a host-side buffer — a device
+    # scatter per chunk would copy the whole (K, n, p) array each time.
+    U = np.zeros((K, n, config.p), dtype=np.float32)
+    for mb, idxs in sorted(buckets.items()):
+        for lo in range(0, len(idxs), SIG_BATCH_MAX):
+            chunk = idxs[lo : lo + SIG_BATCH_MAX]
+            D_stack = jnp.stack(
+                [
+                    jnp.pad(
+                        jnp.asarray(client_data[k], dtype=jnp.float32),
+                        ((0, 0), (0, mb - client_data[k].shape[1])),
+                    )
+                    for k in chunk
+                ]
+            )
+            keys = jnp.stack([jax.random.fold_in(key, k) for k in chunk])
+            sigs = batched_client_signatures(
+                D_stack, keys, config.p, config.svd_method
+            )
+            U[np.asarray(chunk)] = np.asarray(sigs)
+    return jnp.asarray(U)
 
 
 def cluster_clients(
     U_stack: jnp.ndarray, config: PACFLConfig
 ) -> PACFLClustering:
     """Server-side one-shot phase: proximity matrix + HC -> clustering."""
-    if config.use_pallas_proximity:
-        from repro.core.angles import proximity_matrix_pallas
-
-        A = np.asarray(proximity_matrix_pallas(U_stack))
-    else:
-        A = np.asarray(proximity_matrix(U_stack, measure=config.measure))
+    A = np.asarray(
+        proximity_matrix(
+            U_stack,
+            measure=config.measure,
+            backend=config.proximity_backend,
+            block_size=config.proximity_block,
+        )
+    )
     if config.n_clusters is not None:
         labels = hierarchical_clustering(
             A, n_clusters=config.n_clusters, linkage=config.linkage

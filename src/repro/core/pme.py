@@ -13,7 +13,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.angles import proximity_matrix
+from repro.core.angles import cross_proximity
 from repro.core.hc import hierarchical_clustering
 
 
@@ -23,8 +23,14 @@ def extend_proximity_matrix(
     U_new: jnp.ndarray,
     *,
     measure: str = "eq3",
+    backend: str = "auto",
+    block_size: Optional[int] = None,
 ) -> tuple[np.ndarray, jnp.ndarray]:
     """Algorithm 2: returns (A_extended, U_extended).
+
+    Only the new block columns/rows are computed — an (M+B, B) cross block
+    through :func:`repro.core.angles.cross_proximity` — so extension costs
+    O((M+B) * B) angle evaluations, never a fresh (M+B)^2 recomputation.
 
     Parameters
     ----------
@@ -36,14 +42,20 @@ def extend_proximity_matrix(
     M = A_old.shape[0]
     B = U_new.shape[0]
     U_ext = jnp.concatenate([U_old, U_new], axis=0)
-    # Only the new block columns/rows need fresh angle computations; reuse the
-    # full kernel over the stacked matrix for the cross terms then splice.
-    A_full = np.asarray(proximity_matrix(U_ext, measure=measure))
+    C = np.asarray(
+        cross_proximity(
+            U_ext, U_new, measure=measure, backend=backend, block_size=block_size
+        )
+    )  # (M+B, B)
     A_ext = np.zeros((M + B, M + B), dtype=A_old.dtype)
     A_ext[:M, :M] = A_old
-    A_ext[:M, M:] = A_full[:M, M:]
-    A_ext[M:, :M] = A_full[M:, :M]
-    A_ext[M:, M:] = A_full[M:, M:]
+    A_ext[:M, M:] = C[:M]
+    A_ext[M:, :M] = C[:M].T
+    # newcomer-vs-newcomer block: symmetrize and zero the diagonal exactly,
+    # matching the hygiene pass of the square kernels.
+    nn = 0.5 * (C[M:] + C[M:].T)
+    np.fill_diagonal(nn, 0.0)
+    A_ext[M:, M:] = nn
     return A_ext, U_ext
 
 
@@ -63,6 +75,8 @@ def assign_newcomers(
     measure: str = "eq3",
     linkage: str = "average",
     old_labels: Optional[np.ndarray] = None,
+    backend: str = "auto",
+    block_size: Optional[int] = None,
 ) -> tuple[np.ndarray, jnp.ndarray, NewcomerAssignment]:
     """Algorithm 3: extend A, re-run HC with the same beta, read off newcomer ids.
 
@@ -72,7 +86,9 @@ def assign_newcomers(
     """
     M = np.asarray(A_old).shape[0]
     B = U_new.shape[0]
-    A_ext, U_ext = extend_proximity_matrix(A_old, U_old, U_new, measure=measure)
+    A_ext, U_ext = extend_proximity_matrix(
+        A_old, U_old, U_new, measure=measure, backend=backend, block_size=block_size
+    )
     labels = hierarchical_clustering(A_ext, beta, linkage=linkage)
 
     if old_labels is not None:

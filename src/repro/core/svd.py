@@ -16,11 +16,22 @@ Two implementations:
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# Lowering-count shim: a traced function body runs Python exactly once per
+# compilation-cache miss, so bumping a plain Counter inside the jitted body
+# counts compilations without reaching into JAX internals.  Tests use this to
+# lock in the O(#shape-buckets) behavior of the batched signature path.
+TRACE_COUNTS: collections.Counter[str] = collections.Counter()
+
+
+def _note_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
 
 
 def _orthonormalize(Y: jax.Array) -> jax.Array:
@@ -100,6 +111,46 @@ def client_signature(
         return randomized_truncated_svd(D, p, key=key)
     if method == "randomized_tsgemm":
         return randomized_truncated_svd(D, p, key=key, use_tsgemm=True)
+    raise ValueError(f"unknown SVD method: {method!r}")
+
+
+def bucket_samples(m: int, *, min_bucket: int = 16) -> int:
+    """Round a client sample count up to its shape bucket (next power of two).
+
+    Ragged ``M_k`` values collapse onto O(log(max_M)) distinct padded widths,
+    so the batched signature path compiles O(#buckets) times instead of once
+    per distinct client shape.
+    """
+    if m <= 0:
+        raise ValueError(f"sample count must be positive, got {m}")
+    b = min_bucket
+    while b < m:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("p", "method"))
+def batched_client_signatures(
+    D_stack: jax.Array, keys: jax.Array, p: int, method: str
+) -> jax.Array:
+    """vmapped :func:`client_signature` over a same-shape client batch.
+
+    ``D_stack`` is (B, N, M_bucket) — ragged clients padded with zero columns
+    to a common bucket width.  Zero columns add only zero singular values, so
+    the p-truncated *left* singular basis is unchanged (up to column sign,
+    which every angle downstream takes ``abs`` of).
+    """
+    _note_trace("batched_client_signatures")
+    if method == "exact":
+        return jax.vmap(lambda D: truncated_svd(D, p))(D_stack)
+    if method == "randomized":
+        return jax.vmap(
+            lambda D, k: randomized_truncated_svd(D, p, key=k)
+        )(D_stack, keys)
+    if method == "randomized_tsgemm":
+        return jax.vmap(
+            lambda D, k: randomized_truncated_svd(D, p, key=k, use_tsgemm=True)
+        )(D_stack, keys)
     raise ValueError(f"unknown SVD method: {method!r}")
 
 

@@ -497,7 +497,10 @@ class PACFL(Strategy):
 
     def setup(self, key, data):
         self._build(data)
-        # one-shot phase: clients compute + upload U_p signatures
+        # One-shot phase: clients compute + upload U_p signatures.  The ragged
+        # (features, samples) matrices go through the shape-bucketed batched
+        # SVD, and the proximity matrix through the backend dispatch selected
+        # by cfg.pacfl.proximity_backend — both scale knobs live on the config.
         mats = [
             jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
         ]  # (features, samples)

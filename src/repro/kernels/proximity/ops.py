@@ -6,11 +6,11 @@ import jax
 from repro.kernels.proximity.proximity import proximity_pallas
 
 
-def proximity(U: jax.Array, *, bk: int = 8) -> jax.Array:
-    """(K, n, p) signatures -> (K, K) Eq.-3 proximity matrix (degrees).
+def proximity(U: jax.Array, *, measure: str = "eq3", bk: int = 8) -> jax.Array:
+    """(K, n, p) signatures -> (K, K) proximity matrix (degrees).
 
-    Runs the Pallas kernel; on CPU backends it executes in interpret mode
-    (the TPU path compiles the same kernel).
+    ``measure`` is "eq3" (trace angle) or "eq2" (smallest principal angle).
+    ``proximity_pallas`` auto-detects the backend: compiled on TPU,
+    interpret mode elsewhere.
     """
-    interpret = jax.default_backend() != "tpu"
-    return proximity_pallas(U, bk=bk, interpret=interpret)
+    return proximity_pallas(U, measure=measure, bk=bk)

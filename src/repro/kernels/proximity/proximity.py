@@ -1,13 +1,18 @@
-"""Pallas TPU kernel: blocked principal-angle proximity matrix (Eq. 3).
+"""Pallas TPU kernel: blocked principal-angle proximity matrix (Eq. 2 + Eq. 3).
 
 The PACFL server's hot spot: for K clients with signatures ``U in (K, n, p)``
-compute ``A[i, j] = sum_r arccos(|U_i[:, r] . U_j[:, r]|)`` (degrees).
+compute either
+
+* ``measure="eq3"`` — ``A[i, j] = sum_r arccos(|U_i[:, r] . U_j[:, r]|)``, or
+* ``measure="eq2"`` — the smallest principal angle, ``arccos`` of the largest
+  singular value of each per-pair ``p x p`` Gram block ``U_i^T U_j``.
 
 Tiling: 2-D grid over (bi, bj) client-pair tiles.  Each cell loads two
 ``(bk, n, p)`` signature slabs into VMEM, forms the (bk*p, bk*p) Gram tile on
-the MXU with one matmul, gathers the per-pair diagonals, and writes a
-``(bk, bk)`` tile of A.  O(K^2 n p^2) flops fully on-chip; n*bk*p*4 bytes of
-VMEM per operand slab.
+the MXU with one matmul, then reduces per pair: eq3 gathers the diagonals;
+eq2 runs a fixed-sweep cyclic Jacobi eigensolve of the p x p matrices
+``G^T G`` fully on-chip (p is tiny — 2-5 in the paper — so the rotations are
+cheap VPU work).  O(K^2 n p^2) flops, n*bk*p*4 bytes of VMEM per operand slab.
 """
 from __future__ import annotations
 
@@ -17,8 +22,44 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Cyclic Jacobi sweeps for the eq2 eigensolve.  Convergence is quadratic;
+# for p <= 8 this reaches f32 roundoff with margin.
+_JACOBI_SWEEPS = 6
 
-def _proximity_kernel(ui_ref, uj_ref, a_ref, *, bk: int, p: int):
+
+def _jacobi_max_eig(B: jax.Array, p: int) -> jax.Array:
+    """Largest eigenvalue of symmetric PSD ``B`` (..., p, p), fixed sweeps.
+
+    Classic cyclic Jacobi: for each (i, j) plane, rotate by the angle that
+    zeroes ``B[i, j]``.  All indices are static Python ints, so the loop
+    unrolls into a fixed sequence of batched rank-2 updates — no dynamic
+    gather/scatter, which Pallas TPU lowering does not support.
+    """
+    if p == 1:
+        return B[..., 0, 0]
+    eye = jnp.eye(p, dtype=B.dtype)
+    for _ in range(_JACOBI_SWEEPS):
+        for i in range(p - 1):
+            for j in range(i + 1, p):
+                bii = B[..., i, i]
+                bjj = B[..., j, j]
+                bij = B[..., i, j]
+                # rotation zeroing B[i, j]: tan(2 theta) = 2 b_ij / (b_jj - b_ii)
+                theta = 0.5 * jnp.arctan2(2.0 * bij, bjj - bii)
+                c = jnp.cos(theta)[..., None, None]
+                s = jnp.sin(theta)[..., None, None]
+                ei, ej = eye[i], eye[j]                  # one-hot rows (p,)
+                Eii = ei[:, None] * ei[None, :]
+                Ejj = ej[:, None] * ej[None, :]
+                Eij = ei[:, None] * ej[None, :]
+                Eji = ej[:, None] * ei[None, :]
+                J = eye + (c - 1.0) * (Eii + Ejj) + s * (Eij - Eji)
+                B = jnp.swapaxes(J, -1, -2) @ B @ J
+    diag = B * eye
+    return jnp.max(jnp.sum(diag, axis=-1), axis=-1)
+
+
+def _proximity_kernel(ui_ref, uj_ref, a_ref, *, bk: int, p: int, measure: str):
     ui = ui_ref[...].astype(jnp.float32)              # (bk, n, p)
     uj = uj_ref[...].astype(jnp.float32)
     n = ui.shape[1]
@@ -28,26 +69,40 @@ def _proximity_kernel(ui_ref, uj_ref, a_ref, *, bk: int, p: int):
     M = jax.lax.dot_general(
         uif, ujf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                                  # (bk*p, bk*p)
-    # entry (a*p + r, b*p + c): keep r == c, sum over r
     M4 = M.reshape(bk, p, bk, p)
-    diag = jnp.abs(jnp.diagonal(M4, axis1=1, axis2=3))  # (bk, bk, p)
-    diag = jnp.clip(diag, 0.0, 1.0)
-    a_ref[...] = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    if measure == "eq3":
+        # entry (a*p + r, b*p + c): keep r == c, sum over r
+        diag = jnp.abs(jnp.diagonal(M4, axis1=1, axis2=3))  # (bk, bk, p)
+        diag = jnp.clip(diag, 0.0, 1.0)
+        a_ref[...] = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    elif measure == "eq2":
+        # per-pair Gram block G = U_i^T U_j, largest singular value via the
+        # top eigenvalue of G^T G (on-chip p x p Jacobi)
+        G = M4.transpose(0, 2, 1, 3)                        # (bk, bk, p, p)
+        B = jnp.swapaxes(G, -1, -2) @ G                     # (bk, bk, p, p)
+        lam = _jacobi_max_eig(B, p)
+        smax = jnp.sqrt(jnp.clip(lam, 0.0, 1.0))
+        a_ref[...] = jnp.degrees(jnp.arccos(jnp.clip(smax, 0.0, 1.0)))
+    else:
+        raise ValueError(f"unknown measure: {measure!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
-def proximity_pallas(U: jax.Array, *, bk: int = 8, interpret: bool = True) -> jax.Array:
-    """U: (K, n, p) -> (K, K) proximity matrix in degrees."""
+@functools.partial(jax.jit, static_argnames=("measure", "bk", "interpret"))
+def _proximity_pallas_jit(
+    U: jax.Array, *, measure: str, bk: int, interpret: bool
+) -> jax.Array:
     K, n, p = U.shape
     pad = (-K) % bk
     if pad:
-        # Padded clients get identity-like signatures; their rows/cols are
-        # sliced off below.
+        # jnp.pad writes ZERO signatures for the padded clients, so their
+        # Gram blocks are zero and both measures read arccos(0) = 90 degrees
+        # there.  That is only safe because the padded rows/cols are sliced
+        # off below — never feed the padded matrix to clustering directly.
         U = jnp.pad(U, ((0, pad), (0, 0), (0, 0)))
     Kp = U.shape[0]
     grid = (Kp // bk, Kp // bk)
     A = pl.pallas_call(
-        functools.partial(_proximity_kernel, bk=bk, p=p),
+        functools.partial(_proximity_kernel, bk=bk, p=p, measure=measure),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, n, p), lambda i, j: (i, 0, 0)),
@@ -60,3 +115,22 @@ def proximity_pallas(U: jax.Array, *, bk: int = 8, interpret: bool = True) -> ja
     A = A[:K, :K]
     A = 0.5 * (A + A.T)
     return A * (1.0 - jnp.eye(K, dtype=A.dtype))
+
+
+def proximity_pallas(
+    U: jax.Array,
+    *,
+    measure: str = "eq3",
+    bk: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """U: (K, n, p) -> (K, K) proximity matrix in degrees.
+
+    ``interpret=None`` (default) auto-detects the backend like
+    ``ops.proximity`` does: compiled on TPU, interpret mode elsewhere.  Pass
+    an explicit bool only to force one mode (e.g. interpret-on-TPU for
+    debugging).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _proximity_pallas_jit(U, measure=measure, bk=bk, interpret=interpret)

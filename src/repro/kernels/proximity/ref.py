@@ -1,14 +1,20 @@
-"""Pure-jnp oracle for the proximity-matrix kernel (Eq. 3, degrees)."""
+"""Pure-jnp oracle for the proximity-matrix kernel (Eq. 2 / Eq. 3, degrees)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def proximity_ref(U: jnp.ndarray) -> jnp.ndarray:
-    """U: (K, n, p) orthonormal signatures -> (K, K) trace-angle degrees."""
+def proximity_ref(U: jnp.ndarray, measure: str = "eq3") -> jnp.ndarray:
+    """U: (K, n, p) orthonormal signatures -> (K, K) angle matrix, degrees."""
     U = U.astype(jnp.float32)
     G = jnp.einsum("inp,jnq->ijpq", U, U)
-    diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
-    A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    if measure == "eq3":
+        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
+        A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+    elif measure == "eq2":
+        s = jnp.linalg.svd(G, compute_uv=False)
+        A = jnp.degrees(jnp.arccos(jnp.clip(s[..., 0], -1.0, 1.0)))
+    else:
+        raise ValueError(f"unknown measure: {measure!r}")
     A = 0.5 * (A + A.T)
     return A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))

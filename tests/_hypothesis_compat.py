@@ -1,0 +1,75 @@
+"""Degrade-gracefully shim for ``hypothesis``.
+
+The container may not ship hypothesis (the repo's requirements-dev.txt lists
+it, but tier-1 must collect without it).  When the real package is available
+we re-export it untouched; otherwise ``@given`` degrades each property test
+into a small fixed grid of example-based cases via ``pytest.mark.parametrize``
+— the suite keeps its coverage shape instead of erroring at collection.
+
+Only the strategy combinators the test-suite uses are shimmed
+(``integers``, ``sampled_from``, ``booleans``), and the fallback ``given``
+supports the test-class methods used here (first parameter ``self``).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which branch imports
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Examples:
+        """A strategy stand-in carrying a few representative examples."""
+
+        def __init__(self, examples):
+            self.examples = tuple(examples)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(lo, hi):
+            # endpoints only: keeps the fallback grid small while still
+            # hitting both boundary shapes
+            return _Examples(sorted({lo, hi}))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Examples(options[:2])
+
+        @staticmethod
+        def booleans():
+            return _Examples([False, True])
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            cases = list(
+                itertools.islice(
+                    itertools.product(*(s.examples for s in strats)), 8
+                )
+            )
+
+            # No functools.wraps: pytest must see the (self, _case)
+            # signature, not the wrapped property signature, or it would
+            # look for fixtures named after the strategy arguments.
+            def wrapper(self, _case):
+                return fn(self, *_case)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return pytest.mark.parametrize(
+                "_case", cases, ids=[repr(c) for c in cases]
+            )(wrapper)
+
+        return deco

@@ -1,4 +1,9 @@
-"""FL substrate tests: partitioners, strategies, trainer, communication."""
+"""FL substrate tests: partitioners, strategies, trainer, communication.
+
+Federation configs here are deliberately trimmed (few rounds/clients) so
+tier-1 stays fast; the full-scale runs carry ``@pytest.mark.slow`` and are
+deselected by default (see pytest.ini) — opt in with ``pytest -m slow``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +73,7 @@ def test_strategy_runs_and_learns(small_fed, name):
 
 
 def test_pacfl_beats_fedavg_on_label_skew(ds):
+    """Trimmed fast config — the paper-scale version is the ``slow`` variant."""
     clients = label_skew(ds, 16, rho=0.2, seed=2, test_per_client=80)
     init_fn = lambda key: init_mlp_clf(key, ds.dim, ds.n_classes, hidden=(64,))
     # eq3 discriminates label support best on label-skew (see EXPERIMENTS.md);
@@ -77,6 +83,38 @@ def test_pacfl_beats_fedavg_on_label_skew(ds):
     r_pacfl = run_federation("pacfl", clients, mlp_clf_apply, init_fn, cfg, seed=0)
     r_fedavg = run_federation("fedavg", clients, mlp_clf_apply, init_fn, cfg, seed=0)
     assert r_pacfl.final_mean > r_fedavg.final_mean
+
+
+@pytest.mark.slow
+def test_pacfl_beats_fedavg_on_label_skew_full(ds):
+    """Full-scale (multi-minute) version of the label-skew comparison.
+
+    Marked ``slow``: deselected by default, run with ``pytest -m slow``.
+    """
+    clients = label_skew(ds, 24, rho=0.2, seed=2, test_per_client=80)
+    init_fn = lambda key: init_mlp_clf(key, ds.dim, ds.n_classes, hidden=(64,))
+    cfg = FLConfig(rounds=30, sample_frac=0.5, local_epochs=3, batch_size=16,
+                   lr=0.05, pacfl=PACFLConfig(p=3, beta=175.0, measure="eq3"))
+    r_pacfl = run_federation("pacfl", clients, mlp_clf_apply, init_fn, cfg, seed=0)
+    r_fedavg = run_federation("fedavg", clients, mlp_clf_apply, init_fn, cfg, seed=0)
+    # fedavg partially recovers at long horizons, so the gap narrows — the
+    # ordering, not a fixed margin, is the stable claim at this scale.
+    assert r_pacfl.final_mean > r_fedavg.final_mean
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_full_scale(ds, name):
+    """Every strategy at fuller scale (more rounds/clients than the trimmed
+    default above).  Marked ``slow``; run with ``pytest -m slow``."""
+    clients = label_skew(ds, 20, rho=0.2, seed=4, test_per_client=80)
+    init_fn = lambda key: init_mlp_clf(key, ds.dim, ds.n_classes, hidden=(64,))
+    cfg = FLConfig(rounds=16, sample_frac=0.4, local_epochs=3, batch_size=16,
+                   lr=0.05, pacfl=PACFLConfig(p=3, beta=20.0, measure="eq2"))
+    res = run_federation(name, clients, mlp_clf_apply, init_fn, cfg,
+                         seed=0, eval_every=4)
+    assert np.isfinite(res.final_mean)
+    assert res.final_mean > 0.15, (name, res.final_mean)
 
 
 def test_ifca_downloads_all_cluster_models(small_fed):

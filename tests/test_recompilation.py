@@ -1,0 +1,106 @@
+"""Regression guard: batched signatures compile O(#shape-buckets), not O(K).
+
+The seed implementation re-jitted ``truncated_svd`` once per distinct client
+sample count — a fresh XLA compile per ragged client.  The bucketed-vmap path
+pads clients to power-of-two sample buckets and runs one vmapped batch per
+bucket, so the compile count is bounded by the number of buckets.
+
+Compilations are observed through the lowering-count shim in
+``repro.core.svd`` (``TRACE_COUNTS``): the jitted batch function bumps a
+Python counter in its traced body, which executes exactly once per
+compilation-cache miss.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import svd
+from repro.core.pacfl import PACFLConfig, compute_signatures
+from repro.core.svd import bucket_samples
+
+
+def _ragged_clients(n_clients, n_features=24, lo=20, hi=300, seed=0):
+    rng = np.random.default_rng(seed)
+    ms = rng.integers(lo, hi, size=n_clients)
+    return [jnp.asarray(rng.normal(size=(n_features, int(m)))) for m in ms], ms
+
+
+class TestBucketing:
+    def test_bucket_is_power_of_two_and_covers(self):
+        for m in [1, 3, 16, 17, 100, 256, 257, 5000]:
+            b = bucket_samples(m)
+            assert b >= m
+            assert b & (b - 1) == 0  # power of two
+
+    def test_bucket_rejects_empty(self):
+        with pytest.raises(ValueError):
+            bucket_samples(0)
+
+
+class TestRecompilation:
+    def test_compiles_per_bucket_not_per_client(self):
+        """64 ragged clients must compile O(#buckets) times (issue acceptance)."""
+        data, ms = _ragged_clients(64, lo=20, hi=300, seed=1)
+        n_buckets = len({bucket_samples(int(m)) for m in ms})
+        assert n_buckets < 8 < 64  # the scenario is genuinely ragged
+
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        U = compute_signatures(data, PACFLConfig(p=3))
+        compiles = svd.TRACE_COUNTS["batched_client_signatures"] - before
+        assert U.shape == (64, 24, 3)
+        assert compiles <= n_buckets, (
+            f"{compiles} compiles for {n_buckets} shape buckets — "
+            "per-client recompilation regressed"
+        )
+
+    def test_large_bucket_chunks_without_per_chunk_compiles(self):
+        """Buckets larger than SIG_BATCH_MAX split into capped host-memory
+        chunks: at most full-chunk + remainder compiles (2 per bucket)."""
+        from repro.core.pacfl import SIG_BATCH_MAX
+
+        n_clients = SIG_BATCH_MAX + 6  # one full chunk + a remainder
+        rng = np.random.default_rng(5)
+        data = [jnp.asarray(rng.normal(size=(16, 30))) for _ in range(n_clients)]
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        U = compute_signatures(data, PACFLConfig(p=2))
+        compiles = svd.TRACE_COUNTS["batched_client_signatures"] - before
+        assert U.shape == (n_clients, 16, 2)
+        assert compiles <= 2  # single shape bucket -> full chunk + remainder
+
+    def test_recall_same_shapes_does_not_recompile(self):
+        data, _ = _ragged_clients(16, seed=2)
+        cfg = PACFLConfig(p=2)
+        compute_signatures(data, cfg)
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        compute_signatures(data, cfg)
+        assert svd.TRACE_COUNTS["batched_client_signatures"] == before
+
+    def test_randomized_method_also_bucketed(self):
+        data, ms = _ragged_clients(12, hi=150, seed=3)
+        n_buckets = len({bucket_samples(int(m)) for m in ms})
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        U = compute_signatures(
+            data, PACFLConfig(p=3, svd_method="randomized"),
+            key=jax.random.PRNGKey(7),
+        )
+        compiles = svd.TRACE_COUNTS["batched_client_signatures"] - before
+        assert U.shape[0] == 12
+        assert compiles <= n_buckets
+
+    def test_padding_preserves_signature_subspace(self):
+        """Zero-padding columns must not move the left singular basis."""
+        from repro.core.angles import principal_angles
+        from repro.core.svd import truncated_svd
+
+        rng = np.random.default_rng(4)
+        # decaying spectrum -> well-separated singular values
+        B = np.linalg.qr(rng.normal(size=(32, 5)))[0]
+        C = rng.normal(size=(5, 70)) * (0.7 ** np.arange(5))[:, None]
+        D = jnp.asarray(B @ C)
+        U_plain = truncated_svd(D, 3)
+        U_padded = truncated_svd(jnp.pad(D, ((0, 0), (0, 58))), 3)
+        ang = np.degrees(np.asarray(principal_angles(U_plain, U_padded)))
+        # f32 LAPACK roundoff differs between the padded/unpadded factorizations;
+        # the subspace must still agree to a small fraction of a degree.
+        assert ang.max() < 0.5, ang
