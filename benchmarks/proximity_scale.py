@@ -3,15 +3,25 @@
 The one-shot phase's server cost is the (K, K) proximity matrix.  The dense
 einsum reference materializes a (K, K, p, p) Gram tensor — ~10 GB of f32 at
 K=10k, p=5 — while the blocked backend tiles it into (bk, bk) client blocks
-(peak intermediate O(bk^2 p^2)).  This sweep times both (plus the Pallas
-kernel where sensible) across K in {128, 512, 2048} and both paper measures,
-verifies cross-backend parity at K=128, and writes
-``BENCH_proximity_scale.json`` at the repo root.
+(peak intermediate O(bk^2 p^2)) and the sharded backend additionally splits
+row strips across local devices.  eq2 runs on the shared measure core's
+batched Jacobi eigensolve in the scalable paths (the dense reference keeps
+the LAPACK svd as the oracle).  This sweep times the backends across K in
+{128, 512, 2048} and both paper measures, verifies cross-backend parity at
+K=128, runs the sharded engine under a forced 4-device host platform
+(K=512, asserting bitwise-identical HC labels vs the single-device blocked
+backend), and writes ``BENCH_proximity_scale.json`` at the repo root.
 
-Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full]
+Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
+
+``--quick`` is the CI parity smoke: K=128 only, every backend and eq2
+solver against the dense reference plus the 4-device label check at K=128,
+no json rewrite, nonzero exit on any parity failure.
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
 """
 import json
+import os
+import subprocess
 import sys
 from pathlib import Path
 
@@ -21,12 +31,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ROOT, timed
-from repro.core.angles import proximity_matrix
+from benchmarks.common import ROOT
+from repro.core.angles import _DEFAULT_BLOCK, proximity_matrix
 
 KS = (128, 512, 2048)
 MEASURES = ("eq2", "eq3")
-BLOCK_SIZE = 64
+# block_size=None: each backend's tuned default (blocked: 64 eq3 / 96 eq2,
+# sharded: 64) — what PACFLConfig.proximity_block=None also uses.  The
+# pallas kernel gets a large tile instead: off-TPU it runs in interpret
+# mode, where its tuned bk=8 would mean O(K^2/64) Python-level grid steps.
+BLOCK_SIZE = None
+PALLAS_BLOCK = 64
+
+
+def _block_for(backend):
+    return PALLAS_BLOCK if backend == "pallas" else BLOCK_SIZE
 # The dense path's (K, K, p, p) tensor passes ~400 MB at K=2048; keep the
 # reference to sizes where it is the sensible baseline.
 DENSE_MAX_K = 512
@@ -35,6 +54,15 @@ DENSE_MAX_K = 512
 PALLAS_MAX_K_INTERPRET = 128
 PARITY_K = 128
 PARITY_TOL_DEG = 1e-3
+SHARDED_DEVICES = 4
+SHARDED_K = 512
+
+# The eq2 solver each backend resolves to under eq2_solver="auto" — recorded
+# so the json says what was actually measured.
+_EQ2_SOLVER = {
+    "jnp": "svd", "jnp_blocked": "jacobi", "jnp_sharded": "jacobi",
+    "pallas": "jacobi",
+}
 
 
 def _signatures(K: int, n: int = 64, p: int = 5) -> jax.Array:
@@ -49,39 +77,153 @@ def _backends_for(K: int) -> list[str]:
     if K <= DENSE_MAX_K:
         backends.append("jnp")
     backends.append("jnp_blocked")
+    backends.append("jnp_sharded")
     on_tpu = jax.default_backend() == "tpu"
     if on_tpu or K <= PALLAS_MAX_K_INTERPRET:
         backends.append("pallas")
     return backends
 
 
-def run(quick: bool = True):
+# Runs in a subprocess with --xla_force_host_platform_device_count: compares
+# the sharded engine against the single-device blocked backend and reports
+# timings + HC-label identity on a non-trivial partition.
+_SHARDED_SCRIPT = r"""
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.angles import proximity_matrix
+from repro.core.hc import hierarchical_clustering
+
+K = int(sys.argv[1])
+U = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(
+    jax.random.normal(jax.random.PRNGKey(0), (K, 64, 5))
+)
+out = {"ndev": len(jax.devices()), "K": K, "rows": []}
+for measure in ("eq2", "eq3"):
+    times = {}
+    mats = {}
+    for backend in ("jnp_blocked", "jnp_sharded"):
+        fn = lambda: proximity_matrix(U, measure, backend=backend)
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times[backend] = (time.perf_counter() - t0) * 1e6
+        mats[backend] = np.asarray(fn())
+    beta = float(np.quantile(mats["jnp_blocked"][mats["jnp_blocked"] > 0], 0.02))
+    lb = hierarchical_clustering(mats["jnp_blocked"], beta=beta)
+    ls = hierarchical_clustering(mats["jnp_sharded"], beta=beta)
+    out["rows"].append({
+        "measure": measure,
+        "us_blocked": times["jnp_blocked"],
+        "us_sharded": times["jnp_sharded"],
+        "max_dev_deg": float(np.abs(mats["jnp_blocked"] - mats["jnp_sharded"]).max()),
+        "hc_labels_identical": bool((lb == ls).all()),
+        "n_clusters": int(lb.max()) + 1,
+    })
+print("RESULT" + json.dumps(out))
+"""
+
+
+def _sharded_multi_device(K: int, ndev: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}"
+    ).strip()
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT, str(K)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded subprocess failed:\n{proc.stderr[-4000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+def _parity_rows(record, rows):
+    """K=128: every backend and every eq2 solver against the dense svd ref."""
+    U = _signatures(PARITY_K)
+    ref = {
+        m: np.asarray(proximity_matrix(U, m, backend="jnp")) for m in MEASURES
+    }
+    checks = [(m, b, "auto") for m in MEASURES for b in _backends_for(PARITY_K)]
+    checks += [("eq2", "jnp_blocked", s) for s in ("jacobi", "eigh", "svd")]
+    for measure, backend, solver in checks:
+        got = np.asarray(
+            proximity_matrix(
+                U, measure, backend=backend, block_size=_block_for(backend),
+                eq2_solver=solver,
+            )
+        )
+        err = float(np.abs(got - ref[measure]).max())
+        entry = {
+            "K": PARITY_K,
+            "measure": measure,
+            "backend": backend,
+            "eq2_solver": solver if measure == "eq2" else None,
+            "max_err_vs_ref_deg": err,
+        }
+        record["parity"].append(entry)
+        rows.append((
+            f"proximity_scale/parity_{measure}_{backend}_{solver}",
+            None,
+            f"maxerr={err:.2e}deg",
+        ))
+
+
+def run(quick: bool = True, parity_only: bool = False):
     rows = []
     record = {
         "jax_backend": jax.default_backend(),
-        "block_size": BLOCK_SIZE,
+        "block_size": {**_DEFAULT_BLOCK, "pallas": PALLAS_BLOCK},
         "parity_tol_deg": PARITY_TOL_DEG,
+        "eq2_solver_by_backend": _EQ2_SOLVER,
         "sweep": [],
         "parity": [],
     }
 
-    for K in KS:
-        U = _signatures(K)
-        ref = None
-        if K <= DENSE_MAX_K:
-            ref = {
-                m: np.asarray(proximity_matrix(U, m, backend="jnp"))
-                for m in MEASURES
-            }
-        iters = 1 if (quick and K >= 2048) else 3
-        for measure in MEASURES:
-            for backend in _backends_for(K):
-                fn = lambda: proximity_matrix(
-                    U, measure, backend=backend, block_size=BLOCK_SIZE
+    _parity_rows(record, rows)
+
+    if not parity_only:
+        import time as _time
+
+        for K in KS:
+            U = _signatures(K)
+            ref = None
+            if K <= DENSE_MAX_K:
+                ref = {
+                    m: np.asarray(proximity_matrix(U, m, backend="jnp"))
+                    for m in MEASURES
+                }
+            # Interleaved timing: one round-robin pass over every
+            # (measure, backend) combo per iteration, so transient load on
+            # shared CI boxes hits all combos alike and derived ratios
+            # (e.g. eq2 vs eq3 on the same backend) stay meaningful.
+            iters = 1 if (quick and K >= 2048) else (5 if K >= 2048 else 3)
+            combos = [
+                (m, b) for m in MEASURES for b in _backends_for(K)
+            ]
+            fns = {}
+            for measure, backend in combos:
+                fn = lambda measure=measure, backend=backend: proximity_matrix(
+                    U, measure, backend=backend, block_size=_block_for(backend)
                 )
-                us = timed(fn, warmup=1, iters=iters)
+                jax.block_until_ready(fn())  # warmup/compile
+                fns[(measure, backend)] = fn
+            samples = {c: [] for c in combos}
+            for _ in range(iters):
+                for c in combos:
+                    t0 = _time.perf_counter()
+                    jax.block_until_ready(fns[c]())
+                    samples[c].append((_time.perf_counter() - t0) * 1e6)
+            for measure, backend in combos:
+                us = sorted(samples[(measure, backend)])[iters // 2]
                 err = (
-                    float(np.abs(np.asarray(fn()) - ref[measure]).max())
+                    float(
+                        np.abs(
+                            np.asarray(fns[(measure, backend)]()) - ref[measure]
+                        ).max()
+                    )
                     if ref is not None
                     else None
                 )
@@ -89,6 +231,9 @@ def run(quick: bool = True):
                     "K": K,
                     "measure": measure,
                     "backend": backend,
+                    "eq2_solver": (
+                        _EQ2_SOLVER[backend] if measure == "eq2" else None
+                    ),
                     "us_per_call": us,
                     "max_err_vs_ref_deg": err,
                 }
@@ -98,24 +243,42 @@ def run(quick: bool = True):
                     us,
                     "" if err is None else f"maxerr={err:.2e}deg",
                 ))
-                if K == PARITY_K and err is not None:
-                    record["parity"].append(entry)
-                    assert err <= PARITY_TOL_DEG, (
-                        f"{backend}/{measure} diverged from the einsum "
-                        f"reference at K={PARITY_K}: {err:.3e} deg"
-                    )
+
+    # sharded engine under a forced multi-device host platform; in the quick
+    # smoke a small K keeps the subprocess cheap while still exercising the
+    # 4-way row-strip split + label identity.
+    sharded_K = PARITY_K if parity_only else SHARDED_K
+    sharded = _sharded_multi_device(sharded_K, SHARDED_DEVICES)
+    record["sharded_multi_device"] = sharded
+    for r in sharded["rows"]:
+        rows.append((
+            f"proximity_scale/sharded{SHARDED_DEVICES}dev_K{sharded_K}_{r['measure']}",
+            r["us_sharded"],
+            f"labels_identical={r['hc_labels_identical']}",
+        ))
 
     parity_ok = all(
         e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
+    ) and all(
+        r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
+        for r in sharded["rows"]
     )
     record["parity_ok"] = parity_ok
     rows.append((
-        "proximity_scale/parity_K128_ok", None, str(parity_ok)
+        f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
     ))
+    for e in record["parity"]:
+        assert e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG, (
+            f"{e['backend']}/{e['measure']}/{e['eq2_solver']} diverged from "
+            f"the einsum reference at K={PARITY_K}: "
+            f"{e['max_err_vs_ref_deg']:.3e} deg"
+        )
+    assert parity_ok, "sharded engine diverged from the blocked backend"
 
-    out = ROOT / "BENCH_proximity_scale.json"
-    out.write_text(json.dumps(record, indent=2))
-    rows.append(("proximity_scale/json", None, str(out)))
+    if not parity_only:
+        out = ROOT / "BENCH_proximity_scale.json"
+        out.write_text(json.dumps(record, indent=2))
+        rows.append(("proximity_scale/json", None, str(out)))
     return rows
 
 
@@ -125,7 +288,11 @@ if __name__ == "__main__":
     from benchmarks.common import emit
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--full", action="store_true", help="3 timing iters at every K")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="parity smoke only: no timing sweep, no json rewrite",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    emit(run(quick=not args.full))
+    emit(run(quick=not args.full, parity_only=args.quick))

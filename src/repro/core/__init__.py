@@ -8,6 +8,7 @@ from repro.core.angles import (
     trace_angle_deg,
 )
 from repro.core.hc import beta_sweep, hierarchical_clustering, n_clusters_for_beta
+from repro.core.measures import EQ2_SOLVERS, measure_from_gram
 from repro.core.pacfl import (
     PACFLClustering,
     PACFLConfig,
@@ -15,7 +16,11 @@ from repro.core.pacfl import (
     compute_signatures,
     one_shot_clustering,
 )
-from repro.core.pme import assign_newcomers, extend_proximity_matrix
+from repro.core.pme import (
+    assign_newcomers,
+    extend_proximity_matrix,
+    remap_onto_old_ids,
+)
 from repro.core.svd import (
     batched_client_signatures,
     bucket_samples,
@@ -26,6 +31,8 @@ from repro.core.svd import (
 
 __all__ = [
     "PROXIMITY_BACKENDS",
+    "EQ2_SOLVERS",
+    "measure_from_gram",
     "principal_angles",
     "proximity_matrix",
     "cross_proximity",
@@ -41,6 +48,7 @@ __all__ = [
     "one_shot_clustering",
     "assign_newcomers",
     "extend_proximity_matrix",
+    "remap_onto_old_ids",
     "batched_client_signatures",
     "bucket_samples",
     "client_signature",

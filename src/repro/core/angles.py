@@ -4,28 +4,44 @@ Implements Eq. 1-3 of the paper.  Given orthonormal bases ``U in R^{n x p}``
 and ``W in R^{n x q}`` the principal angles are ``arccos`` of the singular
 values of ``U^T W``.  The paper's two proximity measures:
 
-* Eq. 2 — smallest principal angle ``Theta_1`` (needs the SVD of ``U^T W``).
+* Eq. 2 — smallest principal angle ``Theta_1`` (needs the largest singular
+  value of ``U^T W``).
 * Eq. 3 — ``tr(arccos(U^T W))`` over *identically ordered* singular-vector
   pairs (no inner SVD; the measure the paper calls the more rigorous one).
 
 Angles are reported in **degrees** to match the paper's Tables 1 and 6.
 
+Every backend reduces its Gram blocks through the shared measure core in
+:mod:`repro.core.measures` — one implementation of the eq2/eq3 reductions,
+with eq2 solved by a batched fixed-sweep Jacobi eigensolve by default
+(``eq2_solver="jacobi"``; ``"eigh"``/``"svd"`` kept as parity fallbacks).
+
 Backends
 --------
 :func:`proximity_matrix` is the single entry point for the (K, K) matrix and
-dispatches across three implementations:
+dispatches across four implementations:
 
 * ``"jnp"`` — the einsum reference.  Materializes the full (K, K, p, p) Gram
   tensor; simplest and fastest for small K, but O(K^2 p^2) peak memory
-  (~10 GB of f32 at K=10k, p=5).
+  (~10 GB of f32 at K=10k, p=5).  Its eq2 defaults to the LAPACK ``svd``
+  solver so it stays the independent oracle the fast paths are tested
+  against.
 * ``"jnp_blocked"`` — tiles the computation into (bk, bk) client blocks with
-  ``lax.map``; peak intermediate memory is O(bk^2 p^2) plus the (K, K)
+  ``lax.scan``; peak intermediate memory is O(bk^2 p^2) plus the (K, K)
   output, so the server scales to K far beyond the dense path.
+* ``"jnp_sharded"`` — the blocked computation with the i-block (row strip)
+  axis sharded across all local devices via ``jax.make_mesh`` +
+  ``shard_map``: each device owns K/ndev rows of the output and streams
+  (bk, bk) Gram blocks against the replicated signature stack, so the
+  (K, K) output and the O(K^2 n p^2) flops split across devices while each
+  device's peak intermediate stays O(bk^2 p^2).  Reproducible on CPU with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 * ``"pallas"`` — the TPU kernel in ``repro.kernels.proximity`` (interpret
-  mode off-TPU); supports both measures.
+  mode off-TPU); supports both measures (eq2 via the same Jacobi core).
 
 ``"auto"`` picks pallas on TPU, else the dense path for small K and the
-blocked path beyond ``_AUTO_BLOCKED_MIN_K`` clients.
+blocked path beyond ``_AUTO_BLOCKED_MIN_K`` clients; ``"jnp_sharded"`` is
+opt-in (it is a wash on a single device).
 """
 from __future__ import annotations
 
@@ -34,8 +50,12 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-PROXIMITY_BACKENDS = ("auto", "jnp", "jnp_blocked", "pallas")
+from repro.core.measures import EQ2_SOLVERS, measure_from_gram
+
+PROXIMITY_BACKENDS = ("auto", "jnp", "jnp_blocked", "jnp_sharded", "pallas")
 
 # "auto" switches from the dense einsum to the blocked path at this K: below
 # it the (K, K, p, p) tensor is tens of MB and einsum wins on latency.
@@ -62,34 +82,26 @@ def trace_angle_deg(U: jax.Array, W: jax.Array) -> jax.Array:
     return jnp.degrees(jnp.sum(jnp.arccos(jnp.abs(d))))
 
 
-def _measure_from_gram(G: jax.Array, measure: str) -> jax.Array:
-    """(..., p, p) pairwise Gram blocks -> (...,) angles in degrees."""
-    if measure == "eq3":
-        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=-2, axis2=-1)), 0.0, 1.0)
-        return jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
-    if measure == "eq2":
-        s = jnp.linalg.svd(G, compute_uv=False)
-        smax = jnp.clip(s[..., 0], -1.0, 1.0)  # largest cosine
-        return jnp.degrees(jnp.arccos(smax))
-    raise ValueError(f"unknown measure: {measure!r}")
-
-
 def _hygiene(A: jax.Array) -> jax.Array:
     """Exact symmetry and exact zeros on the diagonal."""
     A = 0.5 * (A + A.T)
     return A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))
 
 
-@functools.partial(jax.jit, static_argnames=("measure",))
-def _proximity_dense(U_stack: jax.Array, measure: str) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("measure", "eq2_solver"))
+def _proximity_dense(U_stack: jax.Array, measure: str, eq2_solver: str) -> jax.Array:
     """Einsum reference: materializes the full (K, K, p, p) Gram tensor."""
     U_stack = U_stack.astype(jnp.float32)
     G = jnp.einsum("inp,jnq->ijpq", U_stack, U_stack)
-    return _hygiene(_measure_from_gram(G, measure))
+    return _hygiene(measure_from_gram(G, measure, eq2_solver=eq2_solver))
 
 
-@functools.partial(jax.jit, static_argnames=("measure", "block_size"))
-def _proximity_blocked(U_stack: jax.Array, measure: str, block_size: int) -> jax.Array:
+@functools.partial(
+    jax.jit, static_argnames=("measure", "block_size", "eq2_solver")
+)
+def _proximity_blocked(
+    U_stack: jax.Array, measure: str, block_size: int, eq2_solver: str
+) -> jax.Array:
     """Tiled path: (bk, bk) client blocks, upper-triangular tiles only.
 
     Peak intermediate memory is one (bk, bk, p, p) Gram block per step plus
@@ -113,8 +125,10 @@ def _proximity_blocked(U_stack: jax.Array, measure: str, block_size: int) -> jax
         i, j = idx
         Ui = jnp.take(blocks, i, axis=0)
         Uj = jnp.take(blocks, j, axis=0)
+        # einsum Gram + shared reduction: on CPU the einsum beats the
+        # kernel-style flat matmul inside the scan (better MKL dispatch)
         G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
-        tile = _measure_from_gram(G, measure)      # (bk, bk)
+        tile = measure_from_gram(G, measure, eq2_solver=eq2_solver)  # (bk, bk)
         A = jax.lax.dynamic_update_slice(A, tile.T, (j * bk, i * bk))
         A = jax.lax.dynamic_update_slice(A, tile, (i * bk, j * bk))
         return A, None
@@ -123,6 +137,84 @@ def _proximity_blocked(U_stack: jax.Array, measure: str, block_size: int) -> jax
     idxs = jnp.stack([jnp.asarray(ii), jnp.asarray(jj)], axis=1)
     A, _ = jax.lax.scan(body, A0, idxs)
     return _hygiene(A[:K, :K])
+
+
+# --- device-sharded engine ------------------------------------------------
+#
+# Row strips of the output are owned by devices: device d computes rows
+# [d * Kp/ndev, (d+1) * Kp/ndev) of A against the replicated signature
+# stack, streaming (bk, bk) Gram blocks through the shared measure core.
+# Both triangles are computed (the transpose tile lives on another device),
+# so the sharded path trades the 2x triangular saving for N-way parallelism
+# and an N-fold smaller per-device output resident set.
+
+
+def _strip_blocks(rows: jax.Array, full: jax.Array, measure, bk, eq2_solver):
+    """(Kl, n, p) local rows x (Kp, n, p) replicated -> (Kl, Kp) angles."""
+    Kl, n, p = rows.shape
+    nbi = Kl // bk
+    nbj = full.shape[0] // bk
+    rb = rows.reshape(nbi, bk, n, p)
+    fb = full.reshape(nbj, bk, n, p)
+
+    def strip(Ui):
+        def cell(Uj):
+            G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+            return measure_from_gram(G, measure, eq2_solver=eq2_solver)
+
+        s = jax.lax.map(cell, fb)  # (nbj, bk, bk)
+        return s.transpose(1, 0, 2).reshape(bk, nbj * bk)
+
+    return jax.lax.map(strip, rb).reshape(nbi * bk, nbj * bk)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_cross_fn(ndev: int, measure: str, bk: int, eq2_solver: str):
+    mesh = jax.make_mesh((ndev,), ("i",))
+
+    def local(rows, full):
+        return _strip_blocks(rows, full, measure, bk, eq2_solver)
+
+    return jax.jit(
+        shard_map(local, mesh=mesh, in_specs=(P("i"), P()), out_specs=P("i"))
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_square_fn(ndev: int, measure: str, bk: int, eq2_solver: str):
+    # The square computation is the cross computation against itself: rows
+    # sharded, the full stack replicated.
+    mapped = _sharded_cross_fn(ndev, measure, bk, eq2_solver)
+    return jax.jit(lambda Up: mapped(Up, Up))
+
+
+def _pad_rows(U: jax.Array, multiple: int) -> jax.Array:
+    pad = (-U.shape[0]) % multiple
+    return jnp.pad(U, ((0, pad), (0, 0), (0, 0))) if pad else U
+
+
+def _proximity_sharded(
+    U_stack: jax.Array, measure: str, block_size: int, eq2_solver: str
+) -> jax.Array:
+    U_stack = U_stack.astype(jnp.float32)
+    K = U_stack.shape[0]
+    ndev = len(jax.devices())
+    Up = _pad_rows(U_stack, block_size * ndev)
+    A = _sharded_square_fn(ndev, measure, block_size, eq2_solver)(Up)
+    return _hygiene(A[:K, :K])
+
+
+def _cross_sharded(
+    U_a: jax.Array, U_b: jax.Array, measure: str, block_size: int, eq2_solver: str
+) -> jax.Array:
+    U_a = U_a.astype(jnp.float32)
+    U_b = U_b.astype(jnp.float32)
+    Ka, Kb = U_a.shape[0], U_b.shape[0]
+    ndev = len(jax.devices())
+    Ua = _pad_rows(U_a, block_size * ndev)
+    Ub = _pad_rows(U_b, block_size)
+    C = _sharded_cross_fn(ndev, measure, block_size, eq2_solver)(Ua, Ub)
+    return C[:Ka, :Kb]
 
 
 def _resolve_backend(backend: str, K: int) -> str:
@@ -137,10 +229,42 @@ def _resolve_backend(backend: str, K: int) -> str:
     return "jnp" if K < _AUTO_BLOCKED_MIN_K else "jnp_blocked"
 
 
-# Per-backend tile defaults: the lax.map path amortizes best with big client
-# tiles; the Pallas kernel's tuned edge is small (VMEM slabs + K padded to a
-# multiple of bk).  An explicit block_size overrides both.
-_DEFAULT_BLOCK = {"jnp_blocked": 64, "pallas": 8}
+# Per-backend tile defaults: the scan/map paths amortize best with big client
+# tiles — and eq2's per-tile arithmetic (the packed Jacobi) is heavy enough
+# that a larger tile wins again over the scan overhead, so the blocked
+# default is measure-aware.  The sharded default stays at 64 so the row pad
+# (a multiple of bk * ndev) stays small, and the Pallas kernel's tuned edge
+# is small (VMEM slabs + K padded to a multiple of bk).  An explicit
+# block_size overrides all of these.
+_DEFAULT_BLOCK = {
+    "jnp_blocked": {"eq3": 64, "eq2": 96},
+    "jnp_sharded": {"eq3": 64, "eq2": 64},
+    "pallas": {"eq3": 8, "eq2": 8},
+}
+
+# Per-backend eq2 default: the dense reference keeps the LAPACK svd so it
+# stays an independent oracle; the scalable paths use the batched Jacobi
+# eigensolve (the pallas kernel lowers only jacobi on-chip).
+_DEFAULT_EQ2_SOLVER = {
+    "jnp": "svd",
+    "jnp_blocked": "jacobi",
+    "jnp_sharded": "jacobi",
+    "pallas": "jacobi",
+}
+
+
+def _resolve_eq2_solver(eq2_solver: str, resolved_backend: str) -> str:
+    if eq2_solver == "auto":
+        return _DEFAULT_EQ2_SOLVER[resolved_backend]
+    if eq2_solver not in EQ2_SOLVERS:
+        raise ValueError(
+            f"unknown eq2 solver: {eq2_solver!r} (want 'auto' or one of {EQ2_SOLVERS})"
+        )
+    if resolved_backend == "pallas" and eq2_solver != "jacobi":
+        raise ValueError(
+            "the pallas backend only lowers the 'jacobi' eq2 solver on-chip"
+        )
+    return eq2_solver
 
 
 def proximity_matrix(
@@ -149,6 +273,7 @@ def proximity_matrix(
     *,
     backend: str = "auto",
     block_size: int | None = None,
+    eq2_solver: str = "auto",
 ) -> jax.Array:
     """Proximity matrix A (K x K, degrees) from stacked signatures.
 
@@ -156,9 +281,14 @@ def proximity_matrix(
     ----------
     U_stack: (K, n, p) stacked orthonormal client signatures.
     measure: "eq2" (smallest principal angle) or "eq3" (trace of arccos).
-    backend: "auto" | "jnp" | "jnp_blocked" | "pallas" — see module docstring.
-    block_size: client tile edge for the blocked and pallas paths; None picks
-        the backend's tuned default (64 blocked, 8 pallas).
+    backend: "auto" | "jnp" | "jnp_blocked" | "jnp_sharded" | "pallas" —
+        see module docstring.
+    block_size: client tile edge for the blocked/sharded/pallas paths; None
+        picks the backend's tuned default (blocked: 64 eq3 / 96 eq2,
+        sharded: 64, pallas: 8).
+    eq2_solver: "auto" | "jacobi" | "eigh" | "svd" — largest-singular-value
+        solver for eq2 (see repro.core.measures).  "auto" keeps the dense
+        reference on svd and the scalable paths on the batched Jacobi.
 
     All backends agree to ~1e-3 degrees on orthonormal f32 inputs; the dense
     einsum path is the reference the others are tested against.
@@ -166,11 +296,14 @@ def proximity_matrix(
     if measure not in ("eq2", "eq3"):
         raise ValueError(f"unknown measure: {measure!r}")
     resolved = _resolve_backend(backend, int(U_stack.shape[0]))
+    solver = _resolve_eq2_solver(eq2_solver, resolved)
     if resolved == "jnp":
-        return _proximity_dense(U_stack, measure)
-    bk = block_size if block_size is not None else _DEFAULT_BLOCK[resolved]
+        return _proximity_dense(U_stack, measure, solver)
+    bk = block_size if block_size is not None else _DEFAULT_BLOCK[resolved][measure]
     if resolved == "jnp_blocked":
-        return _proximity_blocked(U_stack, measure, bk)
+        return _proximity_blocked(U_stack, measure, bk, solver)
+    if resolved == "jnp_sharded":
+        return _proximity_sharded(U_stack, measure, bk, solver)
     from repro.kernels.proximity import ops as pops
 
     # bk is honored as the kernel tile edge: K is padded to a multiple of it
@@ -179,41 +312,31 @@ def proximity_matrix(
     return pops.proximity(U_stack, measure=measure, bk=bk)
 
 
-@functools.partial(jax.jit, static_argnames=("measure",))
-def _cross_dense(U_a: jax.Array, U_b: jax.Array, measure: str) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("measure", "eq2_solver"))
+def _cross_dense(
+    U_a: jax.Array, U_b: jax.Array, measure: str, eq2_solver: str
+) -> jax.Array:
     U_a = U_a.astype(jnp.float32)
     U_b = U_b.astype(jnp.float32)
     G = jnp.einsum("inp,jnq->ijpq", U_a, U_b)
-    return _measure_from_gram(G, measure)
+    return measure_from_gram(G, measure, eq2_solver=eq2_solver)
 
 
-@functools.partial(jax.jit, static_argnames=("measure", "block_size"))
+@functools.partial(
+    jax.jit, static_argnames=("measure", "block_size", "eq2_solver")
+)
 def _cross_blocked(
-    U_a: jax.Array, U_b: jax.Array, measure: str, block_size: int
+    U_a: jax.Array, U_b: jax.Array, measure: str, block_size: int, eq2_solver: str
 ) -> jax.Array:
     """Both operands are tiled, so peak intermediate memory is one
     (bk, bk, p, p) Gram block regardless of which side is the huge one."""
     U_a = U_a.astype(jnp.float32)
     U_b = U_b.astype(jnp.float32)
-    Ka, n, p = U_a.shape
-    Kb = U_b.shape[0]
+    Ka, Kb = U_a.shape[0], U_b.shape[0]
     bk = block_size
-    Ua = jnp.pad(U_a, ((0, (-Ka) % bk), (0, 0), (0, 0)))
-    Ub = jnp.pad(U_b, ((0, (-Kb) % bk), (0, 0), (0, 0)))
-    na = Ua.shape[0] // bk
-    nbb = Ub.shape[0] // bk
-    blocks_a = Ua.reshape(na, bk, n, p)
-    blocks_b = Ub.reshape(nbb, bk, n, p)
-
-    def strip(Ui):  # (bk, n, p) -> (bk, nbb * bk)
-        def cell(Uj):
-            G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
-            return _measure_from_gram(G, measure)  # (bk, bk)
-
-        s = jax.lax.map(cell, blocks_b)            # (nbb, bk, bk)
-        return s.transpose(1, 0, 2).reshape(bk, nbb * bk)
-
-    C = jax.lax.map(strip, blocks_a).reshape(na * bk, nbb * bk)
+    Ua = _pad_rows(U_a, bk)
+    Ub = _pad_rows(U_b, bk)
+    C = _strip_blocks(Ua, Ub, measure, bk, eq2_solver)
     return C[:Ka, :Kb]
 
 
@@ -224,22 +347,32 @@ def cross_proximity(
     *,
     backend: str = "auto",
     block_size: int | None = None,
+    eq2_solver: str = "auto",
 ) -> jax.Array:
     """Rectangular angle block: (Ka, n, p) x (Kb, n, p) -> (Ka, Kb) degrees.
 
     The PME workhorse (Algorithm 2): newcomers need only the cross block
-    against seen clients, never a fresh (Ka+Kb)^2 recomputation.  The pallas
-    backend is square-only, so it falls back to the blocked path here.
+    against seen clients, never a fresh (Ka+Kb)^2 recomputation.  The
+    ``jnp_sharded`` backend shards the U_a row-strip axis across local
+    devices (U_b replicated).  The pallas backend is square-only, so it
+    falls back to the blocked path here.
     """
     if measure not in ("eq2", "eq3"):
         raise ValueError(f"unknown measure: {measure!r}")
     # auto must consider BOTH sides: the dense path materializes a
     # (Ka, Kb, p, p) tensor, so a small Ka with a huge Kb still blows up.
     resolved = _resolve_backend(backend, max(int(U_a.shape[0]), int(U_b.shape[0])))
+    if resolved == "pallas":
+        # square-only kernel: the blocked path executes instead, so solver
+        # validation and the block default must follow the actual executor
+        resolved = "jnp_blocked"
+    solver = _resolve_eq2_solver(eq2_solver, resolved)
     if resolved == "jnp":
-        return _cross_dense(U_a, U_b, measure)
-    bk = block_size if block_size is not None else _DEFAULT_BLOCK["jnp_blocked"]
-    return _cross_blocked(U_a, U_b, measure, bk)
+        return _cross_dense(U_a, U_b, measure, solver)
+    bk = block_size if block_size is not None else _DEFAULT_BLOCK[resolved][measure]
+    if resolved == "jnp_sharded":
+        return _cross_sharded(U_a, U_b, measure, bk, solver)
+    return _cross_blocked(U_a, U_b, measure, bk, solver)
 
 
 def proximity_matrix_pallas(U_stack: jax.Array, measure: str = "eq3") -> jax.Array:

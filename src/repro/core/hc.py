@@ -8,7 +8,14 @@ target count (used for ablations vs IFCA).
 
 Implemented from scratch (Lance-Williams updates) so the framework has no
 SciPy dependency at runtime; tests cross-check against
-``scipy.cluster.hierarchy`` as an oracle.
+``scipy.cluster.hierarchy`` as an oracle (including at K=512).
+
+The merge loop is O(K^2): a per-cluster nearest-neighbor cache (``nn`` /
+``nn_dist``) replaces the old global ``D[np.ix_(sub, sub)]`` re-slice (an
+O(K^2) copy per merge, O(K^3) total — it dominated the one-shot phase once
+the proximity matrix itself got fast).  Each merge costs one vectorized
+Lance-Williams row update plus argmin rescans only for clusters whose
+cached neighbor was touched by the merge.
 """
 from __future__ import annotations
 
@@ -54,43 +61,70 @@ def hierarchical_clustering(
 
     # Working copy of cluster-cluster distances; `size[i]` tracks members for
     # average linkage; `active[i]` marks live clusters; `members` the client
-    # ids merged into cluster i.
+    # ids merged into cluster i.  `nn[i]` caches the argmin of row i (first
+    # occurrence on ties, matching a fresh row-major argmin) and `nn_dist[i]`
+    # its distance, so the closest pair is an O(K) vectorized lookup instead
+    # of an O(K^2) submatrix scan.
     D = A.copy()
     np.fill_diagonal(D, np.inf)
     active = np.ones(K, dtype=bool)
     size = np.ones(K, dtype=np.int64)
     members: list[list[int]] = [[i] for i in range(K)]
     remaining = K
+    nn = D.argmin(axis=1)
+    nn_dist = D[np.arange(K), nn]
 
     target = 1 if n_clusters is None else max(int(n_clusters), 1)
     while remaining > target:
-        sub = np.where(active)[0]
-        block = D[np.ix_(sub, sub)]
-        flat = np.argmin(block)
-        ii, jj = divmod(flat, block.shape[1])
-        i, j = int(sub[ii]), int(sub[jj])
-        dmin = block[ii, jj]
+        # Closest active pair.  For symmetric D the cached row minima cover
+        # every pair, and argmin-over-rows + first-occurrence-per-row picks
+        # the same (i, j) as a row-major scan of the full active submatrix.
+        masked = np.where(active, nn_dist, np.inf)
+        i = int(np.argmin(masked))
+        dmin = float(masked[i])
         if beta is not None and dmin > beta:
             break
+        j = int(nn[i])
         if i > j:
             i, j = j, i
-        # Lance-Williams update of distances from merged (i u j) to others.
-        for k in np.where(active)[0]:
-            if k == i or k == j:
-                continue
-            if linkage == "single":
-                d = min(D[i, k], D[j, k])
-            elif linkage == "complete":
-                d = max(D[i, k], D[j, k])
-            else:  # average (UPGMA)
-                d = (size[i] * D[i, k] + size[j] * D[j, k]) / (size[i] + size[j])
-            D[i, k] = D[k, i] = d
+        # Vectorized Lance-Williams update of distances from merged (i u j);
+        # inactive entries hold inf in both rows and stay inf under all
+        # three updates.
+        di, dj = D[i], D[j]
+        if linkage == "single":
+            new = np.minimum(di, dj)
+        elif linkage == "complete":
+            new = np.maximum(di, dj)
+        else:  # average (UPGMA)
+            new = (size[i] * di + size[j] * dj) / (size[i] + size[j])
+        new[i] = new[j] = np.inf
+        D[i, :] = new
+        D[:, i] = new
+        D[j, :] = np.inf
+        D[:, j] = np.inf
         size[i] += size[j]
         members[i].extend(members[j])
         active[j] = False
-        D[j, :] = np.inf
-        D[:, j] = np.inf
+        nn_dist[j] = np.inf
         remaining -= 1
+
+        # Nearest-neighbor maintenance.  Clusters whose cached neighbor was
+        # i or j rescan their row (the merged cluster may have moved away
+        # under complete/average linkage); everyone else can only have been
+        # improved by the merged row, a vectorized compare.  The tie rule
+        # (equal distance, lower index wins) mirrors np.argmin.
+        touched = active & ((nn == i) | (nn == j))
+        touched[i] = False
+        for k in np.where(touched)[0]:
+            nn[k] = D[k].argmin()
+            nn_dist[k] = D[k, nn[k]]
+        others = active & ~touched
+        others[i] = False
+        better = others & ((new < nn_dist) | ((new == nn_dist) & (i < nn)))
+        nn[better] = i
+        nn_dist[better] = new[better]
+        nn[i] = D[i].argmin()
+        nn_dist[i] = D[i, nn[i]]
 
     labels = np.full(K, -1, dtype=np.int64)
     next_id = 0

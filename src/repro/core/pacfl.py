@@ -36,10 +36,13 @@ class PACFLConfig:
     svd_method: str = "exact"      # "exact" | "randomized" | "randomized_tsgemm"
     n_clusters: Optional[int] = None  # fixed cluster count overrides beta when set
     # Proximity backend dispatch (see repro.core.angles.proximity_matrix):
-    # "auto" | "jnp" | "jnp_blocked" | "pallas".
+    # "auto" | "jnp" | "jnp_blocked" | "jnp_sharded" | "pallas".
+    # "jnp_sharded" splits row strips of the (K, K) computation across all
+    # local devices (square AND cross/PME blocks) — the scale-out knob.
     proximity_backend: str = "auto"
-    # Client tile edge for the blocked/pallas paths; None picks the
-    # backend's tuned default (64 blocked, 8 pallas kernel tile).
+    # Client tile edge for the blocked/sharded/pallas paths; None picks the
+    # backend's tuned default (blocked: 64 eq3 / 96 eq2; sharded: 64;
+    # pallas kernel tile: 8).
     proximity_block: Optional[int] = None
 
 
@@ -61,7 +64,12 @@ class PACFLClustering:
         return np.where(self.labels == z)[0]
 
     def extend(self, U_new: jnp.ndarray) -> "PACFLClustering":
-        """Algorithms 2+3: admit newcomers, preserving seen-client ids."""
+        """Algorithms 2+3: admit newcomers, preserving seen-client ids.
+
+        Honors the same clustering criterion as the one-shot phase: a set
+        ``config.n_clusters`` overrides ``config.beta`` here exactly as it
+        does in :func:`cluster_clients`.
+        """
         A_ext, U_ext, assignment = pme.assign_newcomers(
             self.A,
             self.U,
@@ -69,6 +77,7 @@ class PACFLClustering:
             self.config.beta,
             measure=self.config.measure,
             linkage=self.config.linkage,
+            n_clusters=self.config.n_clusters,
             old_labels=self.labels,
             backend=self.config.proximity_backend,
             block_size=self.config.proximity_block,

@@ -66,6 +66,46 @@ class NewcomerAssignment:
     new_cluster: np.ndarray      # (B,) bool — True if newcomer formed a new cluster
 
 
+def remap_onto_old_ids(
+    labels: np.ndarray, old_labels: np.ndarray, M: int
+) -> np.ndarray:
+    """Map extended-cluster ids onto the old cluster ids, collision-safe.
+
+    Each extended cluster claims the old id that dominates its seen-client
+    members.  Two distinct extended clusters can share a dominant old id
+    (HC on the extended matrix may split an old cluster once newcomers
+    reshape the merge order); naively both would collapse onto that id,
+    silently merging clusters the HC kept apart.  Claims are therefore
+    resolved by overlap size — the extended cluster with the larger
+    seen-client overlap keeps the old id (ties break to the smaller
+    extended id, i.e. first client occurrence) — and every losing or
+    newcomer-only cluster receives a fresh id above the old range, so the
+    number of distinct clusters is preserved exactly.
+    """
+    old_labels = np.asarray(old_labels)
+    # (extended id, dominant old id or None, overlap count) per cluster
+    claims: list[tuple[int, Optional[int], int]] = []
+    for c in np.unique(labels):
+        olds = old_labels[labels[:M] == c] if M else np.array([])
+        if olds.size:
+            vals, counts = np.unique(olds, return_counts=True)
+            top = int(np.argmax(counts))
+            claims.append((int(c), int(vals[top]), int(counts[top])))
+        else:
+            claims.append((int(c), None, 0))
+    mapping: dict[int, int] = {}
+    claimed: set[int] = set()
+    next_new = int(np.max(old_labels)) + 1 if M else 0
+    for c, old, count in sorted(claims, key=lambda t: (-t[2], t[0])):
+        if old is not None and old not in claimed:
+            mapping[c] = old
+            claimed.add(old)
+        else:
+            mapping[c] = next_new
+            next_new += 1
+    return np.array([mapping[int(c)] for c in labels], dtype=np.int64)
+
+
 def assign_newcomers(
     A_old: np.ndarray,
     U_old: jnp.ndarray,
@@ -74,36 +114,32 @@ def assign_newcomers(
     *,
     measure: str = "eq3",
     linkage: str = "average",
+    n_clusters: Optional[int] = None,
     old_labels: Optional[np.ndarray] = None,
     backend: str = "auto",
     block_size: Optional[int] = None,
 ) -> tuple[np.ndarray, jnp.ndarray, NewcomerAssignment]:
-    """Algorithm 3: extend A, re-run HC with the same beta, read off newcomer ids.
+    """Algorithm 3: extend A, re-run HC with the same criterion, read off ids.
 
-    Returns (A_extended, U_extended, assignment).  If ``old_labels`` is given,
-    newcomer labels are remapped onto the old cluster ids via majority overlap
-    so existing cluster identities are preserved for the caller.
+    Returns (A_extended, U_extended, assignment).  ``n_clusters``, when set,
+    overrides ``beta`` exactly as in the one-shot phase (fixed cluster
+    count).  If ``old_labels`` is given, newcomer labels are remapped onto
+    the old cluster ids via :func:`remap_onto_old_ids` so existing cluster
+    identities are preserved for the caller.
     """
     M = np.asarray(A_old).shape[0]
-    B = U_new.shape[0]
     A_ext, U_ext = extend_proximity_matrix(
         A_old, U_old, U_new, measure=measure, backend=backend, block_size=block_size
     )
-    labels = hierarchical_clustering(A_ext, beta, linkage=linkage)
+    if n_clusters is not None:
+        labels = hierarchical_clustering(
+            A_ext, n_clusters=n_clusters, linkage=linkage
+        )
+    else:
+        labels = hierarchical_clustering(A_ext, beta, linkage=linkage)
 
     if old_labels is not None:
-        # Map each extended-cluster id to the dominant old id among seen clients.
-        mapping: dict[int, int] = {}
-        next_new = int(np.max(old_labels)) + 1 if M else 0
-        for c in np.unique(labels):
-            olds = old_labels[labels[:M] == c] if M else np.array([])
-            if olds.size:
-                vals, counts = np.unique(olds, return_counts=True)
-                mapping[int(c)] = int(vals[np.argmax(counts)])
-            else:
-                mapping[int(c)] = next_new
-                next_new += 1
-        labels = np.array([mapping[int(c)] for c in labels], dtype=np.int64)
+        labels = remap_onto_old_ids(labels, old_labels, M)
 
     newcomer_labels = labels[M:]
     seen = set(labels[:M].tolist())

@@ -9,10 +9,12 @@ compute either
 
 Tiling: 2-D grid over (bi, bj) client-pair tiles.  Each cell loads two
 ``(bk, n, p)`` signature slabs into VMEM, forms the (bk*p, bk*p) Gram tile on
-the MXU with one matmul, then reduces per pair: eq3 gathers the diagonals;
-eq2 runs a fixed-sweep cyclic Jacobi eigensolve of the p x p matrices
-``G^T G`` fully on-chip (p is tiny — 2-5 in the paper — so the rotations are
-cheap VPU work).  O(K^2 n p^2) flops, n*bk*p*4 bytes of VMEM per operand slab.
+the MXU with one matmul, then reduces per pair through the shared measure
+core (``repro.core.measures``): eq3 gathers the diagonals; eq2 runs the
+fixed-sweep packed Jacobi eigensolve of the p x p matrices ``G^T G`` fully
+on-chip (p is tiny — 2-5 in the paper — so the rotations are cheap VPU
+work; all plane indices are static, no dynamic gather/scatter).
+O(K^2 n p^2) flops, n*bk*p*4 bytes of VMEM per operand slab.
 """
 from __future__ import annotations
 
@@ -22,69 +24,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# Cyclic Jacobi sweeps for the eq2 eigensolve.  Convergence is quadratic;
-# for p <= 8 this reaches f32 roundoff with margin.
-_JACOBI_SWEEPS = 6
+from repro.core.measures import measure_tile
 
 
-def _jacobi_max_eig(B: jax.Array, p: int) -> jax.Array:
-    """Largest eigenvalue of symmetric PSD ``B`` (..., p, p), fixed sweeps.
-
-    Classic cyclic Jacobi: for each (i, j) plane, rotate by the angle that
-    zeroes ``B[i, j]``.  All indices are static Python ints, so the loop
-    unrolls into a fixed sequence of batched rank-2 updates — no dynamic
-    gather/scatter, which Pallas TPU lowering does not support.
-    """
-    if p == 1:
-        return B[..., 0, 0]
-    eye = jnp.eye(p, dtype=B.dtype)
-    for _ in range(_JACOBI_SWEEPS):
-        for i in range(p - 1):
-            for j in range(i + 1, p):
-                bii = B[..., i, i]
-                bjj = B[..., j, j]
-                bij = B[..., i, j]
-                # rotation zeroing B[i, j]: tan(2 theta) = 2 b_ij / (b_jj - b_ii)
-                theta = 0.5 * jnp.arctan2(2.0 * bij, bjj - bii)
-                c = jnp.cos(theta)[..., None, None]
-                s = jnp.sin(theta)[..., None, None]
-                ei, ej = eye[i], eye[j]                  # one-hot rows (p,)
-                Eii = ei[:, None] * ei[None, :]
-                Ejj = ej[:, None] * ej[None, :]
-                Eij = ei[:, None] * ej[None, :]
-                Eji = ej[:, None] * ei[None, :]
-                J = eye + (c - 1.0) * (Eii + Ejj) + s * (Eij - Eji)
-                B = jnp.swapaxes(J, -1, -2) @ B @ J
-    diag = B * eye
-    return jnp.max(jnp.sum(diag, axis=-1), axis=-1)
-
-
-def _proximity_kernel(ui_ref, uj_ref, a_ref, *, bk: int, p: int, measure: str):
+def _proximity_kernel(ui_ref, uj_ref, a_ref, *, measure: str):
+    # The whole cell is the shared tile reduction: one MXU matmul forming
+    # every pairwise Gram block, then the static-slice eq3/eq2 reduction
+    # (packed Jacobi for eq2) from the measure core — the same rotation and
+    # clipping code the jnp backends reduce with, so the kernel can differ
+    # from them only by float reduction order, never by algorithm.
     ui = ui_ref[...].astype(jnp.float32)              # (bk, n, p)
     uj = uj_ref[...].astype(jnp.float32)
-    n = ui.shape[1]
-    # One MXU matmul for the whole tile: (bk*p, n) @ (n, bk*p)
-    uif = ui.transpose(0, 2, 1).reshape(bk * p, n)
-    ujf = uj.transpose(0, 2, 1).reshape(bk * p, n)
-    M = jax.lax.dot_general(
-        uif, ujf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                                  # (bk*p, bk*p)
-    M4 = M.reshape(bk, p, bk, p)
-    if measure == "eq3":
-        # entry (a*p + r, b*p + c): keep r == c, sum over r
-        diag = jnp.abs(jnp.diagonal(M4, axis1=1, axis2=3))  # (bk, bk, p)
-        diag = jnp.clip(diag, 0.0, 1.0)
-        a_ref[...] = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
-    elif measure == "eq2":
-        # per-pair Gram block G = U_i^T U_j, largest singular value via the
-        # top eigenvalue of G^T G (on-chip p x p Jacobi)
-        G = M4.transpose(0, 2, 1, 3)                        # (bk, bk, p, p)
-        B = jnp.swapaxes(G, -1, -2) @ G                     # (bk, bk, p, p)
-        lam = _jacobi_max_eig(B, p)
-        smax = jnp.sqrt(jnp.clip(lam, 0.0, 1.0))
-        a_ref[...] = jnp.degrees(jnp.arccos(jnp.clip(smax, 0.0, 1.0)))
-    else:
-        raise ValueError(f"unknown measure: {measure!r}")
+    a_ref[...] = measure_tile(ui, uj, measure, eq2_solver="jacobi")
 
 
 @functools.partial(jax.jit, static_argnames=("measure", "bk", "interpret"))
@@ -102,7 +53,7 @@ def _proximity_pallas_jit(
     Kp = U.shape[0]
     grid = (Kp // bk, Kp // bk)
     A = pl.pallas_call(
-        functools.partial(_proximity_kernel, bk=bk, p=p, measure=measure),
+        functools.partial(_proximity_kernel, measure=measure),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, n, p), lambda i, j: (i, 0, 0)),

@@ -1,20 +1,20 @@
-"""Pure-jnp oracle for the proximity-matrix kernel (Eq. 2 / Eq. 3, degrees)."""
+"""Pure-jnp oracle for the proximity-matrix kernel (Eq. 2 / Eq. 3, degrees).
+
+Reduces through the shared measure core with the LAPACK ``svd`` eq2 solver,
+so the kernel's on-chip Jacobi path is always tested against an independent
+factorization.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core.measures import measure_from_gram
 
 
 def proximity_ref(U: jnp.ndarray, measure: str = "eq3") -> jnp.ndarray:
     """U: (K, n, p) orthonormal signatures -> (K, K) angle matrix, degrees."""
     U = U.astype(jnp.float32)
     G = jnp.einsum("inp,jnq->ijpq", U, U)
-    if measure == "eq3":
-        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=2, axis2=3)), 0.0, 1.0)
-        A = jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
-    elif measure == "eq2":
-        s = jnp.linalg.svd(G, compute_uv=False)
-        A = jnp.degrees(jnp.arccos(jnp.clip(s[..., 0], -1.0, 1.0)))
-    else:
-        raise ValueError(f"unknown measure: {measure!r}")
+    A = measure_from_gram(G, measure, eq2_solver="svd")
     A = 0.5 * (A + A.T)
     return A * (1.0 - jnp.eye(A.shape[0], dtype=A.dtype))

@@ -25,6 +25,7 @@ from repro.core import (
     smallest_principal_angle_deg,
     truncated_svd,
 )
+from repro.core.pme import remap_onto_old_ids
 from repro.core.similarity import bhattacharyya_gaussian, kl_gaussian, mmd_rbf
 
 KEY = jax.random.PRNGKey(0)
@@ -175,6 +176,27 @@ class TestHC:
             labels = hierarchical_clustering(A, n_clusters=z)
             assert labels.max() + 1 == z
 
+    def test_matches_scipy_at_scale(self):
+        """K=512 oracle cross-check for the O(K^2) nearest-neighbor merge
+        loop (regression for the old O(K^3) submatrix re-slice)."""
+        from scipy.cluster.hierarchy import fcluster, linkage
+        from scipy.spatial.distance import squareform
+
+        K = 512
+        rng = np.random.default_rng(7)
+        pts = rng.normal(size=(K, 4)) + rng.integers(0, 6, size=(K, 1)) * 2.5
+        D = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+        for link in ("single", "complete", "average"):
+            ours = hierarchical_clustering(D, beta=3.0, linkage=link)
+            Z = linkage(squareform(D, checks=False), method=link)
+            sp = fcluster(Z, t=3.0, criterion="distance")
+            # same partition up to relabeling: compare co-membership via
+            # a canonical relabel by first occurrence
+            def canon(lbl):
+                seen = {}
+                return np.array([seen.setdefault(x, len(seen)) for x in lbl])
+            assert (canon(ours) == canon(sp)).all(), link
+
 
 # ---------------------------------------------------------------------------
 # One-shot clustering + PME (Algorithms 1-3)
@@ -233,7 +255,58 @@ class TestPACFL:
         cl2 = cl.extend(U_new)
         assert cl2.labels[-1] not in set(cl.labels.tolist())
 
-    @pytest.mark.parametrize("backend", ["jnp_blocked", "pallas"])
+    def test_extend_honors_fixed_n_clusters(self):
+        """Regression: ``extend`` used to re-cluster with ``config.beta``
+        even when ``config.n_clusters`` was set, silently changing the
+        clustering criterion between the one-shot phase and PME."""
+        kb = jax.random.split(KEY, 2)
+        B1, _ = jnp.linalg.qr(jax.random.normal(kb[0], (64, 5)))
+        B2, _ = jnp.linalg.qr(jax.random.normal(kb[1], (64, 5)))
+
+        def make(B, i):
+            C = jax.random.normal(jax.random.fold_in(KEY, i), (5, 150)) \
+                * (0.8 ** jnp.arange(5))[:, None]
+            return B @ C
+
+        data = [make(B1, 1), make(B1, 2), make(B2, 3), make(B2, 4)]
+        # beta tiny: threshold clustering would shatter everything into
+        # singletons, so only the n_clusters override can yield 2 clusters
+        cfg = PACFLConfig(p=3, beta=1e-6, measure="eq2", n_clusters=2)
+        cl = one_shot_clustering(data, cfg)
+        assert cl.n_clusters == 2
+        U_new = compute_signatures([make(B1, 9), make(B2, 10)], cfg)
+        cl2 = cl.extend(U_new)
+        assert cl2.n_clusters == 2
+        assert cl2.labels[4] == cl.labels[0]
+        assert cl2.labels[5] == cl.labels[2]
+        assert (cl2.labels[:4] == cl.labels).all()
+
+    def test_newcomer_remap_collision_keeps_clusters_distinct(self):
+        """Two extended clusters sharing a dominant old id must not be
+        collapsed onto it: the larger overlap wins, the loser gets a fresh
+        id, and seen-client ids from unrelated clusters are untouched."""
+        old = np.array([0, 0, 0, 0, 0, 1, 1])
+        # HC split old cluster 0 into extended clusters 0 (3 members) and
+        # 1 (2 members + the newcomer); old cluster 1 became extended 2.
+        ext = np.array([0, 0, 0, 1, 1, 2, 2, 1])
+        remapped = remap_onto_old_ids(ext, old, M=7)
+        # distinct extended clusters stay distinct
+        assert len(np.unique(remapped)) == len(np.unique(ext))
+        # the bigger fragment keeps old id 0; old cluster 1 keeps id 1
+        assert (remapped[:3] == 0).all()
+        assert (remapped[5:7] == 1).all()
+        # the losing fragment gets a fresh id above the old range
+        assert remapped[3] == remapped[4] == remapped[7] == 2
+        # tie on overlap size: smaller extended id (first occurrence) wins
+        old_t = np.array([0, 0, 0, 0])
+        ext_t = np.array([0, 0, 1, 1, 1])
+        remap_t = remap_onto_old_ids(ext_t, old_t, M=4)
+        assert (remap_t == np.array([0, 0, 1, 1, 1])).all()
+        # newcomer-only clusters always get fresh ids
+        only_new = remap_onto_old_ids(np.array([0, 0, 1]), np.array([5, 5]), M=2)
+        assert (only_new == np.array([5, 5, 6])).all()
+
+    @pytest.mark.parametrize("backend", ["jnp_blocked", "jnp_sharded", "pallas"])
     def test_proximity_backends_in_pipeline(self, backend):
         data = self._four_clients(KEY)
         cfg_ref = PACFLConfig(p=3, beta=20.0, measure="eq3")

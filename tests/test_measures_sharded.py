@@ -1,0 +1,213 @@
+"""Parity suite for the shared measure core and the device-sharded engine.
+
+Covers the eq2 Jacobi eigensolve against its LAPACK fallbacks, all four
+proximity backends (jnp / jnp_blocked / jnp_sharded / pallas) across p in
+{1, 3, 5} and ragged K, and — in a subprocess with
+``--xla_force_host_platform_device_count`` — the 1-vs-N-device behavior of
+the sharded engine, including the K=512 bitwise-identical-HC-labels
+invariant against the single-device blocked backend.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.angles import PROXIMITY_BACKENDS, cross_proximity, proximity_matrix
+from repro.core.hc import hierarchical_clustering
+from repro.core.measures import EQ2_SOLVERS, jacobi_max_eig, measure_from_gram
+
+KEY = jax.random.PRNGKey(0)
+NON_AUTO = [b for b in PROXIMITY_BACKENDS if b != "auto"]
+TOL_DEG = 1e-3
+
+
+def _signatures(K, n=40, p=3, key=KEY):
+    X = jax.random.normal(key, (K, n, p))
+    return jax.vmap(lambda x: jnp.linalg.qr(x)[0])(X)
+
+
+def _clustered_signatures(K, n=40, p=3, key=KEY):
+    """Near-identical subspaces: smax near 1, the arccos-sensitive regime."""
+    B0, _ = jnp.linalg.qr(jax.random.normal(key, (n, p)))
+    return jnp.stack([
+        jnp.linalg.qr(
+            B0 + 0.01 * jax.random.normal(jax.random.fold_in(key, i), (n, p))
+        )[0]
+        for i in range(K)
+    ])
+
+
+class TestJacobiEigensolve:
+    @pytest.mark.parametrize("p", [1, 2, 3, 5, 7])
+    def test_matches_numpy_eigh(self, p):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(500, p, p)).astype(np.float32)
+        B = np.einsum("bij,bkj->bik", X, X)
+        lam = np.asarray(jacobi_max_eig(jnp.asarray(B), p))
+        ref = np.linalg.eigvalsh(B)[:, -1]
+        np.testing.assert_allclose(lam, ref, rtol=1e-5, atol=1e-5)
+
+    def test_zero_and_identity_blocks_no_nan(self):
+        """Padded clients produce zero Gram blocks and the diagonal pair is
+        the identity — both hit the guarded d = e = 0 rotation plane."""
+        B = jnp.stack([jnp.zeros((3, 3)), jnp.eye(3), 2.0 * jnp.eye(3)])
+        lam = np.asarray(jacobi_max_eig(B, 3))
+        np.testing.assert_allclose(lam, [0.0, 1.0, 2.0], atol=1e-6)
+
+
+class TestEq2SolverParity:
+    @pytest.mark.parametrize("p", [1, 3, 5])
+    @pytest.mark.parametrize("family", ["random", "clustered"])
+    def test_solvers_agree(self, p, family):
+        make = _signatures if family == "random" else _clustered_signatures
+        U = make(12, p=p)
+        G = jnp.einsum("inp,jnq->ijpq", U, U)
+        # Self-pairs (G = I to f32 roundoff) carry an inherent ~sqrt(ulp)
+        # arccos fuzz near angle 0 that every solver (including the svd
+        # oracle) exhibits; the pipeline's hygiene pass zeroes the diagonal,
+        # so compare the off-diagonal entries the pipeline actually uses.
+        off = ~np.eye(12, dtype=bool)
+        ref = np.asarray(measure_from_gram(G, "eq2", eq2_solver="svd"))
+        for solver in EQ2_SOLVERS:
+            got = np.asarray(measure_from_gram(G, "eq2", eq2_solver=solver))
+            np.testing.assert_allclose(
+                got[off], ref[off], atol=TOL_DEG, err_msg=solver
+            )
+
+    def test_explicit_solver_through_dispatch(self):
+        U = _signatures(9)
+        ref = np.asarray(proximity_matrix(U, "eq2", backend="jnp"))
+        for solver in EQ2_SOLVERS:
+            got = np.asarray(
+                proximity_matrix(
+                    U, "eq2", backend="jnp_blocked", block_size=4,
+                    eq2_solver=solver,
+                )
+            )
+            np.testing.assert_allclose(got, ref, atol=TOL_DEG, err_msg=solver)
+
+    def test_pallas_rejects_lapack_solvers(self):
+        U = _signatures(4)
+        with pytest.raises(ValueError):
+            proximity_matrix(U, "eq2", backend="pallas", eq2_solver="svd")
+        with pytest.raises(ValueError):
+            proximity_matrix(U, "eq2", eq2_solver="qr")
+
+
+class TestBackendParityAllP:
+    """jnp vs jnp_blocked vs pallas vs jnp_sharded, ragged K, p in {1,3,5}."""
+
+    @pytest.mark.parametrize("p", [1, 3, 5])
+    @pytest.mark.parametrize("K", [5, 13])
+    @pytest.mark.parametrize("measure", ["eq2", "eq3"])
+    def test_angles_and_labels_agree(self, p, K, measure):
+        U = _signatures(K, p=p)
+        ref = np.asarray(proximity_matrix(U, measure, backend="jnp"))
+        beta = float(np.quantile(ref[ref > 0], 0.25))
+        ref_labels = hierarchical_clustering(ref, beta=beta)
+        for backend in NON_AUTO:
+            got = np.asarray(
+                proximity_matrix(U, measure, backend=backend, block_size=4)
+            )
+            np.testing.assert_allclose(got, ref, atol=TOL_DEG, err_msg=backend)
+            labels = hierarchical_clustering(got, beta=beta)
+            assert (labels == ref_labels).all(), (backend, measure, K, p)
+
+    @pytest.mark.parametrize("measure", ["eq2", "eq3"])
+    def test_cross_sharded_matches_blocked(self, measure):
+        U = _signatures(11)
+        ref = np.asarray(
+            cross_proximity(U, U[:6], measure, backend="jnp_blocked", block_size=4)
+        )
+        got = np.asarray(
+            cross_proximity(U, U[:6], measure, backend="jnp_sharded", block_size=4)
+        )
+        np.testing.assert_allclose(got, ref, atol=TOL_DEG)
+
+
+_MULTIDEV_SCRIPT = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.angles import cross_proximity, proximity_matrix
+from repro.core.hc import hierarchical_clustering
+
+out = {"ndev": len(jax.devices())}
+
+# K=512 acceptance: sharded (N devices) vs blocked (single-device) labels
+K = 512
+U = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(
+    jax.random.normal(jax.random.PRNGKey(0), (K, 64, 5))
+)
+for measure in ("eq2", "eq3"):
+    A_b = np.asarray(proximity_matrix(U, measure, backend="jnp_blocked"))
+    A_s = np.asarray(proximity_matrix(U, measure, backend="jnp_sharded"))
+    beta = float(np.quantile(A_b[A_b > 0], 0.02))
+    lb = hierarchical_clustering(A_b, beta=beta)
+    ls = hierarchical_clustering(A_s, beta=beta)
+    out[f"{measure}_max_dev_deg"] = float(np.abs(A_b - A_s).max())
+    out[f"{measure}_labels_identical"] = bool((lb == ls).all())
+    out[f"{measure}_n_clusters"] = int(lb.max()) + 1
+
+# ragged K + ragged cross block across the forced device count
+Ur = U[:37]
+for measure in ("eq2", "eq3"):
+    A_b = np.asarray(proximity_matrix(Ur, measure, backend="jnp_blocked", block_size=8))
+    A_s = np.asarray(proximity_matrix(Ur, measure, backend="jnp_sharded", block_size=8))
+    C_b = np.asarray(cross_proximity(Ur, Ur[:11], measure, backend="jnp_blocked", block_size=8))
+    C_s = np.asarray(cross_proximity(Ur, Ur[:11], measure, backend="jnp_sharded", block_size=8))
+    out[f"ragged_{measure}_max_dev_deg"] = float(
+        max(np.abs(A_b - A_s).max(), np.abs(C_b - C_s).max())
+    )
+print("RESULT" + json.dumps(out))
+"""
+
+
+def _run_multidev(ndev: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}"
+    ).strip()
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+class TestShardedMultiDevice:
+    """The sharded engine under a forced multi-device host platform."""
+
+    def test_four_devices_bitwise_labels_and_parity(self):
+        out = _run_multidev(4)
+        assert out["ndev"] == 4
+        for measure in ("eq2", "eq3"):
+            # acceptance: bitwise-identical HC labels at K=512 on a
+            # non-trivial partition
+            assert out[f"{measure}_labels_identical"], out
+            # beta sits at the 2% quantile: some merges must happen, and
+            # some clients must stay apart, or the label check is vacuous
+            assert 1 < out[f"{measure}_n_clusters"] < 512, out
+            assert out[f"{measure}_max_dev_deg"] <= TOL_DEG, out
+            assert out[f"ragged_{measure}_max_dev_deg"] <= TOL_DEG, out
+
+    def test_single_device_matches_blocked_in_process(self):
+        # ndev=1 runs the same shard_map machinery degenerately in-process
+        U = _signatures(13, p=5)
+        for measure in ("eq2", "eq3"):
+            A_b = np.asarray(
+                proximity_matrix(U, measure, backend="jnp_blocked", block_size=4)
+            )
+            A_s = np.asarray(
+                proximity_matrix(U, measure, backend="jnp_sharded", block_size=4)
+            )
+            np.testing.assert_allclose(A_s, A_b, atol=TOL_DEG)

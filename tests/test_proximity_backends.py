@@ -125,3 +125,14 @@ class TestCrossProximity:
         C = np.asarray(cross_proximity(U, U[:2], "eq3", backend="pallas"))
         A = np.asarray(proximity_matrix(U, "eq3", backend="jnp"))
         np.testing.assert_allclose(C[2:], A[2:, :2], atol=1e-3)
+
+    def test_pallas_fallback_accepts_lapack_solvers(self):
+        """The rectangle fallback executes on the blocked path, so explicit
+        LAPACK eq2 solvers must be accepted — solver validation follows the
+        actual executor, not the requested square-only kernel."""
+        U = _signatures(6)
+        C = np.asarray(
+            cross_proximity(U, U[:2], "eq2", backend="pallas", eq2_solver="svd")
+        )
+        A = np.asarray(proximity_matrix(U, "eq2", backend="jnp"))
+        np.testing.assert_allclose(C[2:], A[2:, :2], atol=1e-3)
