@@ -12,11 +12,17 @@ K=128, runs the sharded engine under a forced 4-device host platform
 (K=512, asserting bitwise-identical HC labels vs the single-device blocked
 backend), and writes ``BENCH_proximity_scale.json`` at the repo root.
 
+A ``streaming`` section times the cluster-engine admission path (cross
+blocks + incremental dendrogram replay) against the re-cluster-the-world
+baseline (extend_proximity_matrix + full hierarchical_clustering) for
+newcomer batches B at K in {512, 2048}, asserting label parity.
+
 Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
 
 ``--quick`` is the CI parity smoke: K=128 only, every backend and eq2
-solver against the dense reference plus the 4-device label check at K=128,
-no json rewrite, nonzero exit on any parity failure.
+solver against the dense reference, the 4-device label check at K=128, and
+the engine-vs-full-re-cluster streaming parity check; no json rewrite,
+nonzero exit on any parity failure.
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
 """
 import json
@@ -69,6 +75,21 @@ def _signatures(K: int, n: int = 64, p: int = 5) -> jax.Array:
     """Stacked orthonormal signatures, vmapped QR (a K-long Python loop of
     per-client QRs would dwarf the timings we are measuring)."""
     X = jax.random.normal(jax.random.PRNGKey(0), (K, n, p))
+    return jax.vmap(lambda x: jnp.linalg.qr(x)[0])(X)
+
+
+def _clustered_signatures(K: int, n_bases: int = 16, n: int = 64, p: int = 5,
+                          seed: int = 0) -> jax.Array:
+    """Signatures concentrated on n_bases subspaces — gives the streaming
+    section a clustering with real structure instead of one giant blob."""
+    key = jax.random.PRNGKey(seed)
+    kb, kc = jax.random.split(key)
+    bases = jnp.stack([
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(kb, i), (n, p)))[0]
+        for i in range(n_bases)
+    ])
+    noise = 0.15 * jax.random.normal(kc, (K, n, p))
+    X = bases[jnp.arange(K) % n_bases] + noise
     return jax.vmap(lambda x: jnp.linalg.qr(x)[0])(X)
 
 
@@ -171,6 +192,109 @@ def _parity_rows(record, rows):
         ))
 
 
+def _canon(labels):
+    seen = {}
+    return np.array([seen.setdefault(int(x), len(seen)) for x in labels])
+
+
+def _streaming_rows(record, rows, Ks, Bs, iters):
+    """Admission latency: engine (cross blocks + incremental dendrogram
+    replay) vs the re-cluster-the-world baseline (Alg. 2 extension + full
+    HC over the extended matrix), with label-parity checks."""
+    import time as _time
+
+    from repro.core.engine import ClusterEngine, EngineConfig
+    from repro.core.hc import hierarchical_clustering
+    from repro.core.pme import extend_proximity_matrix
+
+    record["streaming"] = []
+    for K in Ks:
+        # 64 bases: clusters stay local, so a B-newcomer batch dirties only
+        # the clusters it actually lands in — the engine's designed regime
+        U_all = _clustered_signatures(K + max(Bs), n_bases=64)
+        U_seen = U_all[:K]
+        cfg = EngineConfig(beta=0.0, measure="eq3")  # beta set below
+        A_seen = np.asarray(
+            proximity_matrix(U_seen, cfg.measure, backend="jnp_blocked")
+        )
+        off = A_seen[A_seen > 0]
+        cfg = EngineConfig(beta=float(np.quantile(off, 0.05)), measure="eq3")
+        base_engine = ClusterEngine.from_proximity(A_seen, U_seen, cfg)
+        for B in Bs:
+            U_new = U_all[K : K + B]
+            # engine: fork outside the timed region (the fork is a plain
+            # condensed-store memcpy, not part of the admission algorithm)
+            t_eng, t_base = [], []
+            parity = True
+            stats = None
+            # warmup: compile the cross/square proximity kernels for these
+            # shapes outside the timed region (both paths share them)
+            base_engine.copy().admit(U_new)
+            extend_proximity_matrix(A_seen, U_seen, U_new, measure=cfg.measure)
+            for _ in range(iters):
+                eng = base_engine.copy()
+                t0 = _time.perf_counter()
+                eng.admit(U_new)
+                t_eng.append((_time.perf_counter() - t0) * 1e6)
+                stats = eng.last_stats
+                t0 = _time.perf_counter()
+                A_ext, _ = extend_proximity_matrix(
+                    A_seen, U_seen, U_new, measure=cfg.measure
+                )
+                base_labels = hierarchical_clustering(
+                    A_ext.astype(np.float64), cfg.beta, linkage=cfg.linkage
+                )
+                t_base.append((_time.perf_counter() - t0) * 1e6)
+                parity &= bool(
+                    (_canon(base_labels) == _canon(eng.canonical_labels)).all()
+                )
+            us_e = sorted(t_eng)[len(t_eng) // 2]
+            us_b = sorted(t_base)[len(t_base) // 2]
+            entry = {
+                "K": K,
+                "B": B,
+                "beta": cfg.beta,
+                "us_engine_admit": us_e,
+                "us_recluster_baseline": us_b,
+                "speedup": us_b / us_e,
+                "labels_parity": parity,
+                "replay": {
+                    "script_applied": stats.script_applied,
+                    "dirty_merges": stats.dirty_merges,
+                    "promotions": stats.promotions,
+                },
+            }
+            record["streaming"].append(entry)
+            rows.append((
+                f"proximity_scale/streaming_K{K}_B{B}_engine",
+                us_e,
+                f"recluster={us_b:.0f}us speedup={us_b / us_e:.1f}x parity={parity}",
+            ))
+    if len(Ks) > 1:
+        # growth across the K sweep: the engine should scale ~linearly in M
+        # (cross block + script walk) while the re-cluster baseline scales
+        # quadratically — the "sublinear vs baseline" acceptance signal.
+        record["streaming_scaling"] = []
+        for B in Bs:
+            es = [e for e in record["streaming"] if e["B"] == B]
+            ge = es[-1]["us_engine_admit"] / es[0]["us_engine_admit"]
+            gb = es[-1]["us_recluster_baseline"] / es[0]["us_recluster_baseline"]
+            entry = {
+                "B": B,
+                "K_ratio": Ks[-1] / Ks[0],
+                "engine_latency_growth": ge,
+                "baseline_latency_growth": gb,
+                "sublinear_vs_baseline": ge < gb,
+            }
+            record["streaming_scaling"].append(entry)
+            rows.append((
+                f"proximity_scale/streaming_scaling_B{B}",
+                None,
+                f"engine x{ge:.1f} vs recluster x{gb:.1f} over K x{Ks[-1] // Ks[0]}",
+            ))
+    return all(e["labels_parity"] for e in record["streaming"])
+
+
 def run(quick: bool = True, parity_only: bool = False):
     rows = []
     record = {
@@ -257,12 +381,21 @@ def run(quick: bool = True, parity_only: bool = False):
             f"labels_identical={r['hc_labels_identical']}",
         ))
 
+    # streaming admission: engine vs re-cluster baseline (cheap single-shot
+    # parity smoke in --quick; latency sweep at K in {512, 2048} otherwise)
+    if parity_only:
+        streaming_ok = _streaming_rows(record, rows, Ks=(PARITY_K,), Bs=(16,), iters=1)
+    else:
+        streaming_ok = _streaming_rows(
+            record, rows, Ks=(512, 2048), Bs=(16, 64), iters=1 if quick else 3
+        )
+
     parity_ok = all(
         e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
-    )
+    ) and streaming_ok
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -273,6 +406,9 @@ def run(quick: bool = True, parity_only: bool = False):
             f"the einsum reference at K={PARITY_K}: "
             f"{e['max_err_vs_ref_deg']:.3e} deg"
         )
+    assert streaming_ok, (
+        "cluster-engine admission diverged from the full re-cluster baseline"
+    )
     assert parity_ok, "sharded engine diverged from the blocked backend"
 
     if not parity_only:

@@ -48,12 +48,20 @@ def run(quick=True):
         res = run_federation(name, seen, mlp_clf_apply, init_fn, cfg, seed=0)
         strat = res.strategy_obj
         if name == "pacfl":
-            # Algorithm 3: newcomers upload signatures; PME assigns clusters
+            # Algorithm 3, streaming: newcomers upload signatures; the
+            # cluster engine computes only the new proximity blocks and
+            # folds the leaves into the cached dendrogram
             mats = [jnp.asarray(c.x_train.T) for c in unseen]
             U_new = compute_signatures(mats, cfg.pacfl)
             cl2 = strat.clustering.extend(U_new)
             picks = np.minimum(cl2.labels[-n_unseen:], strat.clustering.n_clusters - 1)
             stacked = jax.tree.map(lambda l: l[picks], strat.cluster_params)
+            # churn: departing the same batch round-trips the membership
+            back = cl2.depart(cl2.engine.ids[-n_unseen:])
+            rows.append((
+                "table4/engine_admit_depart_roundtrip", None,
+                str(bool((back.labels == strat.clustering.labels).all())),
+            ))
         elif name == "ifca":
             x = jnp.asarray(unseen_stack.x); y = jnp.asarray(unseen_stack.y)
             ls = np.asarray(strat._vlosses(strat.cluster_params, x, y,

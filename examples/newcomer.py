@@ -1,5 +1,7 @@
-"""Newcomer handling (Algorithms 2-3): clients joining after federation get
-matched to an existing cluster via PME without re-running anything.
+"""Streaming membership (Algorithms 2-3 + churn): clients joining after
+federation get matched to an existing cluster via the cluster engine —
+only the new proximity blocks are computed and the cached dendrogram is
+updated incrementally — and departing clients are the symmetric delete.
 
 Run: PYTHONPATH=src python examples/newcomer.py
 """
@@ -29,14 +31,24 @@ strat = res.strategy_obj
 print("clusters after federation:", strat.clustering.n_clusters,
       "labels:", strat.labels)
 
-# Newcomers upload only their signatures (a few KB); the server extends the
-# proximity matrix (Alg. 2) and reads off their cluster ids (Alg. 3).
+# Newcomers upload only their signatures (a few KB); the server computes the
+# (M, B) cross + (B, B) square blocks (Alg. 2), folds the new leaves into the
+# cached dendrogram (Lance-Williams on insert) and reads off ids (Alg. 3).
 U_new = compute_signatures([jnp.asarray(c.x_train.T) for c in newcomers],
                            cfg.pacfl)
 extended = strat.clustering.extend(U_new)
 new_labels = extended.labels[-3:]
-print("newcomer cluster ids:", new_labels)
+print("newcomer cluster ids:", new_labels,
+      "| replay:", extended.engine.last_stats)
 fmnist_cluster = strat.labels[-1]   # seen fmnists clients' cluster
 assert all(lbl == fmnist_cluster for lbl in new_labels)
 print("OK: newcomers matched to the fmnists cluster; seen clients unchanged:",
       (extended.labels[: len(seen)] == strat.labels).all())
+
+# Churn: departure is the symmetric delete — removing the three newcomers
+# again restores the pre-admission membership exactly (stable ids included).
+back = extended.depart(extended.engine.ids[-3:])
+assert (back.labels == strat.labels).all()
+print("OK: admit-then-depart round-trips to the original clustering;",
+      f"condensed store holds {back.engine.store.nbytes} bytes "
+      f"for K={back.engine.n_clients} clients")

@@ -7,13 +7,25 @@ from repro.core.angles import (
     smallest_principal_angle_deg,
     trace_angle_deg,
 )
+from repro.core.engine import (
+    ClusterEngine,
+    CondensedDistances,
+    EngineConfig,
+    MembershipSnapshot,
+)
 from repro.core.hc import beta_sweep, hierarchical_clustering, n_clusters_for_beta
-from repro.core.measures import EQ2_SOLVERS, measure_from_gram
+from repro.core.measures import (
+    EQ2_SOLVERS,
+    eq3_from_diag,
+    measure_from_gram,
+    measure_pair,
+)
 from repro.core.pacfl import (
     PACFLClustering,
     PACFLConfig,
     cluster_clients,
     compute_signatures,
+    engine_config,
     one_shot_clustering,
 )
 from repro.core.pme import (
@@ -32,7 +44,14 @@ from repro.core.svd import (
 __all__ = [
     "PROXIMITY_BACKENDS",
     "EQ2_SOLVERS",
+    "ClusterEngine",
+    "CondensedDistances",
+    "EngineConfig",
+    "MembershipSnapshot",
+    "engine_config",
     "measure_from_gram",
+    "measure_pair",
+    "eq3_from_diag",
     "principal_angles",
     "proximity_matrix",
     "cross_proximity",

@@ -53,7 +53,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.measures import EQ2_SOLVERS, measure_from_gram
+from repro.core.measures import EQ2_SOLVERS, measure_from_gram, measure_pair
 
 PROXIMITY_BACKENDS = ("auto", "jnp", "jnp_blocked", "jnp_sharded", "pallas")
 
@@ -90,10 +90,12 @@ def _hygiene(A: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("measure", "eq2_solver"))
 def _proximity_dense(U_stack: jax.Array, measure: str, eq2_solver: str) -> jax.Array:
-    """Einsum reference: materializes the full (K, K, p, p) Gram tensor."""
+    """Einsum reference.  eq2 materializes the full (K, K, p, p) Gram
+    tensor; eq3 takes the diagonal-only route (K, K, p) in measure_pair."""
     U_stack = U_stack.astype(jnp.float32)
-    G = jnp.einsum("inp,jnq->ijpq", U_stack, U_stack)
-    return _hygiene(measure_from_gram(G, measure, eq2_solver=eq2_solver))
+    return _hygiene(
+        measure_pair(U_stack, U_stack, measure, eq2_solver=eq2_solver)
+    )
 
 
 @functools.partial(
@@ -126,9 +128,9 @@ def _proximity_blocked(
         Ui = jnp.take(blocks, i, axis=0)
         Uj = jnp.take(blocks, j, axis=0)
         # einsum Gram + shared reduction: on CPU the einsum beats the
-        # kernel-style flat matmul inside the scan (better MKL dispatch)
-        G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
-        tile = measure_from_gram(G, measure, eq2_solver=eq2_solver)  # (bk, bk)
+        # kernel-style flat matmul inside the scan (better MKL dispatch);
+        # eq3 only contracts the p Gram diagonals (see measure_pair)
+        tile = measure_pair(Ui, Uj, measure, eq2_solver=eq2_solver)  # (bk, bk)
         A = jax.lax.dynamic_update_slice(A, tile.T, (j * bk, i * bk))
         A = jax.lax.dynamic_update_slice(A, tile, (i * bk, j * bk))
         return A, None
@@ -159,8 +161,7 @@ def _strip_blocks(rows: jax.Array, full: jax.Array, measure, bk, eq2_solver):
 
     def strip(Ui):
         def cell(Uj):
-            G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
-            return measure_from_gram(G, measure, eq2_solver=eq2_solver)
+            return measure_pair(Ui, Uj, measure, eq2_solver=eq2_solver)
 
         s = jax.lax.map(cell, fb)  # (nbj, bk, bk)
         return s.transpose(1, 0, 2).reshape(bk, nbj * bk)
@@ -316,10 +317,7 @@ def proximity_matrix(
 def _cross_dense(
     U_a: jax.Array, U_b: jax.Array, measure: str, eq2_solver: str
 ) -> jax.Array:
-    U_a = U_a.astype(jnp.float32)
-    U_b = U_b.astype(jnp.float32)
-    G = jnp.einsum("inp,jnq->ijpq", U_a, U_b)
-    return measure_from_gram(G, measure, eq2_solver=eq2_solver)
+    return measure_pair(U_a, U_b, measure, eq2_solver=eq2_solver)
 
 
 @functools.partial(

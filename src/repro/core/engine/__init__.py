@@ -1,0 +1,26 @@
+"""Streaming cluster-membership engine (incremental dendrogram + condensed store)."""
+from repro.core.engine.dendrogram import (
+    ReplayStats,
+    filter_script_for_depart,
+    replay,
+)
+from repro.core.engine.engine import (
+    AdmitResult,
+    ClusterEngine,
+    DepartResult,
+    EngineConfig,
+    MembershipSnapshot,
+)
+from repro.core.engine.store import CondensedDistances
+
+__all__ = [
+    "AdmitResult",
+    "ClusterEngine",
+    "CondensedDistances",
+    "DepartResult",
+    "EngineConfig",
+    "MembershipSnapshot",
+    "ReplayStats",
+    "filter_script_for_depart",
+    "replay",
+]

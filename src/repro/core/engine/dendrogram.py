@@ -1,0 +1,465 @@
+"""Incremental dendrogram maintenance: script replay with a dirty set.
+
+The engine caches the *merge script* of the last clustering run — the
+``(rep_i, rep_j, height)`` sequence :func:`repro.core.hc.merge_forest`
+records, height-sorted because the three supported linkages (single /
+complete / average) are *reducible*: the generic closest-pair algorithm
+produces nondecreasing merge heights and a dendrogram that is invariant to
+the order reciprocal-nearest-neighbor pairs are merged in.
+
+Admission and departure both reduce to the same replay problem: a forest of
+**clean** leaves whose pairwise distances are unchanged (so the cached
+script is still exact for them), plus **dirty** clusters that deviate from
+the script — newcomer singletons on admit; on depart, the survivors of
+dropped merges, promoted lazily via *tombstone* entries the script rewrite
+leaves at the drop heights (:func:`filter_script_for_depart`).  The replay
+walks the script in height order, maintaining a Lance-Williams distance
+*vector* (one row per dirty cluster, slots = leaf representatives) instead
+of the full matrix:
+
+* a cached merge ``(a, b, h)`` applies unchanged when no dirty cluster is
+  closer than ``h`` to the current frontier — O(#dirty) vectorized column
+  combines, no O(K) row work;
+* when a dirty cluster's cached nearest neighbor comes closer than ``h``,
+  the dirty merge happens first (Lance-Williams on insert).  Absorbing a
+  clean cluster seeds its distance vector by direct aggregation over the
+  condensed leaf store;
+* a cached merge whose partner was absorbed is dropped and the surviving
+  side is *promoted* to dirty — it no longer follows the script.
+
+Exactness argument: clean-clean distances are unchanged, so between script
+positions the minimum clean-clean distance is exactly the next script
+height; dirty-X distances are tracked explicitly; hence every step merges
+the globally closest active pair — the generic algorithm on the extended
+(or shrunken) leaf set.  Replayed clean heights are bitwise the cached
+ones; dirty heights follow the same Lance-Williams recursion in the same
+order as a from-scratch run.  The one caveat is degenerate ties: promotion
+vectors are aggregated (mean/min/max over leaf pairs) rather than replayed
+merge-by-merge, so they can differ from a from-scratch run in the last few
+ulps, and exact clean-vs-dirty height ties break by smallest representative
+rather than the full argmin row scan.  Both only matter on degenerate
+(duplicate-distance) inputs; the oracle parity suite pins the behavior on
+clustered and random data.
+
+Cost: O(S * #dirty) column work for a script of length S plus O(K) per
+dirty merge/promotion — near O(B * K) for a B-newcomer admission, versus
+O(K^2) row updates plus rescans for re-clustering the world.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hc import (
+    cluster_distance_matrix,
+    labels_from_members,
+    lance_williams,
+    merge_forest,
+)
+
+Merge = tuple[int, int, float]
+
+
+@dataclass
+class ReplayStats:
+    """What one admit/depart replay actually did (engine telemetry)."""
+
+    script_applied: int = 0
+    script_dropped: int = 0
+    dirty_merges: int = 0
+    promotions: int = 0
+    tail_merges: int = 0
+
+
+@dataclass
+class _DirtyRows:
+    """Row-per-dirty-cluster Lance-Williams distance vectors."""
+
+    K: int
+    DV: np.ndarray = field(init=False)      # (cap, K) float64
+    rep: np.ndarray = field(init=False)     # (cap,) slot rep or -1
+    nn: np.ndarray = field(init=False)      # (cap,) cached argmin slot
+    nnd: np.ndarray = field(init=False)     # (cap,) cached min distance
+    count: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        cap = 4
+        self.DV = np.full((cap, self.K), np.inf)
+        self.rep = np.full(cap, -1, dtype=np.int64)
+        self.nn = np.zeros(cap, dtype=np.int64)
+        self.nnd = np.full(cap, np.inf)
+
+    def _grow(self) -> None:
+        cap = self.DV.shape[0]
+        self.DV = np.vstack([self.DV, np.full((cap, self.K), np.inf)])
+        self.rep = np.concatenate([self.rep, np.full(cap, -1, dtype=np.int64)])
+        self.nn = np.concatenate([self.nn, np.zeros(cap, dtype=np.int64)])
+        self.nnd = np.concatenate([self.nnd, np.full(cap, np.inf)])
+
+    def add(self, rep: int, vec: np.ndarray) -> int:
+        if self.count == self.DV.shape[0]:
+            self._grow()
+        r = self.count
+        self.DV[r] = vec
+        self.rep[r] = rep
+        self.nn[r] = int(np.argmin(vec))
+        self.nnd[r] = vec[self.nn[r]]
+        self.count += 1
+        return r
+
+    def live(self) -> np.ndarray:
+        return np.where(self.rep[: self.count] >= 0)[0]
+
+    def row_of(self, rep: int) -> Optional[int]:
+        hits = np.where(self.rep[: self.count] == rep)[0]
+        return int(hits[0]) if hits.size else None
+
+    def rescan(self, r: int) -> None:
+        self.nn[r] = int(np.argmin(self.DV[r]))
+        self.nnd[r] = self.DV[r][self.nn[r]]
+
+    def combine_columns(self, keep: int, drop: int, sk, sd, linkage: str) -> bool:
+        """Fold slot ``drop`` into slot ``keep`` across every dirty row, then
+        refresh nearest-neighbor caches (mirrors the hc maintenance rule).
+
+        Returns True when any cached nearest neighbor changed — the replay
+        uses this to keep its cross-iteration best-pair cache valid.
+        """
+        n = self.count
+        if n == 0:
+            return False
+        newcol = lance_williams(self.DV[:n, keep], self.DV[:n, drop], sk, sd, linkage)
+        self.DV[:n, keep] = newcol
+        self.DV[:n, drop] = np.inf
+        live = self.rep[:n] >= 0
+        touched = live & ((self.nn[:n] == keep) | (self.nn[:n] == drop))
+        changed = False
+        for r in np.where(touched)[0]:
+            self.rescan(r)
+            changed = True
+        others = live & ~touched
+        # a fold can never go below the two source entries, so rows whose
+        # neighbor was elsewhere only ever pick up an equal-distance,
+        # smaller-index neighbor (the argmin first-occurrence rule)
+        upd = others & (
+            (newcol < self.nnd[:n])
+            | ((newcol == self.nnd[:n]) & (keep < self.nn[:n]))
+        )
+        if upd.any():
+            self.nn[:n][upd] = keep
+            self.nnd[:n][upd] = newcol[upd]
+            changed = True
+        return changed
+
+    def best(self) -> tuple[Optional[int], float]:
+        """(row, distance) of the globally closest dirty pair.
+
+        Equal-distance candidates are ordered by their sorted slot pair —
+        the generic algorithm merges the pair whose smaller slot comes
+        first (row-major argmin), then the smaller partner within it.
+        """
+        live = self.live()
+        if live.size == 0:
+            return None, np.inf
+        d = self.nnd[live]
+        m = d.min()
+        if not np.isfinite(m):
+            return None, np.inf
+        cands = live[d == m]
+        if cands.size > 1:  # ties only: order by sorted slot pair
+            lo = np.minimum(self.rep[cands], self.nn[cands])
+            hi = np.maximum(self.rep[cands], self.nn[cands])
+            cands = cands[np.lexsort((hi, lo))]
+        return int(cands[0]), float(m)
+
+
+class _Forest:
+    """Active clusters over leaf slots (slot id == smallest member leaf)."""
+
+    def __init__(self, K: int, dirty_members: list[list[int]]):
+        self.K = K
+        self.active = np.ones(K, dtype=bool)
+        self.size = np.ones(K, dtype=np.int64)
+        self.rep_of_leaf = np.arange(K, dtype=np.int64)
+        self.members: list[list[int]] = [[i] for i in range(K)]
+        self.is_dirty = np.zeros(K, dtype=bool)
+        for g in dirty_members:
+            rep = min(g)
+            self.members[rep] = sorted(g)
+            self.size[rep] = len(g)
+            self.is_dirty[rep] = True
+            for leaf in g:
+                self.rep_of_leaf[leaf] = rep
+                if leaf != rep:
+                    self.active[leaf] = False
+        self.n_active = int(self.active.sum())
+
+    def fold(self, keep: int, drop: int) -> None:
+        self.members[keep].extend(self.members[drop])
+        self.rep_of_leaf[np.asarray(self.members[drop], dtype=np.int64)] = keep
+        self.size[keep] += self.size[drop]
+        self.active[drop] = False
+        self.n_active -= 1
+
+    def aggregate_vec(self, rows: np.ndarray, linkage: str) -> np.ndarray:
+        """Slot-level distance vector of a cluster from its leaf rows.
+
+        ``rows`` is (m, K) leaf distances of the cluster's members; columns
+        fold into the current slots by the linkage reduction (mean / min /
+        max over leaf pairs — exact for the reducible linkages here).
+        Inactive slots and the cluster's own slot come back inf.
+        """
+        m = rows.shape[0]
+        vec = np.full(self.K, np.inf)
+        if linkage == "average":
+            acc = np.zeros(self.K)
+            np.add.at(acc, self.rep_of_leaf, rows.sum(axis=0))
+            vec[self.active] = acc[self.active] / (m * self.size[self.active])
+        elif linkage == "single":
+            acc = np.full(self.K, np.inf)
+            np.minimum.at(acc, self.rep_of_leaf, rows.min(axis=0))
+            vec[self.active] = acc[self.active]
+        else:  # complete
+            acc = np.full(self.K, -np.inf)
+            np.maximum.at(acc, self.rep_of_leaf, rows.max(axis=0))
+            vec[self.active] = acc[self.active]
+        return vec
+
+
+def replay(
+    store,
+    script: list[Merge],
+    dirty_members: list[list[int]],
+    *,
+    beta: Optional[float] = None,
+    n_clusters: Optional[int] = None,
+    linkage: str = "average",
+) -> tuple[np.ndarray, list[Merge], ReplayStats]:
+    """Re-derive the flat clustering after a membership change.
+
+    ``store`` is the engine's :class:`CondensedDistances` over the *current*
+    leaves (newcomer columns already appended / departed leaves already
+    removed).  ``script`` is the cached merge sequence valid for the clean
+    leaves (current numbering), possibly holding ``(rep, -1, h)`` tombstones
+    from a departure rewrite; ``dirty_members`` the initially deviating
+    clusters (newcomer singletons on admit, empty on depart).
+
+    Returns ``(labels, new_script, stats)`` — canonical flat labels, the
+    merge script of the new dendrogram (cache for the next operation), and
+    replay telemetry.
+    """
+    if (beta is None) == (n_clusters is None):
+        raise ValueError("specify exactly one of beta / n_clusters")
+    K = store.n
+    stats = ReplayStats()
+    if K == 0:
+        return np.zeros(0, dtype=np.int64), [], stats
+    forest = _Forest(K, dirty_members)
+    dirty = _DirtyRows(K)
+
+    # Leaf rows come from a lazily materialized dense float64 view: one
+    # O(K^2) densification beats hundreds of strided condensed gathers when
+    # promotions cascade (the store itself stays condensed).
+    dense_cache: list[Optional[np.ndarray]] = [None]
+
+    def leaf_rows(members: list[int]) -> np.ndarray:
+        if len(members) <= 2 and dense_cache[0] is None:
+            return store.rows(members)
+        if dense_cache[0] is None:
+            dense_cache[0] = store.dense(np.float64)
+        return dense_cache[0][np.asarray(members, dtype=np.int64)]
+
+    for g in dirty_members:
+        rep = min(g)
+        vec = forest.aggregate_vec(leaf_rows(forest.members[rep]), linkage)
+        vec[rep] = np.inf
+        dirty.add(rep, vec)
+
+    # best-pair cache: dirty.best() only changes when a nearest-neighbor
+    # cache does, so long clean-script runs reuse one lookup.
+    best_cache: list = [None]
+
+    def promote(rep: int) -> None:
+        vec = forest.aggregate_vec(leaf_rows(forest.members[rep]), linkage)
+        vec[rep] = np.inf
+        forest.is_dirty[rep] = True
+        dirty.add(rep, vec)
+        best_cache[0] = None
+        stats.promotions += 1
+
+    out: list[Merge] = []
+    target = 1 if n_clusters is None else max(int(n_clusters), 1)
+    ptr, S = 0, len(script)
+
+    while forest.n_active > target:
+        # -- script front: drop entries broken by dirty merges, promoting
+        # the surviving clean side (it no longer follows the script).
+        if ptr < S:
+            a, b, h_s = script[ptr]
+            if b < 0:
+                # tombstone from a departure: the old run merged this
+                # cluster with departed clients at h_s — from here on it
+                # deviates from the script.  (Promoting as the tombstone
+                # reaches the front is exact: all its internal merges sit
+                # earlier in the stream, and early promotion only adds
+                # tracking, never changes merge order.)
+                if forest.active[a] and not forest.is_dirty[a]:
+                    promote(a)
+                ptr += 1
+                stats.script_dropped += 1
+                continue
+            ok_a = forest.active[a] and not forest.is_dirty[a]
+            ok_b = forest.active[b] and not forest.is_dirty[b]
+            if not (ok_a and ok_b):
+                if ok_a:
+                    promote(a)
+                elif ok_b:
+                    promote(b)
+                ptr += 1
+                stats.script_dropped += 1
+                continue
+        else:
+            if n_clusters is not None:
+                # The script was truncated at the OLD target, so beyond it
+                # the minimum clean-clean distance is unknown — dirty pairs
+                # may no longer be the global minimum.  Aggregate the small
+                # remaining forest and finish with the generic loop (tail).
+                break
+            a = b = -1
+            h_s = np.inf
+
+        if best_cache[0] is None:
+            best_cache[0] = dirty.best()
+        r_best, d_d = best_cache[0]
+        if beta is not None and min(h_s, d_d) > beta:
+            break
+
+        if r_best is not None and d_d == h_s:
+            # Exact height tie between the script front (a, b) and the best
+            # dirty pair: emulate the generic argmin — smaller first slot
+            # wins, then the smaller partner within that row's candidates.
+            dp = int(min(dirty.rep[r_best], dirty.nn[r_best]))
+            dq = int(max(dirty.rep[r_best], dirty.nn[r_best]))
+            take_dirty = (dp, dq) < (a, b)
+        else:
+            take_dirty = r_best is not None and d_d < h_s
+        if not take_dirty:
+            # -- cached merge applies verbatim (height bitwise-cached).
+            sa, sb = int(forest.size[a]), int(forest.size[b])
+            if dirty.combine_columns(a, b, sa, sb, linkage):
+                best_cache[0] = None
+            forest.fold(a, b)
+            out.append((a, b, h_s))
+            ptr += 1
+            stats.script_applied += 1
+            continue
+
+        # -- dirty merge: Lance-Williams on insert.
+        p = int(dirty.rep[r_best])
+        q = int(dirty.nn[r_best])
+        h = float(dirty.nnd[r_best])
+        rq = dirty.row_of(q)
+        if rq is None:  # absorbing a clean cluster: seed its vector
+            vec_q = forest.aggregate_vec(leaf_rows(forest.members[q]), linkage)
+            vec_q[q] = np.inf
+        else:
+            vec_q = dirty.DV[rq]
+        sp, sq = int(forest.size[p]), int(forest.size[q])
+        new_vec = lance_williams(dirty.DV[r_best], vec_q, sp, sq, linkage)
+        keep, drop = (p, q) if p < q else (q, p)
+        new_vec[keep] = new_vec[drop] = np.inf
+        # other dirty rows fold their (p, q) slots first (consistent with the
+        # symmetric column state), then the merged row takes the keep slot.
+        dirty.combine_columns(keep, drop, sp if keep == p else sq,
+                              sq if keep == p else sp, linkage)
+        if rq is not None and rq != r_best:
+            dirty.rep[rq] = -1
+            dirty.nnd[rq] = np.inf
+        dirty.DV[r_best] = new_vec
+        dirty.rep[r_best] = keep
+        dirty.rescan(r_best)
+        forest.is_dirty[keep] = True
+        forest.fold(keep, drop)
+        out.append((keep, drop, h))
+        best_cache[0] = None
+        stats.dirty_merges += 1
+
+    # -- n_clusters tail: script and tracked pairs exhausted but the target
+    # needs more merges (possible after departure); aggregate the small
+    # remaining forest and continue with the generic loop.
+    if n_clusters is not None and forest.n_active > target:
+        reps = sorted(np.where(forest.active)[0], key=lambda c: min(forest.members[c]))
+        groups = [forest.members[r] for r in reps]
+        if dense_cache[0] is None:
+            dense_cache[0] = store.dense(np.float64)
+        Dc = cluster_distance_matrix(dense_cache[0], groups, linkage)
+        sizes = np.array([len(g) for g in groups], dtype=np.int64)
+        active2, members2, merges2 = merge_forest(
+            Dc, sizes, [list(g) for g in groups],
+            n_clusters=target, linkage=linkage,
+        )
+        out.extend(merges2)
+        stats.tail_merges = len(merges2)
+        labels = labels_from_members(active2, members2, K)
+        return labels, out, stats
+
+    labels = labels_from_members(
+        forest.active, forest.members, K
+    )
+    return labels, out, stats
+
+
+def filter_script_for_depart(
+    script: list[Merge], K: int, departing: np.ndarray
+) -> list[Merge]:
+    """Rewrite a cached script for a departure (old leaf numbering).
+
+    Walks the script in application order with a union-find.  A merge whose
+    subtree contains a departing leaf (or whose history was already broken)
+    is dropped; if one side is an intact pure-remaining cluster, the drop
+    leaves a *tombstone* entry ``(rep, -1, height)`` in the stream — the
+    replay promotes that cluster to dirty when it reaches the tombstone,
+    after all its internal (kept, lower-height) merges have applied.  Until
+    that height the cluster behaved exactly per script in the old run, and
+    the old run's global-minimum property guarantees it had no sub-height
+    neighbor among unchanged clusters, so promoting at the tombstone is
+    exact.  Kept merges touch only remaining leaves and stay exact after
+    compaction.
+
+    Returns the rewritten script in old leaf ids; the caller remaps reps
+    onto the compacted numbering.
+    """
+    dep = np.zeros(K, dtype=bool)
+    dep[np.asarray(departing, dtype=np.int64)] = True
+    parent = np.arange(K, dtype=np.int64)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return int(x)
+
+    has_dep = dep.copy()
+    broken = np.zeros(K, dtype=bool)
+    kept: list[Merge] = []
+    for a, b, h in script:
+        ra, rb = find(a), find(b)
+        bad_a = broken[ra] or has_dep[ra]
+        bad_b = broken[rb] or has_dep[rb]
+        root, other = (ra, rb) if ra < rb else (rb, ra)
+        if not bad_a and not bad_b:
+            kept.append((a, b, h))
+        else:
+            # at most one side is intact (pure-remaining with an unbroken
+            # history); it deviates from the script from height h on
+            if not bad_a:
+                kept.append((a, -1, h))
+            elif not bad_b:
+                kept.append((b, -1, h))
+            broken[root] = True
+        parent[other] = root
+        has_dep[root] = has_dep[ra] or has_dep[rb]
+        broken[root] = broken[root] or broken[ra] or broken[rb]
+    return kept

@@ -1,0 +1,339 @@
+"""Stateful streaming cluster-membership engine.
+
+The pre-engine lifecycle was batch-synchronous: every newcomer batch went
+``pme.assign_newcomers`` -> assemble a dense ``(M+B, M+B)`` float64 matrix ->
+``hierarchical_clustering`` from scratch — the "re-cluster-the-world step".
+:class:`ClusterEngine` replaces it with a living structure that owns
+
+* the stacked signatures ``U`` (K, n, p),
+* a condensed upper-triangular float32 distance store
+  (:class:`repro.core.engine.store.CondensedDistances` — half the dense
+  footprint, pure-append admission),
+* the cached dendrogram *merge script* of the last clustering, replayable
+  incrementally (:mod:`repro.core.engine.dendrogram`),
+* stable client ids and cluster labels that survive admissions and
+  departures.
+
+``admit(U_new)`` costs the O((M+B) * B) proximity blocks plus near-O(B * K)
+dendrogram maintenance; ``depart(ids)`` is the symmetric delete — a scenario
+the batch API could not express at all.  Both reproduce the labels a full
+re-clustering of the current distance matrix would produce (oracle-checked
+up to degenerate distance ties; see the dendrogram module docstring).
+
+``PACFLClustering`` (:mod:`repro.core.pacfl`) is a thin view over this
+engine; ``pme.assign_newcomers`` delegates to ``admit``; the FL layer
+consumes :meth:`membership` snapshots for mid-federation churn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.angles import proximity_matrix
+from repro.core.engine.dendrogram import (
+    Merge,
+    ReplayStats,
+    filter_script_for_depart,
+    replay,
+)
+from repro.core.engine.store import CondensedDistances
+from repro.core.hc import labels_from_members, merge_forest
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Clustering criterion + proximity knobs the engine needs.
+
+    A ``n_clusters`` set overrides ``beta`` (fixed cluster count), exactly
+    as in the one-shot phase.  ``measure``/``backend``/``block_size`` are
+    forwarded to :func:`repro.core.angles.proximity_matrix` /
+    :func:`cross_proximity` for the admission blocks.
+    """
+
+    beta: float = 10.0
+    n_clusters: Optional[int] = None
+    measure: str = "eq3"
+    linkage: str = "average"
+    backend: str = "auto"
+    block_size: Optional[int] = None
+
+
+@dataclass
+class MembershipSnapshot:
+    """Immutable view of the engine's membership at one version."""
+
+    version: int
+    ids: np.ndarray       # (K,) stable client ids
+    labels: np.ndarray    # (K,) stable cluster labels
+
+    def label_of(self, client_id: int) -> int:
+        hit = np.where(self.ids == client_id)[0]
+        if not hit.size:
+            raise KeyError(f"client id {client_id} not in engine")
+        return int(self.labels[hit[0]])
+
+
+@dataclass
+class AdmitResult:
+    ids: np.ndarray               # (B,) stable ids assigned to the newcomers
+    labels: np.ndarray            # (K,) stable labels after admission
+    newcomer_labels: np.ndarray   # (B,)
+    new_cluster: np.ndarray       # (B,) bool — newcomer formed a new cluster
+    canonical: np.ndarray         # (K,) full-re-cluster-parity labels
+    stats: ReplayStats
+
+
+@dataclass
+class DepartResult:
+    departed: np.ndarray          # stable ids removed
+    labels: np.ndarray            # (K',) stable labels of the survivors
+    canonical: np.ndarray         # (K',) full-re-cluster-parity labels
+    stats: ReplayStats
+
+
+class ClusterEngine:
+    """Owns signatures + condensed distances + the incremental dendrogram."""
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+        self.U: Optional[jnp.ndarray] = None
+        self.store = CondensedDistances(0)
+        self.ids = np.zeros(0, dtype=np.int64)
+        self._next_id = 0
+        self._script: list[Merge] = []
+        self._canonical = np.zeros(0, dtype=np.int64)
+        self._stable = np.zeros(0, dtype=np.int64)
+        self.version = 0
+        self.last_stats: Optional[ReplayStats] = None
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_signatures(
+        cls, U_stack: jnp.ndarray, config: EngineConfig
+    ) -> "ClusterEngine":
+        """One-shot phase: proximity matrix + HC, with the script cached."""
+        eng = cls(config)
+        A = np.asarray(
+            proximity_matrix(
+                U_stack,
+                measure=config.measure,
+                backend=config.backend,
+                block_size=config.block_size,
+            )
+        )
+        eng._bootstrap(A, jnp.asarray(U_stack))
+        return eng
+
+    @classmethod
+    def from_proximity(
+        cls, A: np.ndarray, U_stack: jnp.ndarray, config: EngineConfig
+    ) -> "ClusterEngine":
+        """Adopt an existing proximity matrix (upper triangle is kept)."""
+        eng = cls(config)
+        eng._bootstrap(np.asarray(A), jnp.asarray(U_stack))
+        return eng
+
+    def _bootstrap(self, A: np.ndarray, U_stack: jnp.ndarray) -> None:
+        K = int(A.shape[0])
+        if U_stack.shape[0] != K:
+            raise ValueError("A and U_stack disagree on the client count")
+        self.store = CondensedDistances.from_dense(A)
+        self.U = U_stack
+        self.ids = np.arange(K, dtype=np.int64)
+        self._next_id = K
+        active, members, merges = merge_forest(
+            self.store.dense(np.float64),
+            np.ones(K, dtype=np.int64),
+            [[i] for i in range(K)],
+            **self._criterion(),
+        )
+        self._script = merges
+        self._canonical = labels_from_members(active, members, K)
+        self._stable = self._canonical.copy()
+        self.last_stats = None
+        self.version += 1
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def n_clients(self) -> int:
+        return self.store.n
+
+    @property
+    def labels(self) -> np.ndarray:
+        """Stable labels (old cluster identities preserved across churn)."""
+        return self._stable
+
+    @property
+    def canonical_labels(self) -> np.ndarray:
+        """Labels as a from-scratch re-clustering would produce them."""
+        return self._canonical
+
+    @property
+    def n_clusters(self) -> int:
+        return int(np.unique(self._stable).size) if self._stable.size else 0
+
+    def dense(self, dtype=np.float32) -> np.ndarray:
+        """Transient dense view of the condensed store (API back-compat)."""
+        return self.store.dense(dtype)
+
+    def membership(self) -> MembershipSnapshot:
+        return MembershipSnapshot(
+            self.version, self.ids.copy(), self._stable.copy()
+        )
+
+    def copy(self) -> "ClusterEngine":
+        """Independent fork (signature stacks are shared — jax immutability)."""
+        eng = ClusterEngine(self.config)
+        eng.U = self.U
+        eng.store = self.store.copy()
+        eng.ids = self.ids.copy()
+        eng._next_id = self._next_id
+        eng._script = list(self._script)
+        eng._canonical = self._canonical.copy()
+        eng._stable = self._stable.copy()
+        eng.version = self.version
+        return eng
+
+    def _criterion(self) -> dict:
+        if self.config.n_clusters is not None:
+            return {
+                "n_clusters": self.config.n_clusters,
+                "linkage": self.config.linkage,
+            }
+        return {"beta": self.config.beta, "linkage": self.config.linkage}
+
+    # -- streaming ops ------------------------------------------------------
+
+    def admit(self, U_new: jnp.ndarray) -> AdmitResult:
+        """Fold B newcomers into the membership (Algorithms 2+3, streaming).
+
+        Computes only the (M, B) cross and (B, B) square proximity blocks,
+        appends them to the condensed store, and replays the cached
+        dendrogram with the newcomers as dirty singletons.
+        """
+        from repro.core.pme import remap_onto_old_ids
+
+        U_new = jnp.asarray(U_new)
+        B = int(U_new.shape[0])
+        if B == 0:
+            raise ValueError("admit needs at least one newcomer")
+        M = self.store.n
+        cfg = self.config
+        if M == 0:
+            nid0, ver0 = self._next_id, self.version
+            eng = ClusterEngine.from_signatures(U_new, cfg)
+            self.__dict__.update(eng.__dict__)
+            # stable ids / version continue from the pre-churn lineage
+            self.ids = np.arange(nid0, nid0 + B, dtype=np.int64)
+            self._next_id = nid0 + B
+            self.version = ver0 + 1
+            stats = ReplayStats()
+            self.last_stats = stats
+            return AdmitResult(
+                ids=self.ids.copy(),
+                labels=self._stable.copy(),
+                newcomer_labels=self._stable.copy(),
+                new_cluster=np.ones(B, dtype=bool),
+                canonical=self._canonical.copy(),
+                stats=stats,
+            )
+        from repro.core.pme import proximity_blocks
+
+        cross, square = proximity_blocks(
+            self.U, U_new,
+            measure=cfg.measure, backend=cfg.backend, block_size=cfg.block_size,
+        )
+        self.store.append_block(cross, square)
+        self.U = jnp.concatenate([self.U, U_new.astype(self.U.dtype)], axis=0)
+        new_ids = np.arange(self._next_id, self._next_id + B, dtype=np.int64)
+        self._next_id += B
+        self.ids = np.concatenate([self.ids, new_ids])
+
+        canonical, script, stats = replay(
+            self.store,
+            self._script,
+            [[M + t] for t in range(B)],
+            **self._criterion(),
+        )
+        old_stable = self._stable
+        stable = remap_onto_old_ids(canonical, old_stable, M)
+        self._canonical = canonical
+        self._stable = stable
+        self._script = script
+        self.last_stats = stats
+        self.version += 1
+        seen = set(stable[:M].tolist())
+        newcomer_labels = stable[M:]
+        return AdmitResult(
+            ids=new_ids,
+            labels=stable.copy(),
+            newcomer_labels=newcomer_labels.copy(),
+            new_cluster=np.array([l not in seen for l in newcomer_labels]),
+            canonical=canonical.copy(),
+            stats=stats,
+        )
+
+    def depart(self, client_ids: np.ndarray) -> DepartResult:
+        """Remove clients (churn) — the symmetric delete to :meth:`admit`.
+
+        Drops their rows from the condensed store, splits the cached script
+        (merges whose subtree contained a departed client are dropped; the
+        surviving sides become dirty orphans) and replays.
+        """
+        from repro.core.pme import remap_onto_old_ids
+
+        client_ids = np.atleast_1d(np.asarray(client_ids, dtype=np.int64))
+        pos = np.where(np.isin(self.ids, client_ids))[0]
+        if pos.size != np.unique(client_ids).size:
+            missing = np.setdiff1d(client_ids, self.ids)
+            raise KeyError(f"unknown client ids: {missing.tolist()}")
+        K = self.store.n
+        departed_ids = self.ids[pos].copy()
+        if pos.size == K:  # everyone leaves
+            cfg = self.config
+            nid, ver = self._next_id, self.version
+            self.__init__(cfg)
+            # stable ids / version continue from the pre-churn lineage,
+            # mirroring the admit-into-empty path
+            self._next_id = nid
+            self.version = ver + 1
+            stats = ReplayStats()
+            self.last_stats = stats
+            return DepartResult(
+                departed=departed_ids,
+                labels=self._stable.copy(),
+                canonical=self._canonical.copy(),
+                stats=stats,
+            )
+        kept_script = filter_script_for_depart(self._script, K, pos)
+        keep = self.store.remove(pos)
+        inv = np.full(K, -1, dtype=np.int64)
+        inv[keep] = np.arange(keep.size, dtype=np.int64)
+        script_new = [
+            (int(inv[a]), int(inv[b]) if b >= 0 else -1, h)
+            for a, b, h in kept_script
+        ]
+        self.U = jnp.take(self.U, jnp.asarray(keep), axis=0)
+        old_stable = self._stable[keep]
+        self.ids = self.ids[keep]
+
+        canonical, script, stats = replay(
+            self.store, script_new, [], **self._criterion()
+        )
+        stable = remap_onto_old_ids(canonical, old_stable, self.store.n)
+        self._canonical = canonical
+        self._stable = stable
+        self._script = script
+        self.last_stats = stats
+        self.version += 1
+        return DepartResult(
+            departed=departed_ids,
+            labels=stable.copy(),
+            canonical=canonical.copy(),
+            stats=stats,
+        )

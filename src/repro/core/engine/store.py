@@ -1,0 +1,158 @@
+"""Condensed upper-triangular float32 distance store.
+
+The streaming cluster engine's persistent memory: ``K (K - 1) / 2`` unique
+pairwise distances as one flat float32 vector — half the footprint of the
+dense ``(K, K)`` ndarray the pre-engine lifecycle threaded through
+``pacfl.py`` / ``pme.py`` / ``hc.py`` (and a quarter of the float64 working
+copy HC used to take).
+
+Layout is *column-block* condensed: entries of column ``j`` (pairs ``(i, j)``
+with ``i < j``) live contiguously at offset ``j (j - 1) / 2``.  Unlike the
+scipy row-major condensed convention, admitting a batch of B newcomers is
+then a pure append — each newcomer contributes one contiguous column block —
+so the store grows in amortized O((M + B) * B) without rewriting seen-pair
+entries.  Departure compacts the vector (O(K^2), the rare path).
+
+Dense views (``dense()`` / ``rows()``) are materialized on demand for the
+engine's replay and for API back-compat (``PACFLClustering.A``); they are
+transient — persistent state stays condensed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _tri(n: int) -> int:
+    return n * (n - 1) // 2
+
+
+class CondensedDistances:
+    """Growable/shrinkable condensed symmetric distance store (float32)."""
+
+    def __init__(self, n: int = 0, values: np.ndarray | None = None):
+        self.n = int(n)
+        need = _tri(self.n)
+        if values is None:
+            values = np.zeros(need, dtype=np.float32)
+        values = np.asarray(values, dtype=np.float32)
+        if values.size != need:
+            raise ValueError(
+                f"condensed store for n={self.n} needs {need} entries, "
+                f"got {values.size}"
+            )
+        self._v = values
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, A: np.ndarray) -> "CondensedDistances":
+        """Condense a symmetric (K, K) matrix (upper triangle is kept)."""
+        A = np.asarray(A)
+        n = A.shape[0]
+        if A.shape != (n, n):
+            raise ValueError("A must be square")
+        v = np.empty(_tri(n), dtype=np.float32)
+        off = 0
+        for j in range(1, n):  # column slices beat a giant tril_indices gather
+            v[off : off + j] = A[:j, j]
+            off += j
+        return cls(n, v)
+
+    def copy(self) -> "CondensedDistances":
+        return CondensedDistances(self.n, self._v.copy())
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def nbytes(self) -> int:
+        return self._v.nbytes
+
+    @property
+    def values(self) -> np.ndarray:
+        """The raw condensed vector (column-block order), read-only view."""
+        v = self._v[: _tri(self.n)]
+        v.flags.writeable = False
+        return v
+
+    def get(self, i: int, j: int) -> float:
+        if i == j:
+            return 0.0
+        lo, hi = (i, j) if i < j else (j, i)
+        return float(self._v[_tri(hi) + lo])
+
+    # -- dense views --------------------------------------------------------
+
+    def dense(self, dtype=np.float32) -> np.ndarray:
+        """Materialize the full symmetric (K, K) matrix (transient)."""
+        n = self.n
+        out = np.zeros((n, n), dtype=dtype)
+        v = self._v
+        off = 0
+        for j in range(1, n):  # 2K cheap slice writes, no index tensors
+            col = v[off : off + j]
+            out[:j, j] = col
+            out[j, :j] = col
+            off += j
+        return out
+
+    def rows(self, idx: np.ndarray, dtype=np.float64) -> np.ndarray:
+        """Gather full rows ``(len(idx), K)`` without densifying everything.
+
+        The engine's replay uses this to seed distance vectors for dirty
+        clusters (newcomers already have theirs from the admission blocks;
+        orphans and absorbed clean clusters aggregate over these rows).
+        """
+        idx = np.atleast_1d(np.asarray(idx, dtype=np.int64))
+        if self._v.size == 0:  # n <= 1: no pairs
+            return np.zeros((idx.size, self.n), dtype=dtype)
+        J = np.arange(self.n, dtype=np.int64)
+        hi = np.maximum(idx[:, None], J[None, :])
+        lo = np.minimum(idx[:, None], J[None, :])
+        flat = hi * (hi - 1) // 2 + lo
+        diag = hi == lo
+        flat[diag] = 0  # any in-range slot; overwritten below
+        out = self._v[flat].astype(dtype)
+        out[diag] = 0.0
+        return out
+
+    # -- mutation -----------------------------------------------------------
+
+    def append_block(self, cross: np.ndarray, square: np.ndarray) -> None:
+        """Admit B newcomers: ``cross`` is (M, B) seen-vs-new distances,
+        ``square`` the (B, B) symmetric new-vs-new block (zero diagonal).
+
+        Appends B contiguous column blocks; seen-pair entries are untouched.
+        """
+        M, B = self.n, int(square.shape[0])
+        cross = np.asarray(cross, dtype=np.float32)
+        square = np.asarray(square, dtype=np.float32)
+        if cross.shape != (M, B):
+            raise ValueError(
+                f"cross block must be (M, B) = ({M}, {B}), got {cross.shape}"
+            )
+        if square.shape != (B, B):
+            raise ValueError("square block must be (B, B)")
+        cols = [
+            np.concatenate([cross[:, b], square[:b, b]]) for b in range(B)
+        ]
+        self._v = np.concatenate([self._v[: _tri(M)]] + cols)
+        self.n = M + B
+
+    def remove(self, idx: np.ndarray) -> np.ndarray:
+        """Depart clients ``idx``: drop their rows/columns, compact.
+
+        Returns the sorted array of surviving leaf ids (old numbering), in
+        the order they occupy the compacted store.
+        """
+        idx = np.unique(np.asarray(idx, dtype=np.int64))
+        if idx.size and (idx[0] < 0 or idx[-1] >= self.n):
+            raise IndexError("departing ids out of range")
+        keep = np.setdiff1d(np.arange(self.n, dtype=np.int64), idx)
+        shrunk = self.dense()[np.ix_(keep, keep)]
+        self.n = int(keep.size)
+        self._v = np.empty(_tri(self.n), dtype=np.float32)
+        off = 0
+        for j in range(1, self.n):
+            self._v[off : off + j] = shrunk[:j, j]
+            off += j
+        return keep

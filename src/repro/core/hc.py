@@ -26,50 +26,62 @@ import numpy as np
 _LINKAGES = ("single", "complete", "average")
 
 
-def hierarchical_clustering(
-    A: np.ndarray,
-    beta: Optional[float] = None,
+def lance_williams(
+    di: np.ndarray, dj: np.ndarray, si, sj, linkage: str
+) -> np.ndarray:
+    """Distance of (i u j) to everything, from the rows/entries of i and j.
+
+    Vectorized over whatever shape ``di``/``dj`` share; ``si``/``sj`` are the
+    member counts of i and j (only average linkage uses them).
+    """
+    if linkage == "single":
+        return np.minimum(di, dj)
+    if linkage == "complete":
+        return np.maximum(di, dj)
+    return (si * di + sj * dj) / (si + sj)  # average (UPGMA)
+
+
+def merge_forest(
+    D: np.ndarray,
+    size: np.ndarray,
+    members: list[list[int]],
     *,
+    beta: Optional[float] = None,
     n_clusters: Optional[int] = None,
     linkage: str = "average",
-) -> np.ndarray:
-    """Cluster clients from proximity matrix ``A``.
+) -> tuple[np.ndarray, list[list[int]], list[tuple[int, int, float]]]:
+    """Core agglomerative merge loop, generalized to non-singleton starts.
 
-    Parameters
-    ----------
-    A: (K, K) symmetric distance matrix, zero diagonal.
-    beta: distance threshold — merging stops once the closest pair of
-        clusters is farther than ``beta``.  (Paper's ``HC(A, beta)``.)
-    n_clusters: alternatively stop at exactly this many clusters.
-    linkage: "single" | "complete" | "average".
+    Runs the generic (global closest pair) algorithm on an initial forest of
+    clusters: ``D`` is the (C, C) float64 cluster-distance matrix (CONSUMED —
+    mutated in place, diagonal set to inf), ``size[i]`` the member count and
+    ``members[i]`` the client ids of initial cluster ``i``.  For tie-breaking
+    to match a singleton-start run on the same leaves, initial clusters must
+    be ordered by their smallest member id (rows then stand in for leaf
+    indices: merging keeps the smaller row, so a row's id stays the min
+    member of its cluster).
 
-    Returns
-    -------
-    labels: (K,) int cluster ids in [0, Z).  Label ids are canonicalized by
-        first client occurrence so results are deterministic.
+    Returns ``(active, members, merges)``: the liveness mask, the merged
+    member lists, and the merge script — ``(rep_i, rep_j, height)`` per merge
+    in application order, where a rep is the smallest member id of the
+    cluster at merge time.  Heights are nondecreasing for the three
+    (reducible) linkages here, which is what makes the script replayable by
+    the streaming engine (``repro.core.engine``).
     """
     if (beta is None) == (n_clusters is None):
         raise ValueError("specify exactly one of beta / n_clusters")
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage must be one of {_LINKAGES}")
-    A = np.asarray(A, dtype=np.float64)
-    K = A.shape[0]
-    if A.shape != (K, K):
-        raise ValueError("A must be square")
-    if K == 1:
-        return np.zeros(1, dtype=np.int64)
-
-    # Working copy of cluster-cluster distances; `size[i]` tracks members for
-    # average linkage; `active[i]` marks live clusters; `members` the client
-    # ids merged into cluster i.  `nn[i]` caches the argmin of row i (first
-    # occurrence on ties, matching a fresh row-major argmin) and `nn_dist[i]`
-    # its distance, so the closest pair is an O(K) vectorized lookup instead
-    # of an O(K^2) submatrix scan.
-    D = A.copy()
-    np.fill_diagonal(D, np.inf)
+    K = D.shape[0]
+    merges: list[tuple[int, int, float]] = []
     active = np.ones(K, dtype=bool)
-    size = np.ones(K, dtype=np.int64)
-    members: list[list[int]] = [[i] for i in range(K)]
+    if K == 1:
+        return active, members, merges
+
+    # `nn[i]` caches the argmin of row i (first occurrence on ties, matching
+    # a fresh row-major argmin) and `nn_dist[i]` its distance, so the closest
+    # pair is an O(K) vectorized lookup instead of an O(K^2) submatrix scan.
+    np.fill_diagonal(D, np.inf)
     remaining = K
     nn = D.argmin(axis=1)
     nn_dist = D[np.arange(K), nn]
@@ -90,18 +102,13 @@ def hierarchical_clustering(
         # Vectorized Lance-Williams update of distances from merged (i u j);
         # inactive entries hold inf in both rows and stay inf under all
         # three updates.
-        di, dj = D[i], D[j]
-        if linkage == "single":
-            new = np.minimum(di, dj)
-        elif linkage == "complete":
-            new = np.maximum(di, dj)
-        else:  # average (UPGMA)
-            new = (size[i] * di + size[j] * dj) / (size[i] + size[j])
+        new = lance_williams(D[i], D[j], size[i], size[j], linkage)
         new[i] = new[j] = np.inf
         D[i, :] = new
         D[:, i] = new
         D[j, :] = np.inf
         D[:, j] = np.inf
+        merges.append((min(members[i]), min(members[j]), dmin))
         size[i] += size[j]
         members[i].extend(members[j])
         active[j] = False
@@ -126,7 +133,14 @@ def hierarchical_clustering(
         nn[i] = D[i].argmin()
         nn_dist[i] = D[i, nn[i]]
 
-    labels = np.full(K, -1, dtype=np.int64)
+    return active, members, merges
+
+
+def labels_from_members(
+    active: np.ndarray, members: list[list[int]], n_leaves: int
+) -> np.ndarray:
+    """Canonical flat labels: cluster ids ordered by first client occurrence."""
+    labels = np.full(n_leaves, -1, dtype=np.int64)
     next_id = 0
     order = sorted(np.where(active)[0], key=lambda c: min(members[c]))
     for c in order:
@@ -135,6 +149,80 @@ def hierarchical_clustering(
         next_id += 1
     assert (labels >= 0).all()
     return labels
+
+
+def cluster_distance_matrix(
+    A: np.ndarray, groups: list[list[int]], linkage: str = "average"
+) -> np.ndarray:
+    """Cluster-cluster distances from leaf distances, by direct aggregation.
+
+    For the three supported linkages the cluster distance is a plain
+    reduction over leaf pairs (mean / max / min), so it can be computed
+    directly from the leaf matrix instead of replaying Lance-Williams merge
+    by merge — the engine uses this to seed a continuation run on a small
+    active forest.  ``A`` is (K, K) leaf distances; ``groups[i]`` the leaf
+    ids of cluster i.  Returns (C, C) float64 with an inf diagonal.
+    """
+    A = np.asarray(A, dtype=np.float64)
+    C = len(groups)
+    out = np.empty((C, C), dtype=np.float64)
+    if linkage == "average":
+        T = np.zeros((A.shape[0], C), dtype=np.float64)
+        for c, g in enumerate(groups):
+            T[g, c] = 1.0
+        counts = np.array([len(g) for g in groups], dtype=np.float64)
+        out = (T.T @ A @ T) / np.outer(counts, counts)
+    else:
+        reduce = np.min if linkage == "single" else np.max
+        for a in range(C):
+            rows = A[groups[a]]
+            for b in range(a + 1, C):
+                out[a, b] = out[b, a] = reduce(rows[:, groups[b]])
+    np.fill_diagonal(out, np.inf)
+    return out
+
+
+def hierarchical_clustering(
+    A: np.ndarray,
+    beta: Optional[float] = None,
+    *,
+    n_clusters: Optional[int] = None,
+    linkage: str = "average",
+) -> np.ndarray:
+    """Cluster clients from proximity matrix ``A``.
+
+    Parameters
+    ----------
+    A: (K, K) symmetric distance matrix, zero diagonal.
+    beta: distance threshold — merging stops once the closest pair of
+        clusters is farther than ``beta``.  (Paper's ``HC(A, beta)``.)
+    n_clusters: alternatively stop at exactly this many clusters.
+    linkage: "single" | "complete" | "average".
+
+    Returns
+    -------
+    labels: (K,) int cluster ids in [0, Z).  Label ids are canonicalized by
+        first client occurrence so results are deterministic.
+    """
+    A = np.asarray(A, dtype=np.float64)
+    K = A.shape[0]
+    if A.shape != (K, K):
+        raise ValueError("A must be square")
+    if K == 1:
+        if (beta is None) == (n_clusters is None):
+            raise ValueError("specify exactly one of beta / n_clusters")
+        if linkage not in _LINKAGES:
+            raise ValueError(f"linkage must be one of {_LINKAGES}")
+        return np.zeros(1, dtype=np.int64)
+    active, members, _ = merge_forest(
+        A.copy(),
+        np.ones(K, dtype=np.int64),
+        [[i] for i in range(K)],
+        beta=beta,
+        n_clusters=n_clusters,
+        linkage=linkage,
+    )
+    return labels_from_members(active, members, K)
 
 
 def n_clusters_for_beta(A: np.ndarray, beta: float, linkage: str = "average") -> int:

@@ -129,6 +129,33 @@ def _eq2_jacobi(G: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.clip(lam, 0.0, None))
 
 
+def eq3_from_diag(d: jax.Array) -> jax.Array:
+    """Eq. 3 reduction from ``(..., p)`` Gram *diagonal* entries, degrees."""
+    d = jnp.clip(jnp.abs(d), 0.0, 1.0)
+    return jnp.sum(jnp.degrees(jnp.arccos(d)), axis=-1)
+
+
+def measure_pair(
+    Ui: jax.Array, Uj: jax.Array, measure: str, *, eq2_solver: str = "jacobi"
+) -> jax.Array:
+    """Pairwise measure block straight from signature stacks:
+    ``(a, n, p) x (b, n, p) -> (a, b)`` degrees.
+
+    The jnp backends' tile: eq3 needs only the ``p`` Gram diagonal entries
+    ``G_ab[r, r] = <Ui[a, :, r], Uj[b, :, r]>``, so it takes the
+    ``einsum("anr,bnr->abr")`` route — p of the p^2 dot products, a ~p-fold
+    flop cut over materializing the full ``(a, b, p, p)`` Gram block.  eq2
+    genuinely needs every entry (largest singular value) and keeps the full
+    Gram + :func:`measure_from_gram` reduction.
+    """
+    Ui = Ui.astype(jnp.float32)
+    Uj = Uj.astype(jnp.float32)
+    if measure == "eq3":
+        return eq3_from_diag(jnp.einsum("anr,bnr->abr", Ui, Uj))
+    G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+    return measure_from_gram(G, measure, eq2_solver=eq2_solver)
+
+
 def measure_from_gram(
     G: jax.Array, measure: str, *, eq2_solver: str = "jacobi"
 ) -> jax.Array:
@@ -140,8 +167,7 @@ def measure_from_gram(
     is the only one that lowers inside the Pallas kernel.
     """
     if measure == "eq3":
-        diag = jnp.clip(jnp.abs(jnp.diagonal(G, axis1=-2, axis2=-1)), 0.0, 1.0)
-        return jnp.sum(jnp.degrees(jnp.arccos(diag)), axis=-1)
+        return eq3_from_diag(jnp.diagonal(G, axis1=-2, axis2=-1))
     if measure != "eq2":
         raise ValueError(f"unknown measure: {measure!r}")
     if eq2_solver == "jacobi":

@@ -2,23 +2,24 @@
 
 Separates the paper's two concerns:
 
-* **Clustering state machine** (this module) — signatures in, cluster ids out,
-  one-shot at federation start, extendable for newcomers (Algorithms 2-3).
+* **Clustering state machine** — signatures in, cluster ids out.  Since the
+  streaming-engine refactor this lives in :mod:`repro.core.engine`;
+  :class:`PACFLClustering` here is a thin immutable view over a
+  :class:`~repro.core.engine.ClusterEngine` (one-shot at federation start,
+  ``extend`` for newcomers per Algorithms 2-3, ``depart`` for churn).
 * **Per-cluster federated optimization** — ``repro.fl.trainer`` runs the round
   loop with the ``pacfl`` strategy, which consumes :class:`PACFLClustering`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pme
-from repro.core.angles import proximity_matrix
-from repro.core.hc import hierarchical_clustering
+from repro.core.engine import ClusterEngine, EngineConfig, MembershipSnapshot
 from repro.core.svd import batched_client_signatures, bucket_samples
 
 
@@ -46,15 +47,50 @@ class PACFLConfig:
     proximity_block: Optional[int] = None
 
 
+def engine_config(config: PACFLConfig) -> EngineConfig:
+    """The engine-facing slice of a :class:`PACFLConfig`."""
+    return EngineConfig(
+        beta=config.beta,
+        n_clusters=config.n_clusters,
+        measure=config.measure,
+        linkage=config.linkage,
+        backend=config.proximity_backend,
+        block_size=config.proximity_block,
+    )
+
+
 @dataclass
 class PACFLClustering:
-    """Server-side clustering state after the one-shot phase."""
+    """Server-side clustering state — a thin view over the streaming engine.
+
+    ``U`` / ``A`` / ``labels`` are derived views: the engine owns the
+    signatures, a condensed float32 distance store (``A`` is materialized on
+    demand) and the incrementally-maintained dendrogram.  ``extend`` and
+    ``depart`` fork the engine, so this object stays immutable-by-convention
+    exactly like the pre-engine dataclass.  (A holder that *wants* streaming
+    mutation — e.g. the PACFL FL strategy absorbing churn every few rounds —
+    calls ``self.engine.admit/depart`` directly instead of forking; the
+    views then track the live engine.)
+    """
 
     config: PACFLConfig
-    U: jnp.ndarray                  # (K, n, p) stacked signatures
-    A: np.ndarray                   # (K, K) proximity matrix, degrees
-    labels: np.ndarray              # (K,) cluster ids
+    engine: ClusterEngine
     signature_bytes: int = 0        # uplink cost of the one-shot phase
+
+    @property
+    def U(self) -> jnp.ndarray:
+        """(K, n, p) stacked signatures."""
+        return self.engine.U
+
+    @property
+    def A(self) -> np.ndarray:
+        """(K, K) proximity matrix in degrees (dense view of the store)."""
+        return self.engine.dense()
+
+    @property
+    def labels(self) -> np.ndarray:
+        """(K,) stable cluster ids (seen clients keep theirs across churn)."""
+        return self.engine.labels
 
     @property
     def n_clusters(self) -> int:
@@ -63,32 +99,39 @@ class PACFLClustering:
     def cluster_members(self, z: int) -> np.ndarray:
         return np.where(self.labels == z)[0]
 
+    def membership(self) -> MembershipSnapshot:
+        """Versioned (ids, labels) snapshot for the FL layer."""
+        return self.engine.membership()
+
     def extend(self, U_new: jnp.ndarray) -> "PACFLClustering":
         """Algorithms 2+3: admit newcomers, preserving seen-client ids.
 
         Honors the same clustering criterion as the one-shot phase: a set
         ``config.n_clusters`` overrides ``config.beta`` here exactly as it
-        does in :func:`cluster_clients`.
+        does in :func:`cluster_clients`.  Streaming: only the (M, B) cross
+        and (B, B) square proximity blocks are computed, and the cached
+        dendrogram is updated incrementally instead of re-clustered.
         """
-        A_ext, U_ext, assignment = pme.assign_newcomers(
-            self.A,
-            self.U,
-            U_new,
-            self.config.beta,
-            measure=self.config.measure,
-            linkage=self.config.linkage,
-            n_clusters=self.config.n_clusters,
-            old_labels=self.labels,
-            backend=self.config.proximity_backend,
-            block_size=self.config.proximity_block,
-        )
+        eng = self.engine.copy()
+        eng.admit(U_new)
         extra_bytes = int(U_new.size * U_new.dtype.itemsize)
         return PACFLClustering(
             config=self.config,
-            U=U_ext,
-            A=A_ext,
-            labels=assignment.labels,
+            engine=eng,
             signature_bytes=self.signature_bytes + extra_bytes,
+        )
+
+    def depart(self, clients: np.ndarray) -> "PACFLClustering":
+        """Churn: remove clients by stable id (``engine.ids`` — equal to row
+        position until the first departure) — the symmetric delete to
+        :meth:`extend`, a scenario the batch-synchronous API could not
+        express."""
+        eng = self.engine.copy()
+        eng.depart(np.asarray(clients))
+        return PACFLClustering(
+            config=self.config,
+            engine=eng,
+            signature_bytes=self.signature_bytes,
         )
 
 
@@ -155,24 +198,15 @@ def compute_signatures(
 def cluster_clients(
     U_stack: jnp.ndarray, config: PACFLConfig
 ) -> PACFLClustering:
-    """Server-side one-shot phase: proximity matrix + HC -> clustering."""
-    A = np.asarray(
-        proximity_matrix(
-            U_stack,
-            measure=config.measure,
-            backend=config.proximity_backend,
-            block_size=config.proximity_block,
-        )
-    )
-    if config.n_clusters is not None:
-        labels = hierarchical_clustering(
-            A, n_clusters=config.n_clusters, linkage=config.linkage
-        )
-    else:
-        labels = hierarchical_clustering(A, config.beta, linkage=config.linkage)
+    """Server-side one-shot phase: proximity matrix + HC -> clustering.
+
+    Bootstraps a :class:`~repro.core.engine.ClusterEngine` (which caches the
+    dendrogram merge script for later streaming ``extend``/``depart``).
+    """
+    engine = ClusterEngine.from_signatures(U_stack, engine_config(config))
     sig_bytes = int(U_stack.size * U_stack.dtype.itemsize)
     return PACFLClustering(
-        config=config, U=U_stack, A=A, labels=labels, signature_bytes=sig_bytes
+        config=config, engine=engine, signature_bytes=sig_bytes
     )
 
 

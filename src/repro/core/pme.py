@@ -3,7 +3,9 @@
 PME extends an existing (M x M) proximity matrix with B newcomer signatures
 without recomputing seen-client pairs — newcomers join in O((M+B) * B) angle
 evaluations, and with an unchanged ``beta`` the old clients keep their cluster
-ids (tested as an invariant).
+ids (tested as an invariant).  :func:`assign_newcomers` delegates the
+clustering update to the streaming engine (:mod:`repro.core.engine`) instead
+of re-running hierarchical clustering over the extended matrix.
 """
 from __future__ import annotations
 
@@ -13,8 +15,40 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.angles import cross_proximity
-from repro.core.hc import hierarchical_clustering
+from repro.core.angles import cross_proximity, proximity_matrix
+
+
+def proximity_blocks(
+    U_old: jnp.ndarray,
+    U_new: jnp.ndarray,
+    *,
+    measure: str = "eq3",
+    backend: str = "auto",
+    block_size: Optional[int] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """The two admission blocks: (M, B) seen-vs-new cross + (B, B) square.
+
+    Shared by :func:`extend_proximity_matrix` and the streaming engine's
+    ``admit`` so the two paths cannot drift (the benchmark asserts their
+    label parity).  The square comes hygiene'd (symmetric, zero diagonal)
+    from :func:`proximity_matrix`; a lone newcomer gets the trivial zero
+    block directly.
+    """
+    B = int(U_new.shape[0])
+    C = np.asarray(
+        cross_proximity(
+            U_old, U_new, measure=measure, backend=backend, block_size=block_size
+        )
+    )
+    if B > 1:
+        square = np.asarray(
+            proximity_matrix(
+                U_new, measure=measure, backend=backend, block_size=block_size
+            )
+        )
+    else:
+        square = np.zeros((1, 1), dtype=np.float32)
+    return C, square
 
 
 def extend_proximity_matrix(
@@ -28,9 +62,14 @@ def extend_proximity_matrix(
 ) -> tuple[np.ndarray, jnp.ndarray]:
     """Algorithm 2: returns (A_extended, U_extended).
 
-    Only the new block columns/rows are computed — an (M+B, B) cross block
-    through :func:`repro.core.angles.cross_proximity` — so extension costs
-    O((M+B) * B) angle evaluations, never a fresh (M+B)^2 recomputation.
+    Only the new blocks are computed: the (M, B) seen-vs-new cross block
+    through :func:`repro.core.angles.cross_proximity` plus the (B, B)
+    new-vs-new square through :func:`proximity_matrix` — O((M+B) * B) angle
+    evaluations, never a fresh (M+B)^2 recomputation.  (An earlier revision
+    ran one (M+B, B) cross product against ``U_ext``, which evaluated every
+    newcomer-vs-newcomer pair twice — both (i, j) and (j, i) — before
+    symmetrizing; the square backend computes each pair once and applies
+    the same hygiene pass as the one-shot phase.)
 
     Parameters
     ----------
@@ -40,21 +79,15 @@ def extend_proximity_matrix(
     """
     A_old = np.asarray(A_old)
     M = A_old.shape[0]
-    B = U_new.shape[0]
+    B = int(U_new.shape[0])
     U_ext = jnp.concatenate([U_old, U_new], axis=0)
-    C = np.asarray(
-        cross_proximity(
-            U_ext, U_new, measure=measure, backend=backend, block_size=block_size
-        )
-    )  # (M+B, B)
+    C, nn = proximity_blocks(
+        U_old, U_new, measure=measure, backend=backend, block_size=block_size
+    )
     A_ext = np.zeros((M + B, M + B), dtype=A_old.dtype)
     A_ext[:M, :M] = A_old
-    A_ext[:M, M:] = C[:M]
-    A_ext[M:, :M] = C[:M].T
-    # newcomer-vs-newcomer block: symmetrize and zero the diagonal exactly,
-    # matching the hygiene pass of the square kernels.
-    nn = 0.5 * (C[M:] + C[M:].T)
-    np.fill_diagonal(nn, 0.0)
+    A_ext[:M, M:] = C
+    A_ext[M:, :M] = C.T
     A_ext[M:, M:] = nn
     return A_ext, U_ext
 
@@ -119,28 +152,51 @@ def assign_newcomers(
     backend: str = "auto",
     block_size: Optional[int] = None,
 ) -> tuple[np.ndarray, jnp.ndarray, NewcomerAssignment]:
-    """Algorithm 3: extend A, re-run HC with the same criterion, read off ids.
+    """Algorithm 3: extend A and fold the newcomers into the dendrogram.
 
-    Returns (A_extended, U_extended, assignment).  ``n_clusters``, when set,
-    overrides ``beta`` exactly as in the one-shot phase (fixed cluster
-    count).  If ``old_labels`` is given, newcomer labels are remapped onto
-    the old cluster ids via :func:`remap_onto_old_ids` so existing cluster
+    Delegates to :meth:`repro.core.engine.ClusterEngine.admit`: the engine
+    adopts ``A_old`` (adding its merge script in one O(M^2) bootstrap pass,
+    the same cost the old re-cluster-the-world step paid on *every* call),
+    then admits the batch incrementally.  The labels are those a full
+    re-clustering of the extended matrix would produce (oracle-parity
+    property of the engine).  ``n_clusters``, when set, overrides ``beta``
+    exactly as in the one-shot phase (fixed cluster count).  If
+    ``old_labels`` is given, newcomer labels are remapped onto the old
+    cluster ids via :func:`remap_onto_old_ids` so existing cluster
     identities are preserved for the caller.
-    """
-    M = np.asarray(A_old).shape[0]
-    A_ext, U_ext = extend_proximity_matrix(
-        A_old, U_old, U_new, measure=measure, backend=backend, block_size=block_size
-    )
-    if n_clusters is not None:
-        labels = hierarchical_clustering(
-            A_ext, n_clusters=n_clusters, linkage=linkage
-        )
-    else:
-        labels = hierarchical_clustering(A_ext, beta, linkage=linkage)
 
+    Callers with a long-lived clustering should hold a
+    :class:`~repro.core.engine.ClusterEngine` (or ``PACFLClustering``)
+    instead and call ``admit``/``extend`` directly — that skips the
+    bootstrap pass and makes successive admissions near-O(B * K).
+
+    Precision note: the engine stores distances in condensed float32, so
+    with a float64 ``A_old`` the clustering criterion is evaluated on
+    float32-rounded values (PACFL proximity matrices are float32 already).
+    The returned ``A_ext`` carries the caller's seen block verbatim.
+    """
+    from repro.core.engine import ClusterEngine, EngineConfig
+
+    M = np.asarray(A_old).shape[0]
+    engine = ClusterEngine.from_proximity(
+        A_old, U_old,
+        EngineConfig(
+            beta=beta, n_clusters=n_clusters, measure=measure,
+            linkage=linkage, backend=backend, block_size=block_size,
+        ),
+    )
+    engine.admit(U_new)
+    labels = engine.canonical_labels
     if old_labels is not None:
         labels = remap_onto_old_ids(labels, old_labels, M)
 
+    A_old = np.asarray(A_old)
+    A_ext = engine.dense().astype(A_old.dtype)
+    # the engine's condensed store is float32; hand the caller's seen block
+    # back verbatim so A_ext[:M, :M] == A_old bitwise for float64 inputs
+    # (clustering itself runs on the float32-rounded store — documented).
+    A_ext[:M, :M] = A_old
+    U_ext = engine.U
     newcomer_labels = labels[M:]
     seen = set(labels[:M].tolist())
     new_cluster = np.array([lbl not in seen for lbl in newcomer_labels])

@@ -73,6 +73,10 @@ class Strategy:
     name = "base"
     uses_anchor = False
     uses_cv = False
+    # Strategies that can absorb clients joining/leaving between rounds set
+    # this and (if they hold per-client or per-cluster state) override
+    # handle_churn.  The trainer refuses a churn schedule otherwise.
+    supports_churn = False
 
     def __init__(self, apply_fn: Callable, init_fn: Callable, cfg: FLConfig):
         self.apply_fn = apply_fn
@@ -92,6 +96,19 @@ class Strategy:
     def eval_params(self) -> PyTree:
         """Stacked per-client params (K, ...) used for local-test evaluation."""
         raise NotImplementedError
+
+    def handle_churn(self, data: StackedClients, event) -> None:
+        """Absorb a mid-federation membership change (``ChurnEvent``).
+
+        The base implementation just swaps the stacked data — correct for
+        strategies whose state is global (FedAvg/FedProx/FedNova/
+        Per-FedAvg).  Strategies with per-client or per-cluster state must
+        override (PACFL routes through its cluster engine) or leave
+        ``supports_churn`` False.
+        """
+        if not self.supports_churn:
+            raise NotImplementedError(f"{self.name} does not support churn")
+        self.data = data
 
     # -- shared machinery ---------------------------------------------------
     def _build(self, data: StackedClients, *, prox_mu: float = 0.0, use_cv: bool = False):
@@ -144,6 +161,7 @@ class Strategy:
 
 class FedAvg(Strategy):
     name = "fedavg"
+    supports_churn = True   # all state is global: churn just swaps the data
 
     def setup(self, key, data):
         self._build(data)
@@ -328,6 +346,7 @@ class LGFedAvg(Strategy):
 
 class PerFedAvg(Strategy):
     name = "perfedavg"
+    supports_churn = True   # global params; personalization happens at eval
 
     def setup(self, key, data):
         self._build(data)
@@ -375,6 +394,13 @@ class PerFedAvg(Strategy):
 
 class IFCA(Strategy):
     name = "ifca"
+    supports_churn = True
+
+    def handle_churn(self, data, event):
+        # cluster models are global; the per-client assignment cache just
+        # resizes (re-derived from losses on the next round / eval anyway)
+        self.data = data
+        self.assign = np.zeros(data.n_clients, np.int64)
 
     def setup(self, key, data):
         self._build(data)
@@ -491,20 +517,26 @@ class CFL(Strategy):
 
 class PACFL(Strategy):
     """The paper's method: one-shot principal-angle clustering + per-cluster
-    FedAvg (Algorithm 1)."""
+    FedAvg (Algorithm 1).
+
+    Membership is owned by the streaming cluster engine, so clients can join
+    *and leave* between rounds (``handle_churn``): departures drop out of
+    the condensed distance store, newcomers cost only their signature upload
+    plus the (M, B) cross block, and surviving clients keep their stable
+    cluster ids — cluster models persist across churn.
+    """
 
     name = "pacfl"
+    supports_churn = True
 
     def setup(self, key, data):
         self._build(data)
+        self._key = key
         # One-shot phase: clients compute + upload U_p signatures.  The ragged
         # (features, samples) matrices go through the shape-bucketed batched
         # SVD, and the proximity matrix through the backend dispatch selected
         # by cfg.pacfl.proximity_backend — both scale knobs live on the config.
-        mats = [
-            jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
-        ]  # (features, samples)
-        U = compute_signatures(mats, self.cfg.pacfl, key=key)
+        U = compute_signatures(self._client_mats(data), self.cfg.pacfl, key=key)
         self.clustering = cluster_clients(U, self.cfg.pacfl)
         self.labels = self.clustering.labels
         Z = self.clustering.n_clusters
@@ -512,6 +544,57 @@ class PACFL(Strategy):
             jnp.broadcast_to(key, (Z,) + key.shape)
         )  # all clusters start from the same theta_g^0 (Algorithm 1 line 12)
         self.comm_up += self.clustering.signature_bytes
+
+    @staticmethod
+    def _client_mats(data):
+        """(features, samples) data matrices, one per stacked client."""
+        return [
+            jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
+        ]
+
+    def handle_churn(self, data, event):
+        """Fold a membership change into the engine (depart, then admit).
+
+        Deliberately mutates ``self.clustering.engine`` in place — the
+        strategy owns its clustering for the federation's lifetime, and the
+        engine IS the streaming-mutation API (the fork-on-write convention
+        of ``PACFLClustering.extend``/``depart`` is for core callers that
+        hand out snapshots).  Engine rows track the trainer's client-list
+        order (survivors keep their order, newcomers append), so leave
+        positions map straight to engine stable ids.  New clusters (a newcomer unlike every seen
+        client, or an old cluster split by departures) get fresh models from
+        theta_g^0; existing clusters keep their trained models.
+        """
+        engine = self.clustering.engine
+        snapshot = engine.membership()
+        if event.leave:
+            engine.depart(snapshot.ids[np.asarray(event.leave, dtype=np.int64)])
+        if event.join:
+            B = len(event.join)
+            mats = [
+                jnp.asarray(data.x[k, : data.n[k]].T)
+                for k in range(data.n_clients - B, data.n_clients)
+            ]  # only the appended newcomers — not all K client matrices
+            U_new = compute_signatures(
+                mats, self.cfg.pacfl, key=jax.random.fold_in(self._key, engine.version)
+            )
+            engine.admit(U_new)
+            extra = int(U_new.size * U_new.dtype.itemsize)
+            self.clustering.signature_bytes += extra
+            self.comm_up += extra
+        self.labels = engine.labels
+        self.data = data
+        # grow the per-cluster model stack for any fresh stable ids
+        Z_have = jax.tree.leaves(self.cluster_params)[0].shape[0]
+        Z_need = int(self.labels.max()) + 1
+        if Z_need > Z_have:
+            fresh = jax.vmap(self.init_fn)(
+                jnp.broadcast_to(self._key, (Z_need - Z_have,) + self._key.shape)
+            )
+            self.cluster_params = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                self.cluster_params, fresh,
+            )
 
     def run_round(self, rnd, sampled, key):
         m = len(sampled)

@@ -1,8 +1,13 @@
-"""Federation driver: round loop, client sampling, evaluation, history.
+"""Federation driver: round loop, client sampling, evaluation, history, churn.
 
 ``run_federation`` is the single entry point used by benchmarks, examples and
 tests.  It is model-agnostic: pass an ``apply_fn`` / ``init_fn`` pair from
 ``repro.models.cnn.MODEL_ZOO`` (or any functional model).
+
+Clients may join and leave *between rounds* via a ``churn`` schedule of
+:class:`ChurnEvent`s — strategies that advertise ``supports_churn`` get a
+``handle_churn`` callback with the re-stacked data (PACFL folds the change
+into its streaming cluster engine; global strategies just swap the data).
 """
 from __future__ import annotations
 
@@ -16,6 +21,21 @@ import numpy as np
 from repro.fl.client import StackedClients, stack_clients
 from repro.fl.partition import ClientData
 from repro.fl.strategies import STRATEGIES, FLConfig, Strategy
+
+
+@dataclass
+class ChurnEvent:
+    """Membership change applied before round ``rnd`` runs.
+
+    ``leave`` holds positions into the client list *as it stands when the
+    event fires* (after earlier events); ``join`` appends new clients at the
+    end, in order.  A single event may do both — departures are processed
+    first, matching the engine's depart-then-admit order.
+    """
+
+    rnd: int
+    join: list[ClientData] = field(default_factory=list)
+    leave: list[int] = field(default_factory=list)
 
 
 @dataclass
@@ -67,19 +87,51 @@ def run_federation(
     eval_every: int = 5,
     verbose: bool = False,
     strategy_kwargs: Optional[dict] = None,
+    churn: Optional[list[ChurnEvent]] = None,
 ) -> FederationResult:
     key = jax.random.PRNGKey(seed)
+    clients = list(clients)
     data = stack_clients(clients)
     cls = STRATEGIES[strategy_name]
     strat: Strategy = cls(apply_fn, init_fn, cfg, **(strategy_kwargs or {}))
     strat.setup(jax.random.fold_in(key, 0), data)
 
+    churn = sorted(churn or [], key=lambda e: e.rnd)
+    if churn and not strat.supports_churn:
+        raise ValueError(
+            f"strategy {strategy_name!r} does not support mid-federation churn"
+        )
+    for ev in churn:
+        if not 1 <= ev.rnd <= cfg.rounds:
+            raise ValueError(
+                f"churn event rnd={ev.rnd} outside the federation's "
+                f"round range [1, {cfg.rounds}] — it would silently never fire"
+            )
+
     rng = np.random.default_rng(seed)
-    K = data.n_clients
-    m = max(1, int(round(cfg.sample_frac * K)))
     records: list[RoundRecord] = []
     t0 = time.time()
     for rnd in range(1, cfg.rounds + 1):
+        for ev in (e for e in churn if e.rnd == rnd):
+            for pos in ev.leave:
+                if not 0 <= pos < len(clients):
+                    raise IndexError(
+                        f"churn round {rnd}: leave position {pos} out of range"
+                    )
+            leaving = set(ev.leave)
+            keep = [i for i in range(len(clients)) if i not in leaving]
+            clients = [clients[i] for i in keep] + list(ev.join)
+            if not clients:
+                raise ValueError(f"churn round {rnd} removed every client")
+            data = stack_clients(clients)
+            strat.handle_churn(data, ev)
+            if verbose:
+                print(
+                    f"[{strategy_name}] round {rnd:4d} churn: "
+                    f"-{len(ev.leave)} +{len(ev.join)} -> K={len(clients)}"
+                )
+        K = data.n_clients
+        m = max(1, min(K, int(round(cfg.sample_frac * K))))
         sampled = np.sort(rng.choice(K, size=m, replace=False))
         strat.run_round(rnd, sampled, jax.random.fold_in(key, rnd))
         if rnd % eval_every == 0 or rnd == cfg.rounds:

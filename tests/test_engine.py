@@ -1,0 +1,388 @@
+"""Streaming cluster-membership engine tests.
+
+* condensed-store unit tests (append / remove / dense / rows round-trips),
+* the extend_proximity_matrix block decomposition regression,
+* the eq3 diagonal-only Gram fast-path parity,
+* oracle parity: admit / depart reproduce full re-cluster labels — including
+  the K=512 acceptance check in both beta and n_clusters modes,
+* churn invariants: admit-then-depart round-trips, stable-id remapping under
+  interleaved admit/depart sequences.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.angles import cross_proximity, proximity_matrix
+from repro.core.engine import ClusterEngine, CondensedDistances, EngineConfig
+from repro.core.hc import hierarchical_clustering
+from repro.core.measures import measure_from_gram, measure_pair
+from repro.core.pme import extend_proximity_matrix
+
+KEY = jax.random.PRNGKey(0)
+
+
+def canon(labels):
+    """Canonical relabel by first occurrence (partition comparison)."""
+    seen = {}
+    return np.array([seen.setdefault(int(x), len(seen)) for x in labels])
+
+
+def clustered_signatures(key, K, n=32, p=3, n_bases=6, spread=0.08):
+    """K orthonormal signatures concentrated around n_bases subspaces."""
+    kb, kc = jax.random.split(key)
+    bases = [
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(kb, i), (n, p)))[0]
+        for i in range(n_bases)
+    ]
+    stack = []
+    for k in range(K):
+        X = bases[k % n_bases] + spread * jax.random.normal(
+            jax.random.fold_in(kc, k), (n, p)
+        )
+        stack.append(jnp.linalg.qr(X)[0])
+    return jnp.stack(stack)
+
+
+def random_distances(rng, K, grid=False):
+    """Symmetric zero-diagonal distance matrix; grid=True forces many ties."""
+    X = (
+        rng.integers(1, 16, size=(K, K)).astype(np.float64)
+        if grid
+        else rng.random((K, K)) * 30
+    )
+    A = (X + X.T) / 2
+    np.fill_diagonal(A, 0)
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Condensed distance store
+# ---------------------------------------------------------------------------
+
+
+class TestCondensedStore:
+    def test_dense_roundtrip(self):
+        rng = np.random.default_rng(0)
+        A = random_distances(rng, 17).astype(np.float32)
+        st = CondensedDistances.from_dense(A)
+        np.testing.assert_array_equal(st.dense(), A)
+        assert st.nbytes == (17 * 16 // 2) * 4   # half the dense f32 matrix
+
+    def test_rows_match_dense(self):
+        rng = np.random.default_rng(1)
+        A = random_distances(rng, 23).astype(np.float32)
+        st = CondensedDistances.from_dense(A)
+        idx = np.array([0, 5, 22, 11])
+        np.testing.assert_allclose(st.rows(idx), A[idx].astype(np.float64))
+        assert st.get(3, 9) == A[3, 9] and st.get(9, 3) == A[3, 9]
+        assert st.get(4, 4) == 0.0
+
+    def test_append_block_is_pure_append(self):
+        rng = np.random.default_rng(2)
+        A = random_distances(rng, 20).astype(np.float32)
+        M, B = 14, 6
+        st = CondensedDistances.from_dense(A[:M, :M])
+        before = st.values.copy()
+        st.append_block(A[:M, M:], A[M:, M:])
+        np.testing.assert_array_equal(st.dense(), A)
+        # seen-pair entries were not rewritten
+        np.testing.assert_array_equal(st.values[: before.size], before)
+
+    def test_remove_compacts(self):
+        rng = np.random.default_rng(3)
+        A = random_distances(rng, 15).astype(np.float32)
+        st = CondensedDistances.from_dense(A)
+        keep = st.remove(np.array([0, 7, 14]))
+        np.testing.assert_array_equal(keep, np.setdiff1d(np.arange(15), [0, 7, 14]))
+        np.testing.assert_array_equal(st.dense(), A[np.ix_(keep, keep)])
+
+    def test_tiny_stores(self):
+        st = CondensedDistances(1)
+        assert st.dense().shape == (1, 1)
+        assert st.rows(np.array([0])).shape == (1, 1)
+        st.append_block(np.full((1, 1), 5.0), np.zeros((1, 1)))
+        assert st.get(0, 1) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: PME block decomposition + eq3 diagonal fast path
+# ---------------------------------------------------------------------------
+
+
+class TestExtendBlocks:
+    def test_blocks_match_direct_computation(self):
+        U = clustered_signatures(KEY, 13)
+        U_old, U_new = U[:9], U[9:]
+        A_old = np.asarray(proximity_matrix(U_old, "eq3", backend="jnp"))
+        A_ext, U_ext = extend_proximity_matrix(
+            A_old, U_old, U_new, measure="eq3", backend="jnp"
+        )
+        assert U_ext.shape[0] == 13
+        # seen block is carried over bitwise; the cross block IS the (M, B)
+        # cross_proximity output; the square block IS the hygiene'd square
+        np.testing.assert_array_equal(A_ext[:9, :9], A_old)
+        C = np.asarray(cross_proximity(U_old, U_new, measure="eq3", backend="jnp"))
+        np.testing.assert_array_equal(A_ext[:9, 9:], C)
+        np.testing.assert_array_equal(A_ext[9:, :9], C.T)
+        np.testing.assert_array_equal(
+            A_ext[9:, 9:],
+            np.asarray(proximity_matrix(U_new, "eq3", backend="jnp")),
+        )
+
+    @pytest.mark.parametrize("measure", ["eq2", "eq3"])
+    def test_assembly_matches_old_uext_route(self, measure):
+        """The old path cross-multiplied U_ext against U_new — including every
+        newcomer pair twice.  The decomposed assembly must agree."""
+        U = clustered_signatures(jax.random.fold_in(KEY, 1), 11)
+        U_old, U_new = U[:7], U[7:]
+        A_old = np.asarray(proximity_matrix(U_old, measure, backend="jnp"))
+        A_ext, _ = extend_proximity_matrix(
+            A_old, U_old, U_new, measure=measure, backend="jnp"
+        )
+        U_ext = jnp.concatenate([U_old, U_new], axis=0)
+        C_full = np.asarray(cross_proximity(U_ext, U_new, measure=measure, backend="jnp"))
+        old_nn = 0.5 * (C_full[7:] + C_full[7:].T)
+        np.fill_diagonal(old_nn, 0.0)
+        old_ext = np.zeros((11, 11), dtype=A_old.dtype)
+        old_ext[:7, :7] = A_old
+        old_ext[:7, 7:] = C_full[:7]
+        old_ext[7:, :7] = C_full[:7].T
+        old_ext[7:, 7:] = old_nn
+        np.testing.assert_allclose(A_ext, old_ext, atol=1e-4)
+        # single-newcomer admission: the (1, 1) square block is exactly zero
+        A1, _ = extend_proximity_matrix(A_old, U_old, U_new[:1], measure=measure)
+        assert A1[7, 7] == 0.0
+
+    def test_symmetric_and_zero_diag(self):
+        U = clustered_signatures(jax.random.fold_in(KEY, 2), 10)
+        A_old = np.asarray(proximity_matrix(U[:6], "eq3"))
+        A_ext, _ = extend_proximity_matrix(A_old, U[:6], U[6:], measure="eq3")
+        np.testing.assert_array_equal(A_ext, A_ext.T)
+        np.testing.assert_array_equal(np.diag(A_ext), 0.0)
+
+
+class TestEq3DiagonalFastPath:
+    @pytest.mark.parametrize("p", [1, 3, 5])
+    def test_matches_full_gram_reduction(self, p):
+        ka, kb = jax.random.split(jax.random.fold_in(KEY, p))
+        Ui = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(jax.random.normal(ka, (7, 20, p)))
+        Uj = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(jax.random.normal(kb, (5, 20, p)))
+        fast = np.asarray(measure_pair(Ui, Uj, "eq3"))
+        G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+        full = np.asarray(measure_from_gram(G, "eq3"))
+        np.testing.assert_allclose(fast, full, atol=1e-3)
+
+    def test_eq2_still_uses_full_gram(self):
+        ka, kb = jax.random.split(jax.random.fold_in(KEY, 9))
+        Ui = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(jax.random.normal(ka, (4, 16, 3)))
+        Uj = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(jax.random.normal(kb, (4, 16, 3)))
+        got = np.asarray(measure_pair(Ui, Uj, "eq2", eq2_solver="svd"))
+        G = jnp.einsum("anp,bnq->abpq", Ui, Uj)
+        ref = np.asarray(measure_from_gram(G, "eq2", eq2_solver="svd"))
+        np.testing.assert_allclose(got, ref, atol=1e-4)
+
+    def test_proximity_matrix_eq3_unchanged_vs_tolerance(self):
+        """The wired-in diagonal route keeps all-backend parity."""
+        U = clustered_signatures(jax.random.fold_in(KEY, 3), 12)
+        ref = np.asarray(proximity_matrix(U, "eq3", backend="jnp"))
+        for backend in ("jnp_blocked", "jnp_sharded"):
+            got = np.asarray(
+                proximity_matrix(U, "eq3", backend=backend, block_size=5)
+            )
+            np.testing.assert_allclose(got, ref, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity: the engine's labels == full re-clustering of its store
+# ---------------------------------------------------------------------------
+
+
+def _oracle(engine, cfg):
+    kw = (
+        {"n_clusters": cfg.n_clusters}
+        if cfg.n_clusters is not None
+        else {"beta": cfg.beta}
+    )
+    return hierarchical_clustering(
+        engine.dense(np.float64), linkage=cfg.linkage, **kw
+    )
+
+
+class TestOracleParity:
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    @pytest.mark.parametrize("mode", ["beta", "n_clusters"])
+    def test_interleaved_admit_depart(self, linkage, mode):
+        rng = np.random.default_rng(hash((linkage, mode)) % 2**31)
+        key = jax.random.PRNGKey(3)
+        U = clustered_signatures(key, 24, n_bases=4, spread=0.2)
+        cfg = (
+            EngineConfig(beta=25.0, linkage=linkage)
+            if mode == "beta"
+            else EngineConfig(n_clusters=3, linkage=linkage)
+        )
+        eng = ClusterEngine.from_signatures(U, cfg)
+        for step in range(5):
+            if eng.n_clients > 6 and rng.random() < 0.5:
+                k = int(rng.integers(1, 4))
+                eng.depart(rng.choice(eng.ids, size=k, replace=False))
+            else:
+                B = int(rng.integers(1, 4))
+                eng.admit(
+                    clustered_signatures(
+                        jax.random.fold_in(key, 50 + step), B,
+                        n_bases=3, spread=0.3,
+                    )
+                )
+            assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
+
+    @pytest.mark.parametrize("linkage", ["average", "complete"])
+    def test_tie_heavy_grid_distances(self, linkage):
+        """Integer-grid distances force exact height ties — the hardest case
+        for the script-vs-dirty interleaving."""
+        rng = np.random.default_rng(11)
+        for mode_kw in ({"beta": 7.0}, {"n_clusters": 2}):
+            for _ in range(25):
+                K = int(rng.integers(6, 13))
+                A = random_distances(rng, K, grid=True)
+                M = K - int(rng.integers(1, 4))
+                cfg = EngineConfig(linkage=linkage, **mode_kw)
+                eng = ClusterEngine.from_proximity(
+                    A[:M, :M], jnp.zeros((M, 2, 1)), cfg
+                )
+                eng.store.append_block(A[:M, M:], A[M:, M:])
+                from repro.core.engine import replay
+
+                canonical, _, _ = replay(
+                    eng.store, eng._script,
+                    [[M + t] for t in range(K - M)],
+                    linkage=linkage, **mode_kw,
+                )
+                oracle = hierarchical_clustering(
+                    eng.store.dense(np.float64), linkage=linkage, **mode_kw
+                )
+                assert (canon(oracle) == canon(canonical)).all()
+
+    def test_k512_acceptance_both_modes(self):
+        """Acceptance: admit/depart reproduce full re-cluster labels at
+        K=512, in both beta and n_clusters modes."""
+        key = jax.random.PRNGKey(17)
+        U = clustered_signatures(key, 512, n_bases=12, spread=0.15)
+        U_new = clustered_signatures(
+            jax.random.fold_in(key, 1), 32, n_bases=16, spread=0.25
+        )
+        for cfg in (
+            EngineConfig(beta=30.0, measure="eq3"),
+            EngineConfig(n_clusters=12, measure="eq3"),
+        ):
+            eng = ClusterEngine.from_signatures(U, cfg)
+            res = eng.admit(U_new)
+            assert eng.n_clients == 544
+            assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
+            # departure of a random seen/new mix stays oracle-exact too
+            rng = np.random.default_rng(5)
+            eng.depart(rng.choice(eng.ids, size=40, replace=False))
+            assert eng.n_clients == 504
+            assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
+            # the replay did strictly less dendrogram work than re-clustering
+            assert res.stats.script_applied + res.stats.dirty_merges <= 544
+
+
+# ---------------------------------------------------------------------------
+# Churn invariants
+# ---------------------------------------------------------------------------
+
+
+class TestChurnInvariants:
+    def test_admit_then_depart_roundtrip(self):
+        key = jax.random.PRNGKey(23)
+        U = clustered_signatures(key, 20, n_bases=4)
+        cfg = EngineConfig(beta=25.0)
+        eng = ClusterEngine.from_signatures(U, cfg)
+        labels0 = eng.labels.copy()
+        ids0 = eng.ids.copy()
+        res = eng.admit(clustered_signatures(jax.random.fold_in(key, 9), 5,
+                                             n_bases=2, spread=0.4))
+        eng.depart(res.ids)
+        np.testing.assert_array_equal(eng.ids, ids0)
+        np.testing.assert_array_equal(eng.labels, labels0)
+        # and the canonical partition matches a fresh bootstrap
+        fresh = ClusterEngine.from_signatures(U, cfg)
+        assert (canon(eng.canonical_labels) == canon(fresh.canonical_labels)).all()
+
+    def test_depart_then_readmit_same_partition(self):
+        key = jax.random.PRNGKey(29)
+        U = clustered_signatures(key, 16, n_bases=4)
+        cfg = EngineConfig(beta=25.0)
+        eng = ClusterEngine.from_signatures(U, cfg)
+        part0 = canon(eng.labels)
+        gone = np.array([3, 8, 15])
+        eng.depart(gone)
+        eng.admit(U[gone])   # same signatures come back (fresh ids)
+        # partition identical up to id remap: readmitted clients sit where
+        # they sat before (rows: survivors in order, returners appended)
+        perm = np.concatenate([np.setdiff1d(np.arange(16), gone), gone])
+        assert (canon(eng.canonical_labels) == canon(part0[perm])).all()
+
+    def test_stable_ids_monotone_and_unique(self):
+        key = jax.random.PRNGKey(31)
+        eng = ClusterEngine.from_signatures(
+            clustered_signatures(key, 10), EngineConfig(beta=25.0)
+        )
+        seen_ids = set(eng.ids.tolist())
+        rng = np.random.default_rng(0)
+        for step in range(6):
+            if eng.n_clients > 5 and step % 2:
+                eng.depart(rng.choice(eng.ids, size=2, replace=False))
+            else:
+                res = eng.admit(
+                    clustered_signatures(jax.random.fold_in(key, step), 3)
+                )
+                # fresh ids never recycle departed ones
+                assert not (set(res.ids.tolist()) & seen_ids)
+                seen_ids |= set(res.ids.tolist())
+            assert len(set(eng.ids.tolist())) == eng.n_clients
+
+    def test_remap_stability_interleaved(self):
+        """Seen clients keep their stable cluster ids across admit/depart
+        as long as the partition keeps them together (remap invariant)."""
+        key = jax.random.PRNGKey(37)
+        U = clustered_signatures(key, 18, n_bases=3, spread=0.05)
+        cfg = EngineConfig(beta=25.0)
+        eng = ClusterEngine.from_signatures(U, cfg)
+        rng = np.random.default_rng(2)
+        for step in range(5):
+            before = {int(i): int(l) for i, l in zip(eng.ids, eng.labels)}
+            b_canon = canon(eng.labels)
+            if step % 2:
+                eng.depart(rng.choice(eng.ids, size=2, replace=False))
+            else:
+                eng.admit(clustered_signatures(
+                    jax.random.fold_in(key, 80 + step), 2, n_bases=3, spread=0.05
+                ))
+            # survivors whose canonical partition is unchanged keep ids
+            surv = np.isin(eng.ids, list(before))
+            after_part = canon(eng.canonical_labels[surv])
+            idx = [i for i, s in enumerate(surv) if s]
+            prev_part = canon(np.array([
+                b_canon[list(before).index(int(eng.ids[i]))] for i in idx
+            ]))
+            if (after_part == prev_part).all():
+                for i in idx:
+                    assert int(eng.labels[i]) == before[int(eng.ids[i])]
+
+    def test_pacfl_clustering_view_fork_semantics(self):
+        """PACFLClustering.extend/depart fork the engine — the original
+        object is untouched (pre-engine immutability contract)."""
+        from repro.core.pacfl import PACFLConfig, cluster_clients
+
+        U = clustered_signatures(jax.random.PRNGKey(41), 12, n_bases=3)
+        cl = cluster_clients(U, PACFLConfig(p=3, beta=25.0, measure="eq3"))
+        labels0 = cl.labels.copy()
+        cl2 = cl.extend(clustered_signatures(jax.random.PRNGKey(42), 3))
+        cl3 = cl2.depart(cl2.engine.ids[-3:])
+        assert cl.engine.n_clients == 12
+        np.testing.assert_array_equal(cl.labels, labels0)
+        assert cl2.engine.n_clients == 15
+        np.testing.assert_array_equal(cl3.labels, labels0)
+        assert cl.A.shape == (12, 12) and cl2.A.shape == (15, 15)

@@ -171,3 +171,53 @@ def test_pacfl_mix2_two_clusters():
     labels = strat.labels
     assert len(set(labels[:5])) == 1 and len(set(labels[5:])) == 1
     assert labels[0] != labels[5]
+
+
+class TestChurn:
+    """Mid-federation membership changes via the streaming cluster engine."""
+
+    def test_pacfl_join_and_leave_between_rounds(self, small_fed):
+        from repro.fl import ChurnEvent
+
+        clients, init_fn, cfg = small_fed
+        churn = [ChurnEvent(rnd=2, join=clients[10:12], leave=[0, 3]),
+                 ChurnEvent(rnd=4, leave=[1])]
+        res = run_federation("pacfl", clients[:10], mlp_clf_apply, init_fn,
+                             cfg, seed=0, churn=churn)
+        # 10 - 2 + 2 - 1 clients remain, labels/evals sized to match
+        assert len(res.final_accs) == 9
+        strat = res.strategy_obj
+        assert strat.labels.shape == (9,)
+        assert strat.clustering.engine.n_clients == 9
+        # cluster model stack covers every live stable label
+        Z = jax.tree.leaves(strat.cluster_params)[0].shape[0]
+        assert int(strat.labels.max()) < Z
+        # engine membership is oracle-exact after the churn sequence
+        from repro.core.hc import hierarchical_clustering
+        eng = strat.clustering.engine
+        oracle = hierarchical_clustering(
+            eng.dense(np.float64), cfg.pacfl.beta, linkage=cfg.pacfl.linkage)
+
+        def canon(l):
+            seen = {}
+            return np.array([seen.setdefault(int(x), len(seen)) for x in l])
+        assert (canon(oracle) == canon(eng.canonical_labels)).all()
+
+    def test_global_strategies_absorb_churn(self, small_fed):
+        from repro.fl import ChurnEvent
+
+        clients, init_fn, cfg = small_fed
+        churn = [ChurnEvent(rnd=3, join=clients[10:11], leave=[2])]
+        for name in ("fedavg", "ifca"):
+            res = run_federation(name, clients[:10], mlp_clf_apply, init_fn,
+                                 cfg, seed=0, churn=churn)
+            assert len(res.final_accs) == 10
+
+    def test_unsupported_strategy_rejects_churn(self, small_fed):
+        from repro.fl import ChurnEvent
+
+        clients, init_fn, cfg = small_fed
+        with pytest.raises(ValueError, match="churn"):
+            run_federation("solo", clients[:10], mlp_clf_apply, init_fn,
+                           cfg, seed=0,
+                           churn=[ChurnEvent(rnd=2, leave=[0])])
