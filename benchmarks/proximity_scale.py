@@ -13,16 +13,20 @@ K=128, runs the sharded engine under a forced 4-device host platform
 backend), and writes ``BENCH_proximity_scale.json`` at the repo root.
 
 A ``streaming`` section times the cluster-engine admission path (cross
-blocks + incremental dendrogram replay) against the re-cluster-the-world
-baseline (extend_proximity_matrix + full hierarchical_clustering) for
-newcomer batches B at K in {512, 2048}, asserting label parity.
+blocks + en-bloc dendrogram replay) against both the sequential
+(pre-en-bloc) replay and the re-cluster-the-world baseline
+(extend_proximity_matrix + full hierarchical_clustering) for newcomer
+batches B at K in {512, 2048}, asserting label parity; a ``churn_queue``
+section checks that draining an async ChurnQueue (policy-sized admission
+batches, DrainPolicy fitted from a seeded probe) reproduces the labels of
+the equivalent synchronous schedule bitwise.
 
 Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
 
 ``--quick`` is the CI parity smoke: K=128 only, every backend and eq2
-solver against the dense reference, the 4-device label check at K=128, and
-the engine-vs-full-re-cluster streaming parity check; no json rewrite,
-nonzero exit on any parity failure.
+solver against the dense reference, the 4-device label check at K=128, the
+engine-vs-full-re-cluster streaming parity check, and the queue-drain
+parity check; no json rewrite, nonzero exit on any parity failure.
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
 """
 import json
@@ -198,11 +202,14 @@ def _canon(labels):
 
 
 def _streaming_rows(record, rows, Ks, Bs, iters):
-    """Admission latency: engine (cross blocks + incremental dendrogram
-    replay) vs the re-cluster-the-world baseline (Alg. 2 extension + full
-    HC over the extended matrix), with label-parity checks."""
+    """Admission latency: engine (cross blocks + en-bloc dendrogram replay)
+    vs the re-cluster-the-world baseline (Alg. 2 extension + full HC over
+    the extended matrix), with label-parity checks.  The sequential
+    (pre-en-bloc) replay is timed alongside so the json records what the
+    run batching itself buys."""
     import time as _time
 
+    import repro.core.engine.dendrogram as _dg
     from repro.core.engine import ClusterEngine, EngineConfig
     from repro.core.hc import hierarchical_clustering
     from repro.core.pme import extend_proximity_matrix
@@ -220,23 +227,39 @@ def _streaming_rows(record, rows, Ks, Bs, iters):
         off = A_seen[A_seen > 0]
         cfg = EngineConfig(beta=float(np.quantile(off, 0.05)), measure="eq3")
         base_engine = ClusterEngine.from_proximity(A_seen, U_seen, cfg)
+        # steady-state streaming: the dense read-only cache is warm (one
+        # admission builds it and append_block keeps it in sync; forks
+        # share it), so timed admissions measure the recurring cost
+        base_engine.warm_cache()
         for B in Bs:
             U_new = U_all[K : K + B]
             # engine: fork outside the timed region (the fork is a plain
             # condensed-store memcpy, not part of the admission algorithm)
-            t_eng, t_base = [], []
+            t_eng, t_seq, t_base = [], [], []
             parity = True
             stats = None
             # warmup: compile the cross/square proximity kernels for these
             # shapes outside the timed region (both paths share them)
             base_engine.copy().admit(U_new)
             extend_proximity_matrix(A_seen, U_seen, U_new, measure=cfg.measure)
+            min_run = _dg.ENBLOC_MIN_RUN
             for _ in range(iters):
                 eng = base_engine.copy()
                 t0 = _time.perf_counter()
                 eng.admit(U_new)
                 t_eng.append((_time.perf_counter() - t0) * 1e6)
                 stats = eng.last_stats
+                try:  # sequential replay reference (en-bloc disabled)
+                    _dg.ENBLOC_MIN_RUN = 10**9
+                    eng_s = base_engine.copy()
+                    t0 = _time.perf_counter()
+                    eng_s.admit(U_new)
+                    t_seq.append((_time.perf_counter() - t0) * 1e6)
+                finally:
+                    _dg.ENBLOC_MIN_RUN = min_run
+                parity &= bool(
+                    (eng_s.canonical_labels == eng.canonical_labels).all()
+                )
                 t0 = _time.perf_counter()
                 A_ext, _ = extend_proximity_matrix(
                     A_seen, U_seen, U_new, measure=cfg.measure
@@ -249,26 +272,33 @@ def _streaming_rows(record, rows, Ks, Bs, iters):
                     (_canon(base_labels) == _canon(eng.canonical_labels)).all()
                 )
             us_e = sorted(t_eng)[len(t_eng) // 2]
+            us_s = sorted(t_seq)[len(t_seq) // 2]
             us_b = sorted(t_base)[len(t_base) // 2]
             entry = {
                 "K": K,
                 "B": B,
                 "beta": cfg.beta,
                 "us_engine_admit": us_e,
+                "us_engine_admit_sequential_replay": us_s,
                 "us_recluster_baseline": us_b,
                 "speedup": us_b / us_e,
+                "enbloc_speedup_vs_sequential": us_s / us_e,
                 "labels_parity": parity,
                 "replay": {
                     "script_applied": stats.script_applied,
                     "dirty_merges": stats.dirty_merges,
                     "promotions": stats.promotions,
+                    "enbloc_runs": stats.enbloc_runs,
+                    "enbloc_entries": stats.enbloc_entries,
+                    "enbloc_fallbacks": stats.enbloc_fallbacks,
                 },
             }
             record["streaming"].append(entry)
             rows.append((
                 f"proximity_scale/streaming_K{K}_B{B}_engine",
                 us_e,
-                f"recluster={us_b:.0f}us speedup={us_b / us_e:.1f}x parity={parity}",
+                f"recluster={us_b:.0f}us speedup={us_b / us_e:.1f}x "
+                f"enbloc_vs_seq={us_s / us_e:.1f}x parity={parity}",
             ))
     if len(Ks) > 1:
         # growth across the K sweep: the engine should scale ~linearly in M
@@ -293,6 +323,75 @@ def _streaming_rows(record, rows, Ks, Bs, iters):
                 f"engine x{ge:.1f} vs recluster x{gb:.1f} over K x{Ks[-1] // Ks[0]}",
             ))
     return all(e["labels_parity"] for e in record["streaming"])
+
+
+def _queue_parity_rows(record, rows):
+    """Async churn queue smoke: draining a ChurnQueue (policy-sized
+    admission batches) reproduces the labels of the equivalent synchronous
+    schedule bitwise, and the drain policy fits from a seeded probe."""
+    import numpy as _np
+
+    from repro.core.engine import ClusterEngine, EngineConfig
+    from repro.fl import ChurnEvent, ChurnQueue, DrainPolicy
+
+    K = 64
+    U_all = _clustered_signatures(K + 12, n_bases=8, seed=3)
+    U_seen = U_all[:K]
+    joins = [U_all[K + i] for i in range(12)]
+    cfg = EngineConfig(beta=0.0, measure="eq3")
+    A = np.asarray(proximity_matrix(U_seen, cfg.measure, backend="jnp_blocked"))
+    cfg = EngineConfig(beta=float(np.quantile(A[A > 0], 0.1)), measure="eq3")
+    schedule = [
+        ChurnEvent(rnd=1, join=joins[:3], leave=[5]),
+        ChurnEvent(rnd=2, join=joins[3:8], leave=[0, 11]),
+        ChurnEvent(rnd=3, join=joins[8:], leave=[2]),
+    ]
+
+    sync = ClusterEngine.from_proximity(A, U_seen, cfg)
+    for ev in schedule:
+        if ev.leave:
+            sync.depart(sync.ids[_np.asarray(ev.leave)])
+        if ev.join:
+            sync.admit(jnp.stack(ev.join))
+
+    policy = DrainPolicy.measure(U_seen, seed=0, reps=1, probe_batch=4,
+                                 measure=cfg.measure)
+    # exercise a batch split different from the event grouping
+    policy = DrainPolicy(policy.dispatch_cost_us, policy.per_newcomer_us,
+                         target_overhead=policy.target_overhead, max_batch=2)
+    queued = ClusterEngine.from_proximity(A, U_seen, cfg)
+    q = ChurnQueue(signature_fn=lambda u: u, policy=policy)
+    for ev in schedule:
+        q.enqueue_event(ev)
+    batches = q.drain()
+    for batch in batches:
+        if batch.leave:
+            gone, _ = batch.resolve_leaves(queued.ids)
+            queued.depart(_np.asarray(gone))
+        if batch.join:
+            queued.admit(batch.signatures)
+
+    ok = bool(
+        _np.array_equal(sync.labels, queued.labels)
+        and _np.array_equal(sync.canonical_labels, queued.canonical_labels)
+    )
+    record["churn_queue"] = {
+        "K": K,
+        "events": len(schedule),
+        "drained_batches": len(batches),
+        "policy": {
+            "dispatch_cost_us": policy.dispatch_cost_us,
+            "per_newcomer_us": policy.per_newcomer_us,
+            "batch_size": policy.batch_size,
+        },
+        "labels_bitwise": ok,
+    }
+    rows.append((
+        "proximity_scale/churn_queue_parity",
+        None,
+        f"batches={len(batches)} bitwise={ok}",
+    ))
+    return ok
 
 
 def run(quick: bool = True, parity_only: bool = False):
@@ -390,12 +489,14 @@ def run(quick: bool = True, parity_only: bool = False):
             record, rows, Ks=(512, 2048), Bs=(16, 64), iters=1 if quick else 3
         )
 
+    queue_ok = _queue_parity_rows(record, rows)
+
     parity_ok = all(
         e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
-    ) and streaming_ok
+    ) and streaming_ok and queue_ok
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -408,6 +509,9 @@ def run(quick: bool = True, parity_only: bool = False):
         )
     assert streaming_ok, (
         "cluster-engine admission diverged from the full re-cluster baseline"
+    )
+    assert queue_ok, (
+        "ChurnQueue drain diverged from the synchronous churn schedule"
     )
     assert parity_ok, "sharded engine diverged from the blocked backend"
 

@@ -2,6 +2,8 @@
 federation get matched to an existing cluster via the cluster engine —
 only the new proximity blocks are computed and the cached dendrogram is
 updated incrementally — and departing clients are the symmetric delete.
+The last section routes the same changes through the async churn queue
+(eager signatures at enqueue, policy-sized admission batches at drain).
 
 Run: PYTHONPATH=src python examples/newcomer.py
 """
@@ -52,3 +54,25 @@ assert (back.labels == strat.labels).all()
 print("OK: admit-then-depart round-trips to the original clustering;",
       f"condensed store holds {back.engine.store.nbytes} bytes "
       f"for K={back.engine.n_clients} clients")
+
+# Async churn pipeline: the same changes as an arrival queue.  Joins are
+# enqueued at any time (their SVD signatures computed eagerly, overlapping
+# the in-flight round); the drain between rounds groups them into admission
+# batches sized by the measured cross-block dispatch cost.  Labels are
+# bitwise those of the synchronous path above.
+from repro.fl import ChurnQueue, DrainPolicy
+
+policy = DrainPolicy.measure(strat.clustering.U, seed=0, reps=1,
+                             measure=cfg.pacfl.measure)
+queue = ChurnQueue(signature_fn=lambda c: compute_signatures(
+    [jnp.asarray(c.x_train.T)], cfg.pacfl)[0], policy=policy)
+for c in newcomers:
+    queue.enqueue_join(c)          # eager SVD happens here, pre-drain
+engine = strat.clustering.engine.copy()
+for batch in queue.drain():
+    engine.admit(batch.signatures)
+assert (engine.labels == extended.labels).all()
+print(f"OK: queue drain (B*={policy.batch_size}, "
+      f"c0={policy.dispatch_cost_us:.0f}us, c1={policy.per_newcomer_us:.0f}us)"
+      " reproduces the synchronous admission bitwise; eager signature time "
+      f"{queue.stats.signature_us:.0f}us overlapped the round")

@@ -44,6 +44,19 @@ clustered and random data.
 Cost: O(S * #dirty) column work for a script of length S plus O(K) per
 dirty merge/promotion — near O(B * K) for a B-newcomer admission, versus
 O(K^2) row updates plus rescans for re-clustering the world.
+
+Throughput: *runs* of consecutive clean entries — stretches of the script
+where no dirty cluster comes closer than the cached heights — are folded
+**en bloc** (:func:`_scan_clean_run` / :func:`_apply_run_enbloc`): one
+grouped column reduction and one cache refresh replace per-entry numpy
+dispatch, cutting the ~50-100us-per-entry call overhead to per-run.  The
+min/max folds of single/complete linkage are exactly associative, so the
+en-bloc result is bitwise the sequential one; average linkage uses a
+grouped weighted mean (equal up to rounding), gated by a height-tie guard
+that splits runs at tied heights.  Any fold whose value lands exactly on a
+dirty row's cached minimum makes the nearest-neighbor choice
+history-dependent — those runs fall back to the sequential path, keeping
+the degenerate-tie behavior the oracle parity suite pins.
 """
 from __future__ import annotations
 
@@ -61,6 +74,11 @@ from repro.core.hc import (
 
 Merge = tuple[int, int, float]
 
+# Minimum clean-run length worth the en-bloc fold setup (union-find grouping
+# plus one full nn rescan).  Below this the per-entry sequential path is
+# cheaper; tests monkeypatch it to force either path.
+ENBLOC_MIN_RUN = 4
+
 
 @dataclass
 class ReplayStats:
@@ -71,6 +89,9 @@ class ReplayStats:
     dirty_merges: int = 0
     promotions: int = 0
     tail_merges: int = 0
+    enbloc_runs: int = 0        # clean runs folded in one vectorized pass
+    enbloc_entries: int = 0     # script entries covered by those runs
+    enbloc_fallbacks: int = 0   # runs replayed sequentially (tie hazard)
 
 
 @dataclass
@@ -228,6 +249,151 @@ class _Forest:
         return vec
 
 
+def _scan_clean_run(
+    script: list[Merge],
+    ptr: int,
+    forest: "_Forest",
+    d_d: float,
+    beta: Optional[float],
+    cap: int,
+    linkage: str,
+) -> int:
+    """Length (>= 1) of the maximal en-bloc run of clean merges at ``ptr``.
+
+    Entry ``ptr`` is already known applicable (the caller resolved the
+    script-vs-dirty decision).  Subsequent entries extend the run while they
+    are tombstone-free, both sides are clean and active (pre-run state is
+    sufficient: within a clean run the only state change is deactivating
+    drop slots, which the script never references again), strictly below the
+    best dirty distance (clean folds never lower a dirty row's minimum, so
+    ``d_d`` can only grow during the run — the gate stays valid), and inside
+    the beta / target-count budget.  For average linkage the run additionally
+    requires strictly increasing heights: tied heights fall back to the
+    sequential Lance-Williams path, whose per-merge rounding the tied-merge
+    order is pinned against.
+    """
+    S = len(script)
+    L = 1
+    prev_h = script[ptr][2]
+    while L < cap and ptr + L < S:
+        a, b, h = script[ptr + L]
+        if b < 0:
+            break
+        if not (forest.active[a] and forest.active[b]):
+            break
+        if forest.is_dirty[a] or forest.is_dirty[b]:
+            break
+        if h >= d_d:
+            break
+        if beta is not None and h > beta:
+            break
+        if linkage == "average" and h <= prev_h:
+            break
+        prev_h = h
+        L += 1
+    return L
+
+
+def _apply_run_enbloc(
+    forest: "_Forest", dirty: _DirtyRows, entries: list[Merge], linkage: str
+) -> bool:
+    """Fold a run of clean script merges in one vectorized pass.
+
+    Groups the run's folds by final surviving slot, then combines each
+    group's dirty-row columns in one reduction: min/max for single/complete
+    linkage (exactly associative, so bitwise-equal to the sequential fold)
+    and a grouped weighted mean over pre-run sizes for average linkage
+    (mathematically equal to the sequential Lance-Williams recursion, equal
+    up to rounding in floats — which is why the caller's run scan splits
+    average-linkage runs at tied heights).
+
+    The nn caches are refreshed by a full rescan, which matches the
+    sequential maintenance rule exactly whenever every live row's folded
+    minimum is achieved at a unique column (clean folds never lower a row's
+    minimum, so the sequential end state is "nnd = exact row minimum, nn =
+    its unique argmin").  When any live row's minimum ties across columns,
+    the sequential nn choice is history-dependent: this function rolls the
+    fold back and returns False so the caller replays the run sequentially,
+    preserving the pinned tie behavior bit for bit.
+    """
+    sources: dict[int, list[int]] = {}
+    sizes0: dict[int, int] = {}
+    for a, b, _h in entries:
+        for s in (a, b):
+            if s not in sizes0:
+                sizes0[s] = int(forest.size[s])
+        sub = sources.pop(b, [])
+        sources.setdefault(a, []).append(b)
+        sources[a].extend(sub)
+    roots = list(sources)
+    dropped = [s for srcs in sources.values() for s in srcs]
+
+    n = dirty.count
+    if n:
+        DV = dirty.DV
+        live = dirty.rep[:n] >= 0
+        # one gather of every folded column, grouped contiguously by root,
+        # then a single segmented reduction (reduceat) per linkage
+        order: list[int] = []
+        bounds = [0]
+        for r in roots:
+            order.append(r)
+            order.extend(sources[r])
+            bounds.append(len(order))
+        touched_cols = np.asarray(order, dtype=np.int64)
+        # advanced indexing: already a fresh copy, doubles as the rollback
+        src_vals = DV[:n, touched_cols]
+        seg = np.asarray(bounds[:-1], dtype=np.intp)
+        if linkage == "single":
+            newcols = np.minimum.reduceat(src_vals, seg, axis=1)
+        elif linkage == "complete":
+            newcols = np.maximum.reduceat(src_vals, seg, axis=1)
+        else:
+            w = np.asarray([sizes0[c] for c in order], dtype=np.float64)
+            newcols = np.add.reduceat(src_vals * w, seg, axis=1)
+            newcols /= np.add.reduceat(w, seg)
+        # rows whose cached neighbor sits in a folded column must rescan;
+        # any other live row's cache survives untouched under sequential
+        # maintenance UNLESS a folded value lands exactly on its minimum
+        # (clean folds never go below a row's minimum, and every
+        # intermediate fold value that could hit it is a min/max/mean of
+        # source-column values, so "some source or folded value == nnd" is
+        # a conservative superset of all such sequences) — that ambiguity
+        # falls back to the sequential path.
+        col_mask = np.zeros(forest.K, dtype=bool)
+        col_mask[touched_cols] = True
+        touched = live & col_mask[dirty.nn[:n]]
+        unt = np.where(live & ~touched)[0]
+        if unt.size:
+            nnd_u = dirty.nnd[unt, None]
+            if (newcols[unt] <= nnd_u).any() or (src_vals[unt] <= nnd_u).any():
+                return False
+        DV[:n, dropped] = np.inf
+        DV[:n, roots] = newcols
+        t_rows = np.where(touched)[0]
+        if t_rows.size:
+            # rescan: with a unique row minimum this is exactly the
+            # sequential end state; a tied minimum is history-dependent.
+            sub = DV[t_rows]
+            nn_t = sub.argmin(axis=1)
+            m = np.take_along_axis(sub, nn_t[:, None], axis=1)[:, 0]
+            fin = np.isfinite(m)
+            if ((sub[fin] == m[fin, None]).sum(axis=1) > 1).any():
+                DV[:n, touched_cols] = src_vals
+                return False
+            dirty.nn[t_rows] = nn_t
+            dirty.nnd[t_rows] = m
+
+    for a, b, _h in entries:
+        forest.members[a].extend(forest.members[b])
+        forest.size[a] += forest.size[b]
+        forest.active[b] = False
+    forest.n_active -= len(entries)
+    for r in roots:
+        forest.rep_of_leaf[np.asarray(forest.members[r], dtype=np.int64)] = r
+    return True
+
+
 def replay(
     store,
     script: list[Merge],
@@ -259,17 +425,24 @@ def replay(
     forest = _Forest(K, dirty_members)
     dirty = _DirtyRows(K)
 
-    # Leaf rows come from a lazily materialized dense float64 view: one
-    # O(K^2) densification beats hundreds of strided condensed gathers when
-    # promotions cascade (the store itself stays condensed).
+    # Leaf rows come from the store's cached read-only float32 dense view,
+    # but only once the cumulative gathered-row count justifies building it:
+    # small scattered promotions stay on strided condensed gathers, cascades
+    # amortize the one densification — which append_block then keeps warm
+    # across admissions (the persistent store stays condensed; float32 ->
+    # float64 upcasts are exact, so the aggregation math is unchanged).
     dense_cache: list[Optional[np.ndarray]] = [None]
+    gathered = [0]
 
     def leaf_rows(members: list[int]) -> np.ndarray:
-        if len(members) <= 2 and dense_cache[0] is None:
-            return store.rows(members)
         if dense_cache[0] is None:
-            dense_cache[0] = store.dense(np.float64)
-        return dense_cache[0][np.asarray(members, dtype=np.int64)]
+            gathered[0] += len(members)
+            if gathered[0] * 8 <= K and not store.has_dense_cache:
+                return store.rows(members)
+            dense_cache[0] = store.dense_ro()
+        return dense_cache[0][np.asarray(members, dtype=np.int64)].astype(
+            np.float64
+        )
 
     for g in dirty_members:
         rep = min(g)
@@ -292,6 +465,10 @@ def replay(
     out: list[Merge] = []
     target = 1 if n_clusters is None else max(int(n_clusters), 1)
     ptr, S = 0, len(script)
+    # after a tie-hazard fallback, don't re-attempt en-bloc until the run
+    # that triggered it has been consumed sequentially (avoids rescanning
+    # the same run once per entry on degenerate inputs)
+    skip_enbloc_until = 0
 
     while forest.n_active > target:
         # -- script front: drop entries broken by dirty merges, promoting
@@ -346,7 +523,27 @@ def replay(
         else:
             take_dirty = r_best is not None and d_d < h_s
         if not take_dirty:
-            # -- cached merge applies verbatim (height bitwise-cached).
+            # -- cached merges apply verbatim (heights bitwise-cached).
+            # Runs of consecutive clean entries fold en bloc: one vectorized
+            # pass replaces per-entry numpy dispatch.
+            L = 1
+            if ptr < S and ptr >= skip_enbloc_until:
+                L = _scan_clean_run(
+                    script, ptr, forest, d_d, beta,
+                    forest.n_active - target, linkage,
+                )
+            if L >= ENBLOC_MIN_RUN:
+                run = script[ptr : ptr + L]
+                if _apply_run_enbloc(forest, dirty, run, linkage):
+                    out.extend(run)
+                    ptr += L
+                    stats.script_applied += L
+                    stats.enbloc_runs += 1
+                    stats.enbloc_entries += L
+                    best_cache[0] = None
+                    continue
+                stats.enbloc_fallbacks += 1
+                skip_enbloc_until = ptr + L
             sa, sb = int(forest.size[a]), int(forest.size[b])
             if dirty.combine_columns(a, b, sa, sb, linkage):
                 best_cache[0] = None
@@ -393,8 +590,10 @@ def replay(
         reps = sorted(np.where(forest.active)[0], key=lambda c: min(forest.members[c]))
         groups = [forest.members[r] for r in reps]
         if dense_cache[0] is None:
-            dense_cache[0] = store.dense(np.float64)
-        Dc = cluster_distance_matrix(dense_cache[0], groups, linkage)
+            dense_cache[0] = store.dense_ro()
+        Dc = cluster_distance_matrix(
+            np.asarray(dense_cache[0], dtype=np.float64), groups, linkage
+        )
         sizes = np.array([len(g) for g in groups], dtype=np.int64)
         active2, members2, merges2 = merge_forest(
             Dc, sizes, [list(g) for g in groups],

@@ -15,10 +15,13 @@ The pre-engine lifecycle was batch-synchronous: every newcomer batch went
   departures.
 
 ``admit(U_new)`` costs the O((M+B) * B) proximity blocks plus near-O(B * K)
-dendrogram maintenance; ``depart(ids)`` is the symmetric delete — a scenario
+dendrogram maintenance (clean script runs fold *en bloc* — see the
+dendrogram module); ``depart(ids)`` is the symmetric delete — a scenario
 the batch API could not express at all.  Both reproduce the labels a full
 re-clustering of the current distance matrix would produce (oracle-checked
 up to degenerate distance ties; see the dendrogram module docstring).
+Steady-state admission streams can :meth:`ClusterEngine.warm_cache` the
+store's read-only dense view once — ``admit`` keeps it in sync thereafter.
 
 ``PACFLClustering`` (:mod:`repro.core.pacfl`) is a thin view over this
 engine; ``pme.assign_newcomers`` delegates to ``admit``; the FL layer
@@ -59,6 +62,11 @@ class EngineConfig:
     linkage: str = "average"
     backend: str = "auto"
     block_size: Optional[int] = None
+    # Keep a read-only float32 dense view cached across admissions (see
+    # CondensedDistances.dense_ro).  Costs one (K, K) float32 alongside the
+    # condensed store; set False at memory-bound K to keep every dense view
+    # strictly transient (replay then re-densifies per operation).
+    dense_cache: bool = True
 
 
 @dataclass
@@ -142,6 +150,7 @@ class ClusterEngine:
         if U_stack.shape[0] != K:
             raise ValueError("A and U_stack disagree on the client count")
         self.store = CondensedDistances.from_dense(A)
+        self.store.cache_enabled = self.config.dense_cache
         self.U = U_stack
         self.ids = np.arange(K, dtype=np.int64)
         self._next_id = K
@@ -180,6 +189,23 @@ class ClusterEngine:
     def dense(self, dtype=np.float32) -> np.ndarray:
         """Transient dense view of the condensed store (API back-compat)."""
         return self.store.dense(dtype)
+
+    def warm_cache(self) -> None:
+        """Build the store's read-only dense float32 cache now.
+
+        Replay seeds promotion vectors from this cache; without warming it
+        is built lazily on the first admission whose promotions cascade,
+        and ``append_block`` then keeps it in sync (one contiguous memcpy
+        per admission instead of the much slower strided per-column
+        rebuild).  Copies made *after* warming share the cache (a fork
+        snapshots the cache reference at copy time).
+        Departures drop it (it rebuilds lazily).  Costs one (K, K) float32
+        alongside the condensed store — at memory-bound K construct the
+        engine with ``EngineConfig(dense_cache=False)``, which keeps every
+        dense view transient (this method is then a no-op).
+        """
+        if self.store.cache_enabled:
+            self.store.dense_ro()
 
     def membership(self) -> MembershipSnapshot:
         return MembershipSnapshot(

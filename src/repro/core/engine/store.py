@@ -22,7 +22,8 @@ from __future__ import annotations
 import numpy as np
 
 
-def _tri(n: int) -> int:
+def _tri(n):
+    """Triangular count n(n-1)/2 — elementwise on ndarrays too."""
     return n * (n - 1) // 2
 
 
@@ -41,6 +42,14 @@ class CondensedDistances:
                 f"got {values.size}"
             )
         self._v = values
+        # Optional read-only float32 dense cache (see dense_ro): built
+        # lazily, extended in place by append_block, dropped on remove.
+        # Persistent state remains the condensed vector — the cache is a
+        # droppable accelerator for replay-heavy admission streams; set
+        # cache_enabled=False (EngineConfig.dense_cache) to keep dense
+        # views strictly transient at memory-bound K.
+        self._dense32: np.ndarray | None = None
+        self.cache_enabled = True
 
     # -- constructors -------------------------------------------------------
 
@@ -59,7 +68,10 @@ class CondensedDistances:
         return cls(n, v)
 
     def copy(self) -> "CondensedDistances":
-        return CondensedDistances(self.n, self._v.copy())
+        st = CondensedDistances(self.n, self._v.copy())
+        st._dense32 = self._dense32  # read-only, safely shared across forks
+        st.cache_enabled = self.cache_enabled
+        return st
 
     # -- introspection ------------------------------------------------------
 
@@ -94,6 +106,38 @@ class CondensedDistances:
             out[j, :j] = col
             off += j
         return out
+
+    def dense_ro(self) -> np.ndarray:
+        """Read-only float32 dense view, cached across admissions.
+
+        Unlike :meth:`dense` (a fresh mutable transient the HC merge loop is
+        allowed to consume), this view is shared between engine forks and
+        dropped on ``remove``.  ``append_block`` keeps it in sync by
+        building a fresh array from one contiguous memcpy of the old matrix
+        plus the new blocks — still O(K^2) bytes moved per admission, but a
+        plain memcpy instead of the ~5x-slower strided per-column rebuild,
+        and deliberately never in place: the old array stays immutable, so
+        forks sharing it can admit independently without corrupting each
+        other.  The engine's replay seeds promotion vectors from the view.
+
+        With ``cache_enabled=False`` the view is built fresh each call and
+        NOT retained — dense memory stays transient (pre-cache behavior).
+        """
+        if self._dense32 is None:
+            d = self.dense(np.float32)
+            d.flags.writeable = False
+            if not self.cache_enabled:
+                return d
+            self._dense32 = d
+        return self._dense32
+
+    def drop_dense_cache(self) -> None:
+        """Release the cached dense view (it rebuilds lazily if re-needed)."""
+        self._dense32 = None
+
+    @property
+    def has_dense_cache(self) -> bool:
+        return self._dense32 is not None
 
     def rows(self, idx: np.ndarray, dtype=np.float64) -> np.ndarray:
         """Gather full rows ``(len(idx), K)`` without densifying everything.
@@ -137,9 +181,24 @@ class CondensedDistances:
         ]
         self._v = np.concatenate([self._v[: _tri(M)]] + cols)
         self.n = M + B
+        if self._dense32 is not None:
+            d = np.zeros((self.n, self.n), dtype=np.float32)
+            d[:M, :M] = self._dense32
+            d[:M, M:] = cross
+            d[M:, :M] = cross.T
+            d[M:, M:] = square
+            d.flags.writeable = False
+            self._dense32 = d
 
     def remove(self, idx: np.ndarray) -> np.ndarray:
         """Depart clients ``idx``: drop their rows/columns, compact.
+
+        Compacts the condensed column blocks directly: surviving column ``j``
+        (new index ``jj``) keeps exactly its old entries at the surviving
+        ``i < j``, which in column-block layout is one gather at
+        ``tri(j) + keep[:jj]``.  Peak memory is O(surviving entries) — the
+        gather index vector plus the new condensed vector — never the dense
+        (K, K) matrix an earlier revision materialized here.
 
         Returns the sorted array of surviving leaf ids (old numbering), in
         the order they occupy the compacted store.
@@ -147,12 +206,18 @@ class CondensedDistances:
         idx = np.unique(np.asarray(idx, dtype=np.int64))
         if idx.size and (idx[0] < 0 or idx[-1] >= self.n):
             raise IndexError("departing ids out of range")
+        self._dense32 = None
         keep = np.setdiff1d(np.arange(self.n, dtype=np.int64), idx)
-        shrunk = self.dense()[np.ix_(keep, keep)]
-        self.n = int(keep.size)
-        self._v = np.empty(_tri(self.n), dtype=np.float32)
-        off = 0
-        for j in range(1, self.n):
-            self._v[off : off + j] = shrunk[:j, j]
-            off += j
+        m = int(keep.size)
+        total = _tri(m)
+        # flat target t in the new vector lives in column jj = col_of[t] at
+        # row position pos_in_col[t]; its source pair is (keep[pos], keep[jj])
+        # with keep sorted, so keep[pos] < keep[jj] always holds.
+        col_of = np.repeat(
+            np.arange(m, dtype=np.int64), np.arange(m, dtype=np.int64)
+        )
+        pos_in_col = np.arange(total, dtype=np.int64) - _tri(col_of)
+        old_cols = keep[col_of]
+        self._v = self._v[_tri(old_cols) + keep[pos_in_col]]
+        self.n = m
         return keep

@@ -18,9 +18,21 @@ a scaled CIFAR).  All generation is pure-numpy and deterministic per seed.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+def _name_digest(name: str) -> int:
+    """Process-stable 31-bit digest of a dataset name for RNG seeding.
+
+    An earlier revision used ``abs(hash(name))`` here — but Python string
+    hashes are salted per process (PYTHONHASHSEED), so every interpreter
+    generated *different* "seeded" data and downstream seeded runs were
+    silently nondeterministic across processes.
+    """
+    return zlib.crc32(name.encode()) % (2**31)
 
 DATASET_NAMES = ("cifar10s", "svhns", "fmnists", "uspss")  # synthetic stand-ins
 
@@ -97,7 +109,7 @@ def make_dataset(
         if nm in bases:
             return bases[nm]
         sp = specs[nm]
-        rng = np.random.default_rng([seed, abs(hash(nm)) % (2**31)])
+        rng = np.random.default_rng([seed, _name_digest(nm)])
         own = _orth(rng, dim, sp.rank)
         if sp.shared_with is not None and sp.shared_frac > 0:
             parent = basis_for(sp.shared_with)
@@ -117,7 +129,7 @@ def make_dataset(
     # Decaying spectrum => stable, ordered principal directions (Eq. 3 works).
     spectrum = (0.82 ** np.arange(r)).astype(np.float32)
 
-    rng = np.random.default_rng([seed + 1, abs(hash(name)) % (2**31)])
+    rng = np.random.default_rng([seed + 1, _name_digest(name)])
     # Class prototypes in latent space; two super-clusters (animals/vehicles).
     n_cls = spec.n_classes
     super_centers = rng.standard_normal((2, r)).astype(np.float32)
@@ -137,8 +149,8 @@ def make_dataset(
         x = latent @ B.T + spec.noise * sub.standard_normal((n, dim)).astype(np.float32)
         return x.astype(np.float32), y.astype(np.int64)
 
-    x_tr, y_tr = sample(n_train, np.random.default_rng([seed + 2, abs(hash(name)) % (2**31)]))
-    x_te, y_te = sample(n_test, np.random.default_rng([seed + 3, abs(hash(name)) % (2**31)]))
+    x_tr, y_tr = sample(n_train, np.random.default_rng([seed + 2, _name_digest(name)]))
+    x_te, y_te = sample(n_test, np.random.default_rng([seed + 3, _name_digest(name)]))
     return SyntheticDataset(name, x_tr, y_tr, x_te, y_te, n_cls)
 
 

@@ -1,10 +1,17 @@
 """Federated-learning substrate: partitioners, clients, strategies, trainer."""
+from repro.fl.churn import ChurnBatch, ChurnQueue, DrainPolicy
 from repro.fl.partition import ClientData, dirichlet_skew, iid_split, label_skew, mix_datasets
 from repro.fl.strategies import STRATEGIES, FLConfig
-from repro.fl.trainer import ChurnEvent, FederationResult, run_federation
+from repro.fl.trainer import (
+    ChurnEvent,
+    FederationResult,
+    apply_churn_batches,
+    run_federation,
+)
 
 __all__ = [
     "ClientData", "label_skew", "dirichlet_skew", "mix_datasets", "iid_split",
     "STRATEGIES", "FLConfig", "FederationResult", "run_federation",
-    "ChurnEvent",
+    "ChurnEvent", "ChurnBatch", "ChurnQueue", "DrainPolicy",
+    "apply_churn_batches",
 ]

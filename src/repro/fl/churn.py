@@ -1,0 +1,287 @@
+"""Async churn pipeline: batched arrival queue + drain-time admission batching.
+
+The paper's efficiency claim is that membership is decided *outside* the
+training loop — a one-shot SVD signature plus server-side principal-angle
+clustering.  :class:`ChurnQueue` makes the serving path match the math:
+clients may announce joins and departures at any time (e.g. while a round is
+in flight), newcomer signatures are computed **eagerly on enqueue**
+(signatures are membership-independent, so the SVD overlaps the running
+round), and the queue drains between rounds into :class:`ChurnBatch` units —
+departures plus admission batches whose size is picked by a
+:class:`DrainPolicy` fitted to the measured cross-block dispatch cost.
+
+Determinism: enqueue order is preserved — a drain applies departures and
+joins in exactly the arrival order, only coalescing *adjacent* joins into
+admission batches.  Since the cluster engine's labels are a pure function of
+the current distance store (oracle-parity property), draining a queue
+reproduces the labels of the equivalent synchronous schedule regardless of
+how the joins were batched; the parity suite asserts this bitwise.
+
+``repro.fl.trainer`` adapts the declarative :class:`~repro.fl.trainer.
+ChurnEvent` schedule into enqueues (the schedule is now a thin adapter) and
+drains every round boundary; strategies receive drained batches through
+``Strategy.handle_churn``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ChurnBatch:
+    """One drained unit: departures applied first, then one admission batch.
+
+    ``leave`` holds **sequential** single-position removals: each position
+    indexes the member list as it stands after the previous removal in the
+    same batch (and after earlier batches of the same drain) — exactly the
+    queue's one-op-at-a-time contract, so two queued leaves at position 0
+    remove two different clients.  ``join`` appends new clients at the end,
+    in order.  ``signatures`` stacks the eagerly computed (n, p) signatures
+    of ``join`` — (B, n, p), or ``None`` when the queue has no signature
+    function (global strategies).
+    """
+
+    leave: list[int] = field(default_factory=list)
+    join: list[Any] = field(default_factory=list)
+    signatures: Optional[jnp.ndarray] = None
+
+    def __bool__(self) -> bool:
+        return bool(self.leave or self.join)
+
+    def resolve_leaves(self, order):
+        """Apply the sequential-leave contract to ``order`` (any sequence).
+
+        Returns ``(removed, survivors)`` — the elements the batch's leave
+        positions pop, one at a time against the shrinking list, and what
+        remains.  The single implementation of the contract: the trainer
+        resolves clients, PACFL resolves engine stable ids, the parity
+        checks resolve both.
+        """
+        order = list(order)
+        return [order.pop(pos) for pos in self.leave], order
+
+
+@dataclass(frozen=True)
+class DrainPolicy:
+    """Admission batch size from the cross-block dispatch cost model.
+
+    An admission of B newcomers costs roughly ``c0 + c1 * B``: ``c0`` the
+    fixed dispatch cost of the (M, B) cross-block computation (kernel
+    launch, host/device sync, script-replay setup) and ``c1`` the marginal
+    per-newcomer cost.  The policy picks the smallest B whose amortized
+    dispatch overhead ``c0 / (c0 + c1 B)`` is at most ``target_overhead``:
+
+        B* = ceil(c0 (1 - rho) / (c1 rho)),  clamped to [1, max_batch].
+
+    The policy itself is a pure function of ``(c0, c1)`` — deterministic and
+    serializable; :meth:`measure` fits the two constants from a seeded
+    timing probe against a signature stack.
+    """
+
+    dispatch_cost_us: float
+    per_newcomer_us: float
+    target_overhead: float = 0.25
+    max_batch: int = 64
+
+    @property
+    def batch_size(self) -> int:
+        rho = min(max(self.target_overhead, 1e-6), 1.0)
+        c0 = max(self.dispatch_cost_us, 0.0)
+        c1 = max(self.per_newcomer_us, 1e-9)
+        b = int(np.ceil(c0 * (1.0 - rho) / (c1 * rho)))
+        return int(np.clip(b, 1, self.max_batch))
+
+    @classmethod
+    def measure(
+        cls,
+        U_stack: jnp.ndarray,
+        *,
+        seed: int = 0,
+        reps: int = 3,
+        probe_batch: int = 16,
+        measure: str = "eq3",
+        backend: str = "auto",
+        block_size: Optional[int] = None,
+        target_overhead: float = 0.25,
+        max_batch: int = 64,
+    ) -> "DrainPolicy":
+        """Fit (c0, c1) by timing the admission blocks at B=1 and B=probe.
+
+        The probe signatures are generated from ``seed`` (deterministic
+        workload); each point is a median over ``reps`` timed dispatches
+        after one warmup (compile) call.
+        """
+        from repro.core.pme import proximity_blocks
+
+        n, p = int(U_stack.shape[1]), int(U_stack.shape[2])
+        key = jax.random.PRNGKey(seed)
+        probe = jax.vmap(lambda x: jnp.linalg.qr(x)[0])(
+            jax.random.normal(key, (probe_batch, n, p))
+        ).astype(U_stack.dtype)
+
+        def timed(B: int) -> float:
+            ts = []
+            proximity_blocks(
+                U_stack, probe[:B],
+                measure=measure, backend=backend, block_size=block_size,
+            )  # warmup/compile outside the timed region
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                proximity_blocks(
+                    U_stack, probe[:B],
+                    measure=measure, backend=backend, block_size=block_size,
+                )
+                ts.append((time.perf_counter() - t0) * 1e6)
+            return sorted(ts)[len(ts) // 2]
+
+        t1 = timed(1)
+        tB = timed(probe_batch)
+        c1 = max((tB - t1) / max(probe_batch - 1, 1), 1e-3)
+        c0 = max(t1 - c1, 0.0)
+        return cls(
+            dispatch_cost_us=c0,
+            per_newcomer_us=c1,
+            target_overhead=target_overhead,
+            max_batch=max_batch,
+        )
+
+
+@dataclass
+class QueueStats:
+    """Arrival/drain telemetry."""
+
+    enqueued_joins: int = 0
+    enqueued_leaves: int = 0
+    signature_us: float = 0.0     # eager SVD time overlapped with rounds
+    drained_batches: int = 0
+    drained_joins: int = 0
+    drained_leaves: int = 0
+
+
+class ChurnQueue:
+    """Arrival queue for joins/departs with drain-time admission batching.
+
+    ``signature_fn`` maps a join payload (a ``ClientData`` in the FL layer,
+    any object in core-level use) to its (n, p) signature; it runs at
+    enqueue time.  ``policy`` caps admission batches at
+    ``policy.batch_size`` — without one, a drain coalesces every adjacent
+    join run into a single admission.
+
+    Leave positions are interpreted against the membership as it will stand
+    after all earlier queued operations have applied — identical to the
+    semantics of a synchronous :class:`~repro.fl.trainer.ChurnEvent`
+    schedule, which makes the adapter in the trainer exact.
+    """
+
+    def __init__(
+        self,
+        *,
+        signature_fn: Optional[Callable[[Any], jnp.ndarray]] = None,
+        policy: Optional[DrainPolicy] = None,
+    ):
+        self.signature_fn = signature_fn
+        self.policy = policy
+        self._ops: list[tuple[str, Any, Optional[jnp.ndarray]]] = []
+        self.stats = QueueStats()
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    @property
+    def pending_joins(self) -> int:
+        return sum(1 for kind, _, _ in self._ops if kind == "join")
+
+    @property
+    def pending_leaves(self) -> int:
+        return sum(1 for kind, _, _ in self._ops if kind == "leave")
+
+    # -- enqueue ------------------------------------------------------------
+
+    def enqueue_join(self, client: Any) -> None:
+        """Queue a join; the signature is computed now, not at drain."""
+        sig = None
+        if self.signature_fn is not None:
+            t0 = time.perf_counter()
+            sig = self.signature_fn(client)
+            self.stats.signature_us += (time.perf_counter() - t0) * 1e6
+        self._ops.append(("join", client, sig))
+        self.stats.enqueued_joins += 1
+
+    def enqueue_leave(self, pos: int) -> None:
+        """Queue one departure.  ``pos`` indexes the membership as it will
+        stand after all earlier queued operations have applied — each leave
+        is a single sequential removal, never a simultaneous set."""
+        self._ops.append(("leave", int(pos), None))
+        self.stats.enqueued_leaves += 1
+
+    def enqueue_event(self, event) -> None:
+        """Thin adapter for a :class:`~repro.fl.trainer.ChurnEvent`:
+        departures enqueue before joins, matching the synchronous order.
+
+        An event's ``leave`` list is *simultaneous* (all positions index the
+        list as the event fires, and duplicates collapse to one removal,
+        matching the synchronous trainer's set semantics); the queue's
+        contract is sequential, so the deduplicated positions enqueue in
+        descending order — removing the highest position first leaves every
+        lower position unshifted, which makes the sequential application
+        identical to the simultaneous one.
+        """
+        for pos in sorted(set(event.leave), reverse=True):
+            self.enqueue_leave(pos)
+        for client in event.join:
+            self.enqueue_join(client)
+
+    # -- drain --------------------------------------------------------------
+
+    def drain(self, *, force: bool = True) -> list[ChurnBatch]:
+        """Pop pending operations as ordered :class:`ChurnBatch` units.
+
+        Arrival order is preserved: departures bound join runs, adjacent
+        joins coalesce into admission batches of at most
+        ``policy.batch_size``.  With ``force=False`` a trailing join-only
+        remainder smaller than the policy batch is *held back* for the next
+        drain (throughput mode: admissions amortize the dispatch cost);
+        departures always drain.
+        """
+        B = self.policy.batch_size if self.policy is not None else None
+        batches: list[ChurnBatch] = []
+        cur = ChurnBatch()
+        sigs: list[jnp.ndarray] = []
+
+        def flush() -> None:
+            nonlocal cur, sigs
+            if cur:
+                if sigs:
+                    cur.signatures = jnp.stack(sigs)
+                batches.append(cur)
+            cur, sigs = ChurnBatch(), []
+
+        consumed = 0
+        for kind, payload, sig in self._ops:
+            if kind == "leave":
+                if cur.join:
+                    flush()
+                cur.leave.append(payload)
+            else:
+                cur.join.append(payload)
+                if sig is not None:
+                    sigs.append(jnp.asarray(sig).reshape(sig.shape[-2:]))
+                if B is not None and len(cur.join) == B:
+                    flush()
+            consumed += 1
+        if not force and B is not None and cur.join and not cur.leave:
+            if len(cur.join) < B:
+                consumed -= len(cur.join)
+                cur, sigs = ChurnBatch(), []
+        flush()
+        self._ops = self._ops[consumed:]
+        self.stats.drained_batches += len(batches)
+        self.stats.drained_joins += sum(len(b.join) for b in batches)
+        self.stats.drained_leaves += sum(len(b.leave) for b in batches)
+        return batches

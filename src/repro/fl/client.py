@@ -60,11 +60,22 @@ def stack_clients(clients: list[ClientData]) -> StackedClients:
     return StackedClients(x, y, n, xt, yt, t, [c.dataset_name for c in clients])
 
 
-def ce_loss(apply_fn: Callable, params: PyTree, xb: jax.Array, yb: jax.Array) -> jax.Array:
+def ce_loss(
+    apply_fn: Callable,
+    params: PyTree,
+    xb: jax.Array,
+    yb: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean cross-entropy; with ``mask`` a weighted mean over masked rows
+    (used to restrict probes to a client's real, non-cycled samples)."""
     logits = apply_fn(params, xb)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
-    return jnp.mean(logz - gold)
+    per_example = logz - gold
+    if mask is None:
+        return jnp.mean(per_example)
+    return jnp.sum(per_example * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
 def make_local_sgd(
@@ -165,4 +176,4 @@ def weighted_average(stacked: PyTree, weights: jax.Array) -> PyTree:
 
 
 def tree_size_bytes(tree: PyTree) -> int:
-    return int(sum(l.size * 4 for l in jax.tree.leaves(tree)))
+    return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)))

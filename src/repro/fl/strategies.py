@@ -67,6 +67,23 @@ def _zeros_like_stack(tree: PyTree, m: int) -> PyTree:
     return jax.tree.map(lambda l: jnp.zeros((m,) + l.shape, l.dtype), tree)
 
 
+def bucket_steps(steps: int) -> int:
+    """Geometric step buckets for post-churn local-update rebuilds.
+
+    Snaps to {1..4, 6, 8, 12, 16, 24, 32, ...} — powers of two plus
+    midpoints — so a drifting mean client size causes O(log steps) distinct
+    jit compiles over a federation's lifetime instead of one per churn
+    batch, while keeping the step count (and FedNova's tau) within ~20% of
+    the exact post-churn value.
+    """
+    steps = int(steps)
+    if steps <= 4:
+        return steps
+    base = 1 << int(np.floor(np.log2(steps)))
+    cands = (base, base + (base >> 1), base << 1)
+    return int(min(cands, key=lambda c: abs(c - steps)))
+
+
 class Strategy:
     """Base: holds jitted vmapped local updates and communication counters."""
 
@@ -97,35 +114,81 @@ class Strategy:
         """Stacked per-client params (K, ...) used for local-test evaluation."""
         raise NotImplementedError
 
-    def handle_churn(self, data: StackedClients, event) -> None:
-        """Absorb a mid-federation membership change (``ChurnEvent``).
+    def handle_churn(self, data: StackedClients, batch) -> None:
+        """Absorb one drained churn batch (``repro.fl.churn.ChurnBatch``).
 
-        The base implementation just swaps the stacked data — correct for
-        strategies whose state is global (FedAvg/FedProx/FedNova/
-        Per-FedAvg).  Strategies with per-client or per-cluster state must
-        override (PACFL routes through its cluster engine) or leave
-        ``supports_churn`` False.
+        ``data`` is the stacked clients *after the full drain* (the trainer
+        restacks once per drain, not per batch); per-batch engine work must
+        come from the batch itself — leave positions resolve against the
+        strategy's own membership state and newcomer signatures arrive
+        precomputed on the batch.  The base implementation swaps the
+        stacked data and refreshes the jitted local update for the
+        post-churn client sizes — correct for strategies whose state is
+        global (FedAvg/FedProx/FedNova/Per-FedAvg).  Strategies with
+        per-client or per-cluster state must override (PACFL routes the
+        batch through its cluster engine) or leave ``supports_churn``
+        False.
         """
         if not self.supports_churn:
             raise NotImplementedError(f"{self.name} does not support churn")
         self.data = data
+        self._refresh_local(data)
+
+    def churn_signature_fn(self):
+        """Eager-signature hook for the async churn queue.
+
+        Returns a callable ``(ClientData) -> (n, p) signature`` the queue
+        runs at enqueue time (overlapping the in-flight round), or ``None``
+        when the strategy needs no signatures (everyone but PACFL).
+        """
+        return None
 
     # -- shared machinery ---------------------------------------------------
     def _build(self, data: StackedClients, *, prox_mu: float = 0.0, use_cv: bool = False):
-        steps = self.cfg.local_steps(int(np.mean(data.n)))
-        self._steps = steps
-        local = make_local_sgd(
+        self._prox_mu = prox_mu
+        self._use_cv = use_cv
+        self._local_cache: dict[int, Callable] = {}
+        self._steps_exact = self.cfg.local_steps(int(np.mean(data.n)))
+        self._set_steps(self._steps_exact)
+        self.data = data
+        self._P = None  # model bytes, set after init
+
+    def _make_local(self, steps: int) -> Callable:
+        """Local-update factory for a given step count (Per-FedAvg overrides)."""
+        return make_local_sgd(
             self.apply_fn,
             steps=steps,
             batch_size=self.cfg.batch_size,
             lr=self.cfg.lr,
             momentum=self.cfg.momentum,
-            prox_mu=prox_mu,
-            use_control_variates=use_cv,
+            prox_mu=self._prox_mu,
+            use_control_variates=self._use_cv,
         )
-        self._vupdate = jax.jit(jax.vmap(local))
-        self.data = data
-        self._P = None  # model bytes, set after init
+
+    def _set_steps(self, steps: int) -> None:
+        self._steps = steps
+        fn = self._local_cache.get(steps)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._make_local(steps)))
+            self._local_cache[steps] = fn
+        self._vupdate = fn
+
+    def _refresh_local(self, data: StackedClients) -> None:
+        """Rebuild the jitted local update when churn shifts the mean client
+        size: ``self._steps`` (and with it FedNova's tau normalization and
+        the local-epoch budget) would otherwise stay sized from the
+        *pre-churn* mean.  The trigger compares *exact* step counts — churn
+        that leaves the mean unchanged is a true no-op — while the rebuilt
+        count is shape-bucketed (:func:`bucket_steps`) and the compiled
+        updates memoized per step count, so oscillating churn cannot
+        trigger a recompile storm.
+        """
+        exact = self.cfg.local_steps(int(np.mean(data.n)))
+        if exact != self._steps_exact:
+            self._steps_exact = exact
+            steps = bucket_steps(exact)
+            if steps != self._steps:
+                self._set_steps(steps)
 
     def _model_bytes(self, params: PyTree) -> int:
         if self._P is None:
@@ -317,7 +380,9 @@ class LGFedAvg(Strategy):
         sizes = []
         jax.tree_util.tree_map_with_path(
             lambda p, l: sizes.append(
-                l.size // l.shape[0] * 4 if self._is_global(jax.tree_util.keystr(p)) else 0
+                l.size // l.shape[0] * l.dtype.itemsize
+                if self._is_global(jax.tree_util.keystr(p))
+                else 0
             ),
             self.params,
         )
@@ -348,16 +413,19 @@ class PerFedAvg(Strategy):
     name = "perfedavg"
     supports_churn = True   # global params; personalization happens at eval
 
-    def setup(self, key, data):
-        self._build(data)
-        local = make_perfedavg_local(
+    def _make_local(self, steps):
+        # the churn-refresh path rebuilds through this factory too, so a
+        # post-churn rebuild keeps the FO-MAML update (not plain SGD)
+        return make_perfedavg_local(
             self.apply_fn,
-            steps=self.cfg.local_steps(int(np.mean(data.n))),
+            steps=steps,
             batch_size=self.cfg.batch_size,
             alpha=self.cfg.perfed_alpha,
             beta=self.cfg.perfed_beta,
         )
-        self._vupdate = jax.jit(jax.vmap(local))
+
+    def setup(self, key, data):
+        self._build(data)
         self.global_params = self.init_fn(key)
         # personalization fine-tune (eval time)
         pers = make_local_sgd(
@@ -395,11 +463,12 @@ class PerFedAvg(Strategy):
 class IFCA(Strategy):
     name = "ifca"
     supports_churn = True
+    PROBE = 64   # samples per client used to probe cluster fit
 
-    def handle_churn(self, data, event):
+    def handle_churn(self, data, batch):
         # cluster models are global; the per-client assignment cache just
         # resizes (re-derived from losses on the next round / eval anyway)
-        self.data = data
+        super().handle_churn(data, batch)
         self.assign = np.zeros(data.n_clients, np.int64)
 
     def setup(self, key, data):
@@ -410,9 +479,15 @@ class IFCA(Strategy):
         self.assign = np.zeros(data.n_clients, np.int64)
 
         def losses(cparams, x, y, n):
-            # loss of every cluster model on one client's train data head
-            xb, yb = x[:64], y[:64]
-            return jax.vmap(lambda p: ce_loss(self.apply_fn, p, xb, yb))(cparams)
+            # loss of every cluster model on one client's train data head,
+            # masked to the n_k real samples: the stacked rows cycle the
+            # local data, so for n_k < PROBE an unmasked mean double-counts
+            # the cycled prefix and skews the cluster assignment
+            xb, yb = x[: self.PROBE], y[: self.PROBE]
+            mask = (jnp.arange(xb.shape[0]) < n).astype(jnp.float32)
+            return jax.vmap(
+                lambda p: ce_loss(self.apply_fn, p, xb, yb, mask=mask)
+            )(cparams)
 
         self._vlosses = jax.jit(jax.vmap(losses, in_axes=(None, 0, 0, 0)))
 
@@ -532,6 +607,7 @@ class PACFL(Strategy):
     def setup(self, key, data):
         self._build(data)
         self._key = key
+        self._sig_seq = 0   # deterministic key stream for eager signatures
         # One-shot phase: clients compute + upload U_p signatures.  The ragged
         # (features, samples) matrices go through the shape-bucketed batched
         # SVD, and the proximity matrix through the backend dispatch selected
@@ -552,8 +628,24 @@ class PACFL(Strategy):
             jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
         ]
 
-    def handle_churn(self, data, event):
-        """Fold a membership change into the engine (depart, then admit).
+    def churn_signature_fn(self):
+        """Eager per-client signature for the async queue: the SVD is
+        membership-independent, so it runs at enqueue time and overlaps the
+        in-flight round.  Keys come from a deterministic per-strategy stream
+        (exact SVD ignores them; randomized SVD stays reproducible)."""
+
+        def signature(client) -> jnp.ndarray:
+            key = jax.random.fold_in(self._key, 1_000_003 + self._sig_seq)
+            self._sig_seq += 1
+            U = compute_signatures(
+                [jnp.asarray(client.x_train.T)], self.cfg.pacfl, key=key
+            )
+            return U[0]
+
+        return signature
+
+    def handle_churn(self, data, batch):
+        """Fold one drained churn batch into the engine (depart, then admit).
 
         Deliberately mutates ``self.clustering.engine`` in place — the
         strategy owns its clustering for the federation's lifetime, and the
@@ -561,29 +653,34 @@ class PACFL(Strategy):
         of ``PACFLClustering.extend``/``depart`` is for core callers that
         hand out snapshots).  Engine rows track the trainer's client-list
         order (survivors keep their order, newcomers append), so leave
-        positions map straight to engine stable ids.  New clusters (a newcomer unlike every seen
-        client, or an old cluster split by departures) get fresh models from
+        positions map straight to engine stable ids.  Newcomer signatures
+        arrive precomputed on the batch (eager enqueue-time SVD); a batch
+        without them (direct legacy calls) falls back to computing from the
+        stacked data.  New clusters (a newcomer unlike every seen client,
+        or an old cluster split by departures) get fresh models from
         theta_g^0; existing clusters keep their trained models.
         """
         engine = self.clustering.engine
         snapshot = engine.membership()
-        if event.leave:
-            engine.depart(snapshot.ids[np.asarray(event.leave, dtype=np.int64)])
-        if event.join:
-            B = len(event.join)
-            mats = [
-                jnp.asarray(data.x[k, : data.n[k]].T)
-                for k in range(data.n_clients - B, data.n_clients)
-            ]  # only the appended newcomers — not all K client matrices
-            U_new = compute_signatures(
-                mats, self.cfg.pacfl, key=jax.random.fold_in(self._key, engine.version)
-            )
+        if batch.leave:
+            gone, _ = batch.resolve_leaves(snapshot.ids)
+            engine.depart(np.asarray(gone, dtype=np.int64))
+        if batch.join:
+            U_new = getattr(batch, "signatures", None)
+            if U_new is None:
+                # compute from the batch's own join payloads — the stacked
+                # data reflects the whole drain, so its trailing rows are
+                # NOT this batch's newcomers when a drain splits batches
+                mats = [jnp.asarray(c.x_train.T) for c in batch.join]
+                U_new = compute_signatures(
+                    mats, self.cfg.pacfl,
+                    key=jax.random.fold_in(self._key, engine.version),
+                )
             engine.admit(U_new)
             extra = int(U_new.size * U_new.dtype.itemsize)
             self.clustering.signature_bytes += extra
             self.comm_up += extra
         self.labels = engine.labels
-        self.data = data
         # grow the per-cluster model stack for any fresh stable ids
         Z_have = jax.tree.leaves(self.cluster_params)[0].shape[0]
         Z_need = int(self.labels.max()) + 1
@@ -595,6 +692,7 @@ class PACFL(Strategy):
                 lambda a, b: jnp.concatenate([a, b], axis=0),
                 self.cluster_params, fresh,
             )
+        super().handle_churn(data, batch)   # data swap + local-steps refresh
 
     def run_round(self, rnd, sampled, key):
         m = len(sampled)

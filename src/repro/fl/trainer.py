@@ -4,10 +4,16 @@
 tests.  It is model-agnostic: pass an ``apply_fn`` / ``init_fn`` pair from
 ``repro.models.cnn.MODEL_ZOO`` (or any functional model).
 
-Clients may join and leave *between rounds* via a ``churn`` schedule of
-:class:`ChurnEvent`s — strategies that advertise ``supports_churn`` get a
-``handle_churn`` callback with the re-stacked data (PACFL folds the change
-into its streaming cluster engine; global strategies just swap the data).
+Clients may join and leave via the async churn pipeline
+(:mod:`repro.fl.churn`): the declarative ``churn`` schedule of
+:class:`ChurnEvent`s is a thin adapter that *enqueues* joins/departs on a
+:class:`~repro.fl.churn.ChurnQueue` — newcomer signatures are computed
+eagerly at enqueue (overlapping the in-flight round in a real deployment) —
+and the queue drains between rounds into admission batches sized by the
+queue's :class:`~repro.fl.churn.DrainPolicy`.  Strategies that advertise
+``supports_churn`` absorb each drained :class:`~repro.fl.churn.ChurnBatch`
+through ``handle_churn`` (PACFL folds it into its streaming cluster engine;
+global strategies just swap the data and refresh their local-step count).
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro.fl.churn import ChurnBatch, ChurnQueue, DrainPolicy
 from repro.fl.client import StackedClients, stack_clients
 from repro.fl.partition import ClientData
 from repro.fl.strategies import STRATEGIES, FLConfig, Strategy
@@ -25,12 +32,15 @@ from repro.fl.strategies import STRATEGIES, FLConfig, Strategy
 
 @dataclass
 class ChurnEvent:
-    """Membership change applied before round ``rnd`` runs.
+    """Membership change announced before round ``rnd`` runs.
 
     ``leave`` holds positions into the client list *as it stands when the
     event fires* (after earlier events); ``join`` appends new clients at the
-    end, in order.  A single event may do both — departures are processed
-    first, matching the engine's depart-then-admit order.
+    end, in order.  A single event may do both — departures are enqueued
+    first, matching the engine's depart-then-admit order.  Events are an
+    adapter over the async queue: the trainer enqueues them at their round
+    and drains the queue at every round boundary, so a pure event schedule
+    behaves exactly like the old synchronous path.
     """
 
     rnd: int
@@ -76,6 +86,52 @@ class FederationResult:
         return None
 
 
+def apply_churn_batches(
+    queue: ChurnQueue,
+    strat: Strategy,
+    clients: list[ClientData],
+    *,
+    rnd: int = 0,
+    force: bool = True,
+) -> tuple[list[ClientData], Optional[StackedClients], list[ChurnBatch]]:
+    """Drain ``queue`` and fold each batch into the client list + strategy.
+
+    Clients are re-stacked ONCE for the whole drain — every
+    ``handle_churn`` call receives the post-drain data (strategies consume
+    the batch's precomputed signatures for engine ops, never the stacked
+    arrays, so a policy that splits joins into many admission batches does
+    not multiply the O(K * max_n) restack cost it exists to amortize).
+
+    Returns the updated client list, the post-drain stacked data (``None``
+    when nothing drained), and the applied batches.  Shared by the round
+    loop and tests so queue semantics cannot drift.
+    """
+    batches = queue.drain(force=force)
+    # validate the whole drain before mutating anything: position validity
+    # depends only on the evolving member count, so a dry run over lengths
+    # keeps a bad later batch from leaving the strategy half-churned
+    n = len(clients)
+    for batch in batches:
+        for pos in batch.leave:
+            if not 0 <= pos < n:
+                raise IndexError(
+                    f"churn round {rnd}: leave position {pos} out of range"
+                )
+            n -= 1
+        n += len(batch.join)
+        if n == 0:
+            raise ValueError(f"churn round {rnd} removed every client")
+    if not batches:
+        return clients, None, batches
+    for batch in batches:
+        _, clients = batch.resolve_leaves(clients)
+        clients.extend(batch.join)
+    data = stack_clients(clients)
+    for batch in batches:
+        strat.handle_churn(data, batch)
+    return clients, data, batches
+
+
 def run_federation(
     strategy_name: str,
     clients: list[ClientData],
@@ -88,6 +144,7 @@ def run_federation(
     verbose: bool = False,
     strategy_kwargs: Optional[dict] = None,
     churn: Optional[list[ChurnEvent]] = None,
+    drain_policy: Optional[DrainPolicy] = None,
 ) -> FederationResult:
     key = jax.random.PRNGKey(seed)
     clients = list(clients)
@@ -107,28 +164,31 @@ def run_federation(
                 f"churn event rnd={ev.rnd} outside the federation's "
                 f"round range [1, {cfg.rounds}] — it would silently never fire"
             )
+    queue = ChurnQueue(
+        signature_fn=strat.churn_signature_fn(), policy=drain_policy
+    )
 
     rng = np.random.default_rng(seed)
     records: list[RoundRecord] = []
     t0 = time.time()
     for rnd in range(1, cfg.rounds + 1):
+        # the event schedule is a thin adapter over the arrival queue: in a
+        # live deployment enqueues happen mid-round, concurrently with
+        # training; here they land at the boundary their event names
         for ev in (e for e in churn if e.rnd == rnd):
-            for pos in ev.leave:
-                if not 0 <= pos < len(clients):
-                    raise IndexError(
-                        f"churn round {rnd}: leave position {pos} out of range"
-                    )
-            leaving = set(ev.leave)
-            keep = [i for i in range(len(clients)) if i not in leaving]
-            clients = [clients[i] for i in keep] + list(ev.join)
-            if not clients:
-                raise ValueError(f"churn round {rnd} removed every client")
-            data = stack_clients(clients)
-            strat.handle_churn(data, ev)
+            queue.enqueue_event(ev)
+        clients, new_data, batches = apply_churn_batches(
+            queue, strat, clients, rnd=rnd
+        )
+        if new_data is not None:
+            data = new_data
             if verbose:
+                dj = sum(len(b.join) for b in batches)
+                dl = sum(len(b.leave) for b in batches)
                 print(
                     f"[{strategy_name}] round {rnd:4d} churn: "
-                    f"-{len(ev.leave)} +{len(ev.join)} -> K={len(clients)}"
+                    f"-{dl} +{dj} in {len(batches)} batch(es) "
+                    f"-> K={len(clients)}"
                 )
         K = data.n_clients
         m = max(1, min(K, int(round(cfg.sample_frac * K))))

@@ -5,3 +5,23 @@ from pathlib import Path
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (the 512-device mesh is exclusively dryrun.py's).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def clustered_signatures(key, K, n=32, p=3, n_bases=6, spread=0.08):
+    """K orthonormal signatures concentrated around n_bases subspaces —
+    shared generator for the engine and churn-queue suites."""
+    import jax
+    import jax.numpy as jnp
+
+    kb, kc = jax.random.split(key)
+    bases = [
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(kb, i), (n, p)))[0]
+        for i in range(n_bases)
+    ]
+    stack = []
+    for k in range(K):
+        X = bases[k % n_bases] + spread * jax.random.normal(
+            jax.random.fold_in(kc, k), (n, p)
+        )
+        stack.append(jnp.linalg.qr(X)[0])
+    return jnp.stack(stack)

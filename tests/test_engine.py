@@ -28,20 +28,7 @@ def canon(labels):
     return np.array([seen.setdefault(int(x), len(seen)) for x in labels])
 
 
-def clustered_signatures(key, K, n=32, p=3, n_bases=6, spread=0.08):
-    """K orthonormal signatures concentrated around n_bases subspaces."""
-    kb, kc = jax.random.split(key)
-    bases = [
-        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(kb, i), (n, p)))[0]
-        for i in range(n_bases)
-    ]
-    stack = []
-    for k in range(K):
-        X = bases[k % n_bases] + spread * jax.random.normal(
-            jax.random.fold_in(kc, k), (n, p)
-        )
-        stack.append(jnp.linalg.qr(X)[0])
-    return jnp.stack(stack)
+from conftest import clustered_signatures
 
 
 def random_distances(rng, K, grid=False):
@@ -286,6 +273,123 @@ class TestOracleParity:
             assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
             # the replay did strictly less dendrogram work than re-clustering
             assert res.stats.script_applied + res.stats.dirty_merges <= 544
+
+
+# ---------------------------------------------------------------------------
+# En-bloc replay: batched clean runs vs the sequential per-entry path
+# ---------------------------------------------------------------------------
+
+
+class TestEnBlocReplay:
+    @staticmethod
+    def _with_min_run(monkeypatch, value):
+        import repro.core.engine.dendrogram as dg
+
+        monkeypatch.setattr(dg, "ENBLOC_MIN_RUN", value)
+
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    @pytest.mark.parametrize("mode", ["beta", "n_clusters"])
+    def test_matches_sequential_bitwise(self, monkeypatch, linkage, mode):
+        """Interleaved admit/depart sequences produce bitwise-identical
+        stable and canonical labels whether clean runs fold en bloc or
+        entry by entry (single/complete additionally pin the script)."""
+        key = jax.random.PRNGKey(5)
+        U = clustered_signatures(key, 40, n_bases=5, spread=0.2)
+        cfg = (
+            EngineConfig(beta=25.0, linkage=linkage)
+            if mode == "beta"
+            else EngineConfig(n_clusters=4, linkage=linkage)
+        )
+        states = {}
+        for name, min_run in (("seq", 10**9), ("enbloc", 2)):
+            self._with_min_run(monkeypatch, min_run)
+            eng = ClusterEngine.from_signatures(U, cfg)
+            rng = np.random.default_rng(13)
+            snaps = []
+            for step in range(6):
+                if eng.n_clients > 8 and rng.random() < 0.5:
+                    eng.depart(rng.choice(eng.ids, size=3, replace=False))
+                else:
+                    eng.admit(clustered_signatures(
+                        jax.random.fold_in(key, 60 + step), 4,
+                        n_bases=4, spread=0.3,
+                    ))
+                snaps.append((
+                    eng.labels.copy(), eng.canonical_labels.copy(),
+                    [tuple(m) for m in eng._script],
+                ))
+            states[name] = snaps
+        for (s1, c1, sc1), (s2, c2, sc2) in zip(states["seq"], states["enbloc"]):
+            np.testing.assert_array_equal(s1, s2)
+            np.testing.assert_array_equal(c1, c2)
+            if linkage != "average":
+                assert sc1 == sc2
+            else:
+                assert [(a, b) for a, b, _ in sc1] == [(a, b) for a, b, _ in sc2]
+                np.testing.assert_allclose(
+                    [h for _, _, h in sc1], [h for _, _, h in sc2]
+                )
+
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    def test_tie_heavy_grids_fall_back_exactly(self, monkeypatch, linkage):
+        """Integer-grid distances (maximal height/distance ties) stay
+        oracle-exact with en-bloc folding enabled — the tie guards route the
+        degenerate runs through the sequential path."""
+        self._with_min_run(monkeypatch, 2)
+        from repro.core.engine import replay
+
+        rng = np.random.default_rng(29)
+        for mode_kw in ({"beta": 7.0}, {"n_clusters": 2}):
+            for _ in range(15):
+                K = int(rng.integers(7, 14))
+                A = random_distances(rng, K, grid=True)
+                M = K - int(rng.integers(1, 4))
+                cfg = EngineConfig(linkage=linkage, **mode_kw)
+                eng = ClusterEngine.from_proximity(
+                    A[:M, :M], jnp.zeros((M, 2, 1)), cfg
+                )
+                eng.store.append_block(A[:M, M:], A[M:, M:])
+                canonical, _, _ = replay(
+                    eng.store, eng._script,
+                    [[M + t] for t in range(K - M)],
+                    linkage=linkage, **mode_kw,
+                )
+                oracle = hierarchical_clustering(
+                    eng.store.dense(np.float64), linkage=linkage, **mode_kw
+                )
+                assert (canon(oracle) == canon(canonical)).all()
+
+    def test_k512_enbloc_engages_and_keeps_oracle_parity(self):
+        """Acceptance: at K=512 the default replay folds most clean script
+        entries en bloc and still reproduces full re-cluster labels in both
+        criteria modes."""
+        key = jax.random.PRNGKey(17)
+        U = clustered_signatures(key, 512, n_bases=12, spread=0.15)
+        U_new = clustered_signatures(
+            jax.random.fold_in(key, 1), 32, n_bases=16, spread=0.25
+        )
+        for cfg in (
+            EngineConfig(n_clusters=12, measure="eq3"),
+            EngineConfig(n_clusters=12, measure="eq3", linkage="complete"),
+        ):
+            eng = ClusterEngine.from_signatures(U, cfg)
+            res = eng.admit(U_new)
+            assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
+            # the bulk of the applied script went through en-bloc runs
+            assert res.stats.enbloc_runs > 0
+            assert res.stats.enbloc_entries > res.stats.script_applied // 2
+            eng.depart(np.arange(100, 140))
+            assert (canon(_oracle(eng, cfg)) == canon(eng.canonical_labels)).all()
+            assert eng.last_stats.enbloc_entries > 0
+
+    def test_stats_accounting_consistent(self):
+        key = jax.random.PRNGKey(3)
+        U = clustered_signatures(key, 64, n_bases=4, spread=0.1)
+        eng = ClusterEngine.from_signatures(U, EngineConfig(n_clusters=4))
+        res = eng.admit(clustered_signatures(jax.random.fold_in(key, 2), 8))
+        s = res.stats
+        assert s.enbloc_entries <= s.script_applied
+        assert s.enbloc_runs <= s.enbloc_entries
 
 
 # ---------------------------------------------------------------------------
