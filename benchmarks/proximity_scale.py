@@ -21,13 +21,25 @@ section checks that draining an async ChurnQueue (policy-sized admission
 batches, DrainPolicy fitted from a seeded probe) reproduces the labels of
 the equivalent synchronous schedule bitwise.
 
+A ``memory_sweep`` section measures the distance-store memory tiers
+(``dense`` | ``banded`` | ``condensed_only`` — see
+repro.core.engine.memory) at K in {2048, 8192}: each (K, policy) runs in
+its own subprocess so ``ru_maxrss`` is a clean peak-RSS reading, reporting
+bootstrap time, steady-state admission time, persistent store/cache bytes
+and band hit rates, and asserting cross-policy label parity (bitwise).
+``memory_parity`` is the in-process cross-tier bitwise gate (admit +
+depart under every tier) that ``--quick`` runs in CI.
+
 Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
 
 ``--quick`` is the CI parity smoke: K=128 only, every backend and eq2
 solver against the dense reference, the 4-device label check at K=128, the
-engine-vs-full-re-cluster streaming parity check, and the queue-drain
-parity check; no json rewrite, nonzero exit on any parity failure.
+engine-vs-full-re-cluster streaming parity check, the queue-drain parity
+check, and the cross-tier memory-policy parity check; no json rewrite,
+nonzero exit on any parity failure.
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
+
+Every field of the emitted json is documented in ``docs/BENCHMARKS.md``.
 """
 import json
 import os
@@ -325,6 +337,211 @@ def _streaming_rows(record, rows, Ks, Bs, iters):
     return all(e["labels_parity"] for e in record["streaming"])
 
 
+# --------------------------------------------------------------------------
+# Memory-policy sweep: per-tier peak RSS + admission latency, in clean
+# subprocesses (ru_maxrss is a high-water mark, so tiers must not share a
+# process), against data precomputed once by the parent.
+# --------------------------------------------------------------------------
+
+MEMORY_KS = (2048, 8192)
+MEMORY_POLICIES = ("dense", "banded", "condensed_only")
+MEMORY_B = 16
+# Sweep window: sized to the workload's hot set (the members of the
+# clusters successive admissions dirty) — 2048 rows is 1/4 of the dense
+# mirror at K=8192.  The policy default (512) targets smaller hot sets.
+MEMORY_BAND_ROWS = 2048
+
+# The subprocess performs NO proximity computation: the parent precomputes
+# the full (Kmax + 2B) proximity matrix and the subprocess slices its
+# admission blocks out of it, driving the store + replay directly.  This
+# keeps XLA compilation (whose ~GB-scale arena would dwarf every tier's
+# working set in ru_maxrss) out of the measured process, so peak RSS and
+# admission time reflect exactly what the memory policy governs: store
+# caches, bootstrap working set, and replay gathers.
+_MEMORY_SCRIPT = r"""
+import json, resource, sys, time, zlib
+import numpy as np, jax.numpy as jnp
+from repro.core.engine import ClusterEngine, EngineConfig, replay
+
+
+def peak_rss_mb():
+    # /proc VmHWM is per-address-space and resets on execve; ru_maxrss does
+    # NOT (the forking benchmark parent would leak its own high-water mark
+    # into every child reading).  Some sandboxed kernels propagate even
+    # VmHWM across exec — baseline_rss_mb (read right after imports) is
+    # reported alongside so the tier delta is recoverable either way.
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+RSS0 = peak_rss_mb()
+
+
+path, mode, K_s = sys.argv[1], sys.argv[2], sys.argv[3]
+K = int(K_s)
+data = np.load(path)
+# the (Kmax+5B)^2 shared input is memory-mapped so each child only pages in
+# the rows it actually slices — otherwise the ~274 MB load would swamp the
+# per-tier RSS deltas this sweep exists to measure
+A = np.load(str(data["A_path"]), mmap_mode="r")
+beta = float(data["beta"])
+B = int(data["B"])
+cfg = EngineConfig(beta=beta, measure="eq3", memory=mode,
+                   band_rows=int(data["band_rows"]))
+t0 = time.perf_counter()
+eng = ClusterEngine.from_proximity(A[:K, :K], jnp.zeros((K, 2, 1)), cfg)
+boot_s = time.perf_counter() - t0
+eng.warm_cache()
+# warmup admission (rows K..K+B as newcomers): builds + warms the tier's
+# cache in place (dense: append keeps the (K, K) f32 in sync; banded: the
+# replay's gathers populate the hot window and append extends it)
+eng.store.append_block(A[:K, K : K + B], A[K : K + B, K : K + B])
+labels, script, _ = replay(
+    eng.store, eng._script, [[K + t] for t in range(B)], beta=beta
+)
+M = K + B
+# steady-state: the timed batch arrives from the SAME cohorts as the
+# warmup batch (rows chosen base-aligned by the parent), so its replay
+# dirties clusters whose member rows the warmup already pulled into the
+# banded tier's hot window — admission-stream locality, not a cold start
+idx2 = np.arange(int(data["idx2_start"]), int(data["idx2_start"]) + B)
+cross2 = A[:M, idx2]
+square2 = A[np.ix_(idx2, idx2)]
+t_adm = []
+st = None
+for _ in range(3):
+    st = None                   # free the previous fork (its band copy)
+    st = eng.store.copy()       # before forking anew, outside the timer
+    t0 = time.perf_counter()
+    st.append_block(cross2, square2)
+    labels, _, _ = replay(
+        st, script, [[M + t] for t in range(B)], beta=beta
+    )
+    t_adm.append((time.perf_counter() - t0) * 1e6)
+mem = st.memory
+band = mem.band
+out = {
+    "mode": mode,
+    "K": K,
+    "boot_s": boot_s,
+    "us_admit": sorted(t_adm)[len(t_adm) // 2],
+    "peak_rss_mb": peak_rss_mb(),
+    "baseline_rss_mb": RSS0,
+    "store_bytes": int(st.nbytes),
+    "boot_work_bytes": 8 * K * K if mode == "dense" else 4 * K * (K - 1),
+    "dense_cache_bytes": 4 * K * K if st.has_dense_cache else 0,
+    "band_bytes": int(band.nbytes) if band is not None else 0,
+    "band_hits": int(band.hits) if band is not None else 0,
+    "band_misses": int(band.misses) if band is not None else 0,
+    "peak_gather_bytes": int(mem.stats.peak_gather_bytes),
+    "labels_sum": int(np.asarray(labels, dtype=np.int64).sum()),
+    "labels_crc": int(zlib.crc32(
+        np.ascontiguousarray(np.asarray(labels, dtype=np.int64)).tobytes())),
+    "n_clusters": int(np.unique(labels).size),
+}
+print("RESULT" + json.dumps(out))
+"""
+
+
+def _memory_rows(record, rows, Ks=MEMORY_KS, policies=MEMORY_POLICIES):
+    """Per-tier bootstrap + admission cost at scale, one subprocess each."""
+    import tempfile
+
+    record["memory_sweep"] = []
+    ok = True
+    Kmax = max(Ks)
+    # 5B extra rows: warmup newcomers are rows [K, K+B) and the timed batch
+    # rows [Kmax+4B, Kmax+5B) — with n_bases=64 and B=16 both land on bases
+    # 0..15 (K and Kmax+4B are multiples of 64), i.e. successive admissions
+    # arrive from the same cohorts (the banded tier's locality assumption)
+    U_all = _clustered_signatures(Kmax + 5 * MEMORY_B, n_bases=64)
+    A = np.asarray(
+        proximity_matrix(U_all, "eq3", backend="jnp_blocked")
+    ).astype(np.float32)
+    beta = float(np.quantile(A[A > 0], 0.05))
+    with tempfile.NamedTemporaryFile(suffix=".npz", delete=False) as f:
+        tmp = f.name
+    tmp_a = tmp + ".A.npy"
+    try:
+        np.save(tmp_a, A)  # standalone .npy: children mmap it read-only
+        np.savez(
+            tmp, A_path=tmp_a, beta=beta, B=MEMORY_B,
+            band_rows=MEMORY_BAND_ROWS, idx2_start=Kmax + 4 * MEMORY_B,
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src")
+        for K in Ks:
+            per_k = []
+            for mode in policies:
+                proc = subprocess.run(
+                    [sys.executable, "-c", _MEMORY_SCRIPT, tmp, mode, str(K)],
+                    capture_output=True, text=True, env=env, timeout=1800,
+                )
+                if proc.returncode != 0:
+                    raise RuntimeError(
+                        f"memory sweep subprocess failed ({mode}, K={K}):\n"
+                        f"{proc.stderr[-4000:]}"
+                    )
+                line = [
+                    l for l in proc.stdout.splitlines() if l.startswith("RESULT")
+                ][-1]
+                entry = json.loads(line[len("RESULT"):])
+                per_k.append(entry)
+                record["memory_sweep"].append(entry)
+                rows.append((
+                    f"proximity_scale/memory_K{K}_{mode}",
+                    entry["us_admit"],
+                    f"rss={entry['peak_rss_mb']:.0f}MB boot={entry['boot_s']:.2f}s "
+                    f"cache={(entry['dense_cache_bytes'] + entry['band_bytes']) / 2**20:.1f}MB",
+                ))
+            same = len({e["labels_crc"] for e in per_k}) == 1
+            ok &= same
+            rows.append((
+                f"proximity_scale/memory_K{K}_label_parity", None, str(same)
+            ))
+    finally:
+        os.unlink(tmp)
+        if os.path.exists(tmp_a):
+            os.unlink(tmp_a)
+    record["memory_sweep_parity"] = ok
+    return ok
+
+
+def _memory_parity_rows(record, rows):
+    """Cross-tier bitwise parity gate: bootstrap + admit + depart under
+    every memory tier reproduce the dense tier's labels bitwise (--quick
+    CI smoke; band_rows small enough to force LRU eviction)."""
+    from repro.core.engine import ClusterEngine, EngineConfig
+
+    K, B = 192, 12
+    U_all = _clustered_signatures(K + B, n_bases=16, seed=7)
+    A = np.asarray(proximity_matrix(U_all[:K], "eq3", backend="jnp_blocked"))
+    beta = float(np.quantile(A[A > 0], 0.05))
+    results = {}
+    for mode in ("dense", "banded", "condensed_only", "auto"):
+        cfg = EngineConfig(beta=beta, measure="eq3", memory=mode, band_rows=16)
+        eng = ClusterEngine.from_proximity(A, U_all[:K], cfg)
+        eng.admit(U_all[K:])
+        eng.depart(np.arange(40, 60))
+        results[mode] = (eng.labels.copy(), eng.canonical_labels.copy())
+    ok = all(
+        np.array_equal(results[m][0], results["dense"][0])
+        and np.array_equal(results[m][1], results["dense"][1])
+        for m in results
+    )
+    record["memory_parity"] = {
+        "K": K, "B": B, "modes": sorted(results), "labels_bitwise": ok,
+    }
+    rows.append(("proximity_scale/memory_tier_parity", None, f"bitwise={ok}"))
+    return ok
+
+
 def _queue_parity_rows(record, rows):
     """Async churn queue smoke: draining a ChurnQueue (policy-sized
     admission batches) reproduces the labels of the equivalent synchronous
@@ -491,12 +708,18 @@ def run(quick: bool = True, parity_only: bool = False):
 
     queue_ok = _queue_parity_rows(record, rows)
 
+    memory_ok = _memory_parity_rows(record, rows)
+    if not parity_only:
+        # full-scale tier sweep (peak RSS + admission time per policy),
+        # subprocess-isolated; --quick keeps only the in-process gate above
+        memory_ok &= _memory_rows(record, rows)
+
     parity_ok = all(
         e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
-    ) and streaming_ok and queue_ok
+    ) and streaming_ok and queue_ok and memory_ok
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -512,6 +735,9 @@ def run(quick: bool = True, parity_only: bool = False):
     )
     assert queue_ok, (
         "ChurnQueue drain diverged from the synchronous churn schedule"
+    )
+    assert memory_ok, (
+        "memory-policy tiers diverged from the dense tier's labels"
     )
     assert parity_ok, "sharded engine diverged from the blocked backend"
 

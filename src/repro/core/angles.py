@@ -276,23 +276,29 @@ def proximity_matrix(
     block_size: int | None = None,
     eq2_solver: str = "auto",
 ) -> jax.Array:
-    """Proximity matrix A (K x K, degrees) from stacked signatures.
+    """Proximity matrix A (K x K, **degrees**) from stacked signatures.
 
     Parameters
     ----------
     U_stack: (K, n, p) stacked orthonormal client signatures.
-    measure: "eq2" (smallest principal angle) or "eq3" (trace of arccos).
-    backend: "auto" | "jnp" | "jnp_blocked" | "jnp_sharded" | "pallas" —
-        see module docstring.
+    measure: "eq3" (default; trace of arccos over all p principal angles)
+        or "eq2" (smallest principal angle).
+    backend: "auto" (default) | "jnp" | "jnp_blocked" | "jnp_sharded" |
+        "pallas" — see module docstring.  "auto" picks the dense einsum
+        reference at small K and the blocked path beyond.
     block_size: client tile edge for the blocked/sharded/pallas paths; None
-        picks the backend's tuned default (blocked: 64 eq3 / 96 eq2,
-        sharded: 64, pallas: 8).
-    eq2_solver: "auto" | "jacobi" | "eigh" | "svd" — largest-singular-value
-        solver for eq2 (see repro.core.measures).  "auto" keeps the dense
-        reference on svd and the scalable paths on the batched Jacobi.
+        (default) picks the backend's tuned default (blocked: 64 eq3 /
+        96 eq2, sharded: 64, pallas: 8).
+    eq2_solver: "auto" (default) | "jacobi" | "eigh" | "svd" —
+        largest-singular-value solver for eq2 (see repro.core.measures).
+        "auto" keeps the dense reference on svd and the scalable paths on
+        the batched Jacobi.
 
-    All backends agree to ~1e-3 degrees on orthonormal f32 inputs; the dense
-    einsum path is the reference the others are tested against.
+    Parity guarantee: all backends and eq2 solvers agree with the dense
+    einsum reference to <= 1e-3 degrees on orthonormal f32 inputs (the CI
+    smoke gates this at K=128, ``benchmarks/proximity_scale.py --quick``),
+    and downstream HC labels across backends are checked bitwise.  The
+    result is symmetric with a zero diagonal.
     """
     if measure not in ("eq2", "eq3"):
         raise ValueError(f"unknown measure: {measure!r}")

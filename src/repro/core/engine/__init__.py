@@ -11,16 +11,20 @@ from repro.core.engine.engine import (
     EngineConfig,
     MembershipSnapshot,
 )
+from repro.core.engine.memory import BandedRowCache, MemoryPolicy, StoreMemory
 from repro.core.engine.store import CondensedDistances
 
 __all__ = [
     "AdmitResult",
+    "BandedRowCache",
     "ClusterEngine",
     "CondensedDistances",
     "DepartResult",
     "EngineConfig",
     "MembershipSnapshot",
+    "MemoryPolicy",
     "ReplayStats",
+    "StoreMemory",
     "filter_script_for_depart",
     "replay",
 ]

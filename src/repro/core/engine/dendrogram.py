@@ -57,6 +57,14 @@ that splits runs at tied heights.  Any fold whose value lands exactly on a
 dirty row's cached minimum makes the nearest-neighbor choice
 history-dependent — those runs fall back to the sequential path, keeping
 the degenerate-tie behavior the oracle parity suite pins.
+
+Memory: every leaf-row read goes through the store's tiered memory policy
+(``CondensedDistances.gather_rows`` — dense cache / banded hot-row window /
+strided condensed gathers, see :mod:`repro.core.engine.memory`), in blocks
+of at most ``ROW_BLOCK`` rows (repro.core.hc), so the replay never materializes a
+(K, K) outside the dense tier and its aggregation arithmetic — hence the
+labels — is identical across tiers.  The caveats above and the tier table
+are documented for humans in ``docs/ENGINE.md``.
 """
 from __future__ import annotations
 
@@ -66,7 +74,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core.hc import (
-    cluster_distance_matrix,
+    blocked_column_fold,
+    cluster_distances_from_rows,
     labels_from_members,
     lance_williams,
     merge_forest,
@@ -224,27 +233,33 @@ class _Forest:
         self.active[drop] = False
         self.n_active -= 1
 
-    def aggregate_vec(self, rows: np.ndarray, linkage: str) -> np.ndarray:
+    def aggregate_from(self, gather, members: list[int], linkage: str) -> np.ndarray:
         """Slot-level distance vector of a cluster from its leaf rows.
 
-        ``rows`` is (m, K) leaf distances of the cluster's members; columns
-        fold into the current slots by the linkage reduction (mean / min /
-        max over leaf pairs — exact for the reducible linkages here).
+        ``gather(idx)`` returns the (len(idx), K) float64 leaf-distance rows
+        of the requested members (the store's policy-routed
+        ``gather_rows``); the shared :func:`repro.core.hc.blocked_column_fold`
+        requests them in fixed blocks, so the peak transient stays
+        (block, K) under every memory tier and the columnwise fold
+        (sum / min / max over leaf pairs — exact for the reducible linkages
+        here) is arithmetic-identical no matter which tier served the rows.
         Inactive slots and the cluster's own slot come back inf.
         """
-        m = rows.shape[0]
+        mem = np.asarray(members, dtype=np.int64)
+        m = mem.size
+        col = blocked_column_fold(gather, mem, linkage)
         vec = np.full(self.K, np.inf)
         if linkage == "average":
             acc = np.zeros(self.K)
-            np.add.at(acc, self.rep_of_leaf, rows.sum(axis=0))
+            np.add.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active] / (m * self.size[self.active])
         elif linkage == "single":
             acc = np.full(self.K, np.inf)
-            np.minimum.at(acc, self.rep_of_leaf, rows.min(axis=0))
+            np.minimum.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active]
         else:  # complete
             acc = np.full(self.K, -np.inf)
-            np.maximum.at(acc, self.rep_of_leaf, rows.max(axis=0))
+            np.maximum.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active]
         return vec
 
@@ -425,28 +440,22 @@ def replay(
     forest = _Forest(K, dirty_members)
     dirty = _DirtyRows(K)
 
-    # Leaf rows come from the store's cached read-only float32 dense view,
-    # but only once the cumulative gathered-row count justifies building it:
-    # small scattered promotions stay on strided condensed gathers, cascades
-    # amortize the one densification — which append_block then keeps warm
-    # across admissions (the persistent store stays condensed; float32 ->
-    # float64 upcasts are exact, so the aggregation math is unchanged).
-    dense_cache: list[Optional[np.ndarray]] = [None]
-    gathered = [0]
+    # Leaf rows come through the store's memory policy (gather_rows): the
+    # dense tier serves them from its cached read-only float32 view (built
+    # adaptively once the cumulative gathered-row count crosses K/8 and
+    # then kept warm across admissions by append_block), the banded tier
+    # from the LRU hot-row window, condensed_only from strided gathers.
+    # Every tier returns bitwise-identical float64 rows (float32 upcasts
+    # are exact), so the replay's aggregation math — and the labels — are
+    # tier-independent.
+    store.memory.begin_op(store)
 
-    def leaf_rows(members: list[int]) -> np.ndarray:
-        if dense_cache[0] is None:
-            gathered[0] += len(members)
-            if gathered[0] * 8 <= K and not store.has_dense_cache:
-                return store.rows(members)
-            dense_cache[0] = store.dense_ro()
-        return dense_cache[0][np.asarray(members, dtype=np.int64)].astype(
-            np.float64
-        )
+    def leaf_rows(idx: np.ndarray) -> np.ndarray:
+        return store.gather_rows(idx)
 
     for g in dirty_members:
         rep = min(g)
-        vec = forest.aggregate_vec(leaf_rows(forest.members[rep]), linkage)
+        vec = forest.aggregate_from(leaf_rows, forest.members[rep], linkage)
         vec[rep] = np.inf
         dirty.add(rep, vec)
 
@@ -455,7 +464,7 @@ def replay(
     best_cache: list = [None]
 
     def promote(rep: int) -> None:
-        vec = forest.aggregate_vec(leaf_rows(forest.members[rep]), linkage)
+        vec = forest.aggregate_from(leaf_rows, forest.members[rep], linkage)
         vec[rep] = np.inf
         forest.is_dirty[rep] = True
         dirty.add(rep, vec)
@@ -559,7 +568,7 @@ def replay(
         h = float(dirty.nnd[r_best])
         rq = dirty.row_of(q)
         if rq is None:  # absorbing a clean cluster: seed its vector
-            vec_q = forest.aggregate_vec(leaf_rows(forest.members[q]), linkage)
+            vec_q = forest.aggregate_from(leaf_rows, forest.members[q], linkage)
             vec_q[q] = np.inf
         else:
             vec_q = dirty.DV[rq]
@@ -589,10 +598,11 @@ def replay(
     if n_clusters is not None and forest.n_active > target:
         reps = sorted(np.where(forest.active)[0], key=lambda c: min(forest.members[c]))
         groups = [forest.members[r] for r in reps]
-        if dense_cache[0] is None:
-            dense_cache[0] = store.dense_ro()
-        Dc = cluster_distance_matrix(
-            np.asarray(dense_cache[0], dtype=np.float64), groups, linkage
+        # promote=False: this is a streaming full-forest scan — it must not
+        # evict the banded tier's hot rows (and the blocked row arithmetic
+        # is identical under every tier, keeping tail heights bitwise).
+        Dc = cluster_distances_from_rows(
+            lambda idx: store.gather_rows(idx, promote=False), groups, linkage
         )
         sizes = np.array([len(g) for g in groups], dtype=np.int64)
         active2, members2, merges2 = merge_forest(

@@ -20,8 +20,14 @@ dendrogram module); ``depart(ids)`` is the symmetric delete — a scenario
 the batch API could not express at all.  Both reproduce the labels a full
 re-clustering of the current distance matrix would produce (oracle-checked
 up to degenerate distance ties; see the dendrogram module docstring).
-Steady-state admission streams can :meth:`ClusterEngine.warm_cache` the
-store's read-only dense view once — ``admit`` keeps it in sync thereafter.
+Server memory is governed by a tiered policy
+(:class:`~repro.core.engine.memory.MemoryPolicy`, via
+``EngineConfig.memory``): a persistent dense float32 mirror, an LRU banded
+hot-row window, or condensed-only — bitwise-identical labels under every
+tier.  In the dense tier, steady-state admission streams can
+:meth:`ClusterEngine.warm_cache` the store's read-only dense view once —
+``admit`` keeps it in sync thereafter; the banded window warms itself from
+the replay's gathers.
 
 ``PACFLClustering`` (:mod:`repro.core.pacfl`) is a thin view over this
 engine; ``pme.assign_newcomers`` delegates to ``admit``; the FL layer
@@ -42,18 +48,41 @@ from repro.core.engine.dendrogram import (
     filter_script_for_depart,
     replay,
 )
+from repro.core.engine.memory import MemoryPolicy
 from repro.core.engine.store import CondensedDistances
-from repro.core.hc import labels_from_members, merge_forest
+from repro.core.hc import CondensedWorkingMatrix, labels_from_members, merge_forest
 
 
 @dataclass(frozen=True)
 class EngineConfig:
-    """Clustering criterion + proximity knobs the engine needs.
+    """Clustering criterion + proximity + memory knobs the engine needs.
 
-    A ``n_clusters`` set overrides ``beta`` (fixed cluster count), exactly
-    as in the one-shot phase.  ``measure``/``backend``/``block_size`` are
-    forwarded to :func:`repro.core.angles.proximity_matrix` /
-    :func:`cross_proximity` for the admission blocks.
+    Parameters
+    ----------
+    beta: HC distance threshold in **degrees** (default 10.0) — merging
+        stops once the closest pair is farther apart.  Ignored when
+        ``n_clusters`` is set.
+    n_clusters: fixed cluster count; overrides ``beta`` exactly as in the
+        one-shot phase.  Default ``None`` (threshold mode).
+    measure: ``"eq3"`` (default) | ``"eq2"`` — the paper's two
+        principal-angle measures.
+    linkage: ``"average"`` (default) | ``"single"`` | ``"complete"``.
+    backend / block_size: forwarded to
+        :func:`repro.core.angles.proximity_matrix` / ``cross_proximity``
+        for the admission blocks (defaults: backend ``"auto"``,
+        block_size ``None`` = the backend's tuned tile edge).
+    memory: distance-store memory policy mode — ``"auto"`` (default) |
+        ``"dense"`` | ``"banded"`` | ``"condensed_only"``; see
+        :class:`repro.core.engine.memory.MemoryPolicy`.  All modes produce
+        bitwise-identical labels; they trade cache memory against
+        steady-state admission latency.
+    memory_budget_bytes: ``auto``-mode cache byte budget (default ``None``
+        = 256 MiB).
+    band_rows: banded-tier window height in rows (default 512).
+    dense_cache: legacy opt-out (PR 4's knob).  ``False`` with the default
+        ``memory="auto"`` forces the ``condensed_only`` tier — no
+        persistent dense cache, exactly the old opt-out guarantee.
+        Ignored when ``memory`` is set explicitly.
     """
 
     beta: float = 10.0
@@ -62,11 +91,21 @@ class EngineConfig:
     linkage: str = "average"
     backend: str = "auto"
     block_size: Optional[int] = None
-    # Keep a read-only float32 dense view cached across admissions (see
-    # CondensedDistances.dense_ro).  Costs one (K, K) float32 alongside the
-    # condensed store; set False at memory-bound K to keep every dense view
-    # strictly transient (replay then re-densifies per operation).
     dense_cache: bool = True
+    memory: str = "auto"
+    memory_budget_bytes: Optional[int] = None
+    band_rows: int = 512
+
+    def memory_policy(self) -> MemoryPolicy:
+        """The :class:`MemoryPolicy` this config resolves to."""
+        mode = self.memory
+        if mode == "auto" and not self.dense_cache:
+            mode = "condensed_only"
+        return MemoryPolicy(
+            mode=mode,
+            byte_budget=self.memory_budget_bytes,
+            band_rows=self.band_rows,
+        )
 
 
 @dataclass
@@ -108,7 +147,7 @@ class ClusterEngine:
     def __init__(self, config: EngineConfig):
         self.config = config
         self.U: Optional[jnp.ndarray] = None
-        self.store = CondensedDistances(0)
+        self.store = CondensedDistances(0, policy=config.memory_policy())
         self.ids = np.zeros(0, dtype=np.int64)
         self._next_id = 0
         self._script: list[Merge] = []
@@ -149,13 +188,23 @@ class ClusterEngine:
         K = int(A.shape[0])
         if U_stack.shape[0] != K:
             raise ValueError("A and U_stack disagree on the client count")
-        self.store = CondensedDistances.from_dense(A)
-        self.store.cache_enabled = self.config.dense_cache
+        self.store = CondensedDistances.from_dense(
+            A, policy=self.config.memory_policy()
+        )
         self.U = U_stack
         self.ids = np.arange(K, dtype=np.int64)
         self._next_id = K
+        self.store.memory.begin_op(self.store)
+        # Bootstrap working matrix: the dense tier runs the merge loop on a
+        # transient (K, K) float64 (fastest); banded/condensed_only run the
+        # (K, K)-free strided path on a condensed float64 working vector —
+        # half the dense float64 footprint, bitwise-identical merges.
+        if self.store.cache_enabled:
+            work = self.store.dense(np.float64)
+        else:
+            work = CondensedWorkingMatrix(self.store.values, K)
         active, members, merges = merge_forest(
-            self.store.dense(np.float64),
+            work,
             np.ones(K, dtype=np.int64),
             [[i] for i in range(K)],
             **self._criterion(),
@@ -191,7 +240,7 @@ class ClusterEngine:
         return self.store.dense(dtype)
 
     def warm_cache(self) -> None:
-        """Build the store's read-only dense float32 cache now.
+        """Build the store's read-only dense float32 cache now (dense tier).
 
         Replay seeds promotion vectors from this cache; without warming it
         is built lazily on the first admission whose promotions cascade,
@@ -200,9 +249,11 @@ class ClusterEngine:
         rebuild).  Copies made *after* warming share the cache (a fork
         snapshots the cache reference at copy time).
         Departures drop it (it rebuilds lazily).  Costs one (K, K) float32
-        alongside the condensed store — at memory-bound K construct the
-        engine with ``EngineConfig(dense_cache=False)``, which keeps every
-        dense view transient (this method is then a no-op).
+        alongside the condensed store — a no-op unless the engine's memory
+        policy resolves to the ``dense`` tier at the current K; under
+        ``banded`` the hot-row window warms itself from the replay's
+        gathers instead (see :class:`repro.core.engine.memory.MemoryPolicy`
+        and ``docs/ENGINE.md``).
         """
         if self.store.cache_enabled:
             self.store.dense_ro()
@@ -238,9 +289,20 @@ class ClusterEngine:
     def admit(self, U_new: jnp.ndarray) -> AdmitResult:
         """Fold B newcomers into the membership (Algorithms 2+3, streaming).
 
-        Computes only the (M, B) cross and (B, B) square proximity blocks,
-        appends them to the condensed store, and replays the cached
-        dendrogram with the newcomers as dirty singletons.
+        ``U_new`` is the (B, n, p) stack of newcomer signatures (B >= 1).
+        Computes only the (M, B) cross and (B, B) square proximity blocks
+        (degrees, via the config's measure/backend), appends them to the
+        condensed store, and replays the cached dendrogram with the
+        newcomers as dirty singletons — near-O(B * K) instead of the
+        O(K^2) re-cluster.
+
+        Parity guarantee: the resulting ``canonical`` labels equal a full
+        re-clustering of the current distance store (oracle-exact up to the
+        degenerate-tie caveats in ``docs/ENGINE.md``), independent of batch
+        split, en-bloc folding, and the store's memory tier — all pinned
+        bitwise by the test suites.  ``labels`` additionally keeps seen
+        clients' stable ids.  Admission is in-place; use
+        :meth:`copy`/``PACFLClustering.extend`` for a fork.
         """
         from repro.core.pme import remap_onto_old_ids
 
@@ -307,9 +369,15 @@ class ClusterEngine:
     def depart(self, client_ids: np.ndarray) -> DepartResult:
         """Remove clients (churn) — the symmetric delete to :meth:`admit`.
 
-        Drops their rows from the condensed store, splits the cached script
-        (merges whose subtree contained a departed client are dropped; the
-        surviving sides become dirty orphans) and replays.
+        ``client_ids`` are **stable** engine ids (``engine.ids``, equal to
+        row position until the first departure); unknown ids raise
+        ``KeyError``.  Drops their rows from the condensed store (O(K^2)
+        compaction, the rare path), splits the cached script (merges whose
+        subtree contained a departed client are dropped; the surviving
+        sides become dirty orphans via tombstones) and replays.  The same
+        oracle-parity guarantee as :meth:`admit` applies: ``canonical``
+        equals a full re-clustering of the surviving store, under every
+        memory tier.
         """
         from repro.core.pme import remap_onto_old_ids
 

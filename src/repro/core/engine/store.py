@@ -13,13 +13,23 @@ then a pure append — each newcomer contributes one contiguous column block —
 so the store grows in amortized O((M + B) * B) without rewriting seen-pair
 entries.  Departure compacts the vector (O(K^2), the rare path).
 
-Dense views (``dense()`` / ``rows()``) are materialized on demand for the
-engine's replay and for API back-compat (``PACFLClustering.A``); they are
-transient — persistent state stays condensed.
+Dense views (``dense()`` / ``rows()``) are materialized on demand for API
+back-compat (``PACFLClustering.A``); they are transient — persistent state
+stays condensed.  What the store may *cache* on top of the condensed vector
+is decided by a :class:`~repro.core.engine.memory.MemoryPolicy` (dense /
+banded / condensed_only tiers, ``auto`` by a byte budget): the engine's
+replay reads rows through :meth:`gather_rows`, which routes through the
+policy, and :meth:`dense_ro` retains its ``(K, K)`` float32 cache only in
+the ``dense`` tier.  See ``docs/ENGINE.md``.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
+
+from repro.core.engine.memory import MemoryPolicy, StoreMemory
+from repro.core.hc import condensed_row_gather
 
 
 def _tri(n):
@@ -30,7 +40,12 @@ def _tri(n):
 class CondensedDistances:
     """Growable/shrinkable condensed symmetric distance store (float32)."""
 
-    def __init__(self, n: int = 0, values: np.ndarray | None = None):
+    def __init__(
+        self,
+        n: int = 0,
+        values: np.ndarray | None = None,
+        policy: Optional[MemoryPolicy] = None,
+    ):
         self.n = int(n)
         need = _tri(self.n)
         if values is None:
@@ -42,19 +57,20 @@ class CondensedDistances:
                 f"got {values.size}"
             )
         self._v = values
-        # Optional read-only float32 dense cache (see dense_ro): built
-        # lazily, extended in place by append_block, dropped on remove.
-        # Persistent state remains the condensed vector — the cache is a
-        # droppable accelerator for replay-heavy admission streams; set
-        # cache_enabled=False (EngineConfig.dense_cache) to keep dense
-        # views strictly transient at memory-bound K.
+        # Read-only float32 dense cache (see dense_ro): built lazily,
+        # extended in place by append_block, dropped on remove — retained
+        # only when the memory policy resolves to the "dense" tier.
+        # Persistent state remains the condensed vector; banded /
+        # condensed_only caching state lives in self.memory.
         self._dense32: np.ndarray | None = None
-        self.cache_enabled = True
+        self.memory = StoreMemory(policy)
 
     # -- constructors -------------------------------------------------------
 
     @classmethod
-    def from_dense(cls, A: np.ndarray) -> "CondensedDistances":
+    def from_dense(
+        cls, A: np.ndarray, policy: Optional[MemoryPolicy] = None
+    ) -> "CondensedDistances":
         """Condense a symmetric (K, K) matrix (upper triangle is kept)."""
         A = np.asarray(A)
         n = A.shape[0]
@@ -65,12 +81,12 @@ class CondensedDistances:
         for j in range(1, n):  # column slices beat a giant tril_indices gather
             v[off : off + j] = A[:j, j]
             off += j
-        return cls(n, v)
+        return cls(n, v, policy=policy)
 
     def copy(self) -> "CondensedDistances":
         st = CondensedDistances(self.n, self._v.copy())
         st._dense32 = self._dense32  # read-only, safely shared across forks
-        st.cache_enabled = self.cache_enabled
+        st.memory = self.memory.fork()
         return st
 
     # -- introspection ------------------------------------------------------
@@ -107,8 +123,14 @@ class CondensedDistances:
             off += j
         return out
 
+    @property
+    def cache_enabled(self) -> bool:
+        """True when the memory policy resolves to the ``dense`` tier at the
+        current K — i.e. :meth:`dense_ro` is allowed to retain its cache."""
+        return self.memory.tier(self.n) == "dense"
+
     def dense_ro(self) -> np.ndarray:
-        """Read-only float32 dense view, cached across admissions.
+        """Read-only float32 dense view — the ``dense`` policy tier.
 
         Unlike :meth:`dense` (a fresh mutable transient the HC merge loop is
         allowed to consume), this view is shared between engine forks and
@@ -120,8 +142,10 @@ class CondensedDistances:
         forks sharing it can admit independently without corrupting each
         other.  The engine's replay seeds promotion vectors from the view.
 
-        With ``cache_enabled=False`` the view is built fresh each call and
-        NOT retained — dense memory stays transient (pre-cache behavior).
+        Under the ``banded`` / ``condensed_only`` tiers the view is built
+        fresh each call and NOT retained — dense memory stays transient.
+        (Policy-aware consumers should prefer :meth:`gather_rows`, which
+        never materializes (K, K) outside the dense tier.)
         """
         if self._dense32 is None:
             d = self.dense(np.float32)
@@ -145,19 +169,26 @@ class CondensedDistances:
         The engine's replay uses this to seed distance vectors for dirty
         clusters (newcomers already have theirs from the admission blocks;
         orphans and absorbed clean clusters aggregate over these rows).
+        One shared strided-gather implementation
+        (:func:`repro.core.hc.condensed_row_gather`) serves this and the
+        HC working matrix, so the two can never drift.
         """
-        idx = np.atleast_1d(np.asarray(idx, dtype=np.int64))
-        if self._v.size == 0:  # n <= 1: no pairs
-            return np.zeros((idx.size, self.n), dtype=dtype)
-        J = np.arange(self.n, dtype=np.int64)
-        hi = np.maximum(idx[:, None], J[None, :])
-        lo = np.minimum(idx[:, None], J[None, :])
-        flat = hi * (hi - 1) // 2 + lo
-        diag = hi == lo
-        flat[diag] = 0  # any in-range slot; overwritten below
-        out = self._v[flat].astype(dtype)
-        out[diag] = 0.0
-        return out
+        return condensed_row_gather(
+            self._v, self.n, idx, diag_fill=0.0, dtype=dtype
+        )
+
+    def gather_rows(self, idx: np.ndarray, promote: bool = True) -> np.ndarray:
+        """Policy-routed row gather — the engine-facing read path.
+
+        Returns ``(len(idx), K)`` float64 rows (exact float32 upcasts, so
+        every tier returns bitwise-identical values).  The resolved tier
+        decides where they come from: the retained dense cache (``dense``,
+        with the adaptive K/8 densify threshold), the LRU banded row cache
+        (``banded``), or strided condensed gathers (``condensed_only``).
+        ``promote=False`` marks a streaming full-matrix scan that must not
+        evict the hot band.
+        """
+        return self.memory.gather(self, idx, promote=promote)
 
     # -- mutation -----------------------------------------------------------
 
@@ -181,7 +212,8 @@ class CondensedDistances:
         ]
         self._v = np.concatenate([self._v[: _tri(M)]] + cols)
         self.n = M + B
-        if self._dense32 is not None:
+        self.memory.on_append(cross, square)
+        if self._dense32 is not None and self.cache_enabled:
             d = np.zeros((self.n, self.n), dtype=np.float32)
             d[:M, :M] = self._dense32
             d[:M, M:] = cross
@@ -189,6 +221,10 @@ class CondensedDistances:
             d[M:, M:] = square
             d.flags.writeable = False
             self._dense32 = d
+        elif self._dense32 is not None:
+            # an auto policy crossed its byte budget at the new K: demote —
+            # drop the dense cache instead of growing it past the budget
+            self._dense32 = None
 
     def remove(self, idx: np.ndarray) -> np.ndarray:
         """Depart clients ``idx``: drop their rows/columns, compact.
@@ -207,6 +243,7 @@ class CondensedDistances:
         if idx.size and (idx[0] < 0 or idx[-1] >= self.n):
             raise IndexError("departing ids out of range")
         self._dense32 = None
+        self.memory.on_remove()
         keep = np.setdiff1d(np.arange(self.n, dtype=np.int64), idx)
         m = int(keep.size)
         total = _tri(m)

@@ -19,11 +19,201 @@ cached neighbor was touched by the merge.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
 _LINKAGES = ("single", "complete", "average")
+
+# Row-block edge for gather-based aggregation (cluster_distances_from_rows,
+# blocked_column_fold, CondensedWorkingMatrix.prepare — and, via
+# blocked_column_fold, every engine-side gather): bounds
+# every transient at (ROW_BLOCK, K) float64 and — because all callers
+# block identically through blocked_column_fold — keeps the reduction
+# arithmetic bitwise-equal no matter where the rows come from (dense
+# matrix, dense cache, band, strided condensed gathers).
+ROW_BLOCK = 256
+
+
+def condensed_row_gather(
+    values: np.ndarray,
+    n: int,
+    idx: np.ndarray,
+    diag_fill: float = 0.0,
+    dtype=np.float64,
+) -> np.ndarray:
+    """Gather full symmetric rows from a column-block condensed vector.
+
+    ``values`` holds the ``n (n - 1) / 2`` unique pairwise entries with
+    pair ``(i, j)``, ``i < j`` at flat offset ``j (j - 1) / 2 + i``; the
+    result is ``(len(idx), n)`` in ``dtype`` with the diagonal set to
+    ``diag_fill`` (0 for distance stores, inf for HC working matrices).
+    The single implementation of the strided-gather formula — shared by
+    :meth:`CondensedDistances.rows` and
+    :meth:`CondensedWorkingMatrix.rows_block`, so the two can never drift.
+    """
+    idx = np.atleast_1d(np.asarray(idx, dtype=np.int64))
+    if values.size == 0:  # n <= 1: no pairs
+        return np.full((idx.size, n), diag_fill, dtype=dtype)
+    J = np.arange(n, dtype=np.int64)
+    hi = np.maximum(idx[:, None], J[None, :])
+    lo = np.minimum(idx[:, None], J[None, :])
+    flat = hi * (hi - 1) // 2 + lo
+    diag = hi == lo
+    flat[diag] = 0  # any in-range slot; overwritten below
+    out = values[flat]
+    if out.dtype != dtype:
+        out = out.astype(dtype)
+    out[diag] = diag_fill
+    return out
+
+
+def blocked_column_fold(gather, idx: np.ndarray, linkage: str) -> np.ndarray:
+    """Columnwise linkage fold (sum / min / max) over the rows ``idx``.
+
+    ``gather(sub_idx)`` returns ``(len(sub_idx), K)`` float64 rows; they
+    are requested in blocks of ``ROW_BLOCK``, so peak transient memory is
+    one block regardless of ``len(idx)``.  This is THE shared reduction
+    every consumer of leaf rows uses (``cluster_distances_from_rows``,
+    the dendrogram replay's promotion aggregation) — single implementation
+    + fixed blocking is what makes heights bitwise-identical across the
+    store's memory tiers.
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    col = None
+    for lo in range(0, idx.size, ROW_BLOCK):
+        R = gather(idx[lo : lo + ROW_BLOCK])
+        if linkage == "average":
+            part = R.sum(axis=0)
+            col = part if col is None else col + part
+        elif linkage == "single":
+            part = R.min(axis=0)
+            col = part if col is None else np.minimum(col, part)
+        else:  # complete
+            part = R.max(axis=0)
+            col = part if col is None else np.maximum(col, part)
+    return col
+
+
+class CondensedWorkingMatrix:
+    """(K, K)-free float64 working matrix for :func:`merge_forest`.
+
+    Wraps a *column-block condensed* vector (pair ``(i, j)``, ``i < j`` at
+    flat offset ``j (j - 1) / 2 + i`` — the layout of
+    :class:`repro.core.engine.store.CondensedDistances`) and exposes exactly
+    the row reads/writes the merge loop performs.  Rows are strided gathers
+    and symmetric row writes are single scatters (each pair is stored once),
+    so the loop runs in ``K (K - 1) / 2`` float64 — half a dense float64
+    matrix, and never a ``(K, K)`` allocation.
+
+    Bitwise parity with the dense path is by construction: gathered rows
+    hold the same float64 values a dense matrix would (the diagonal reads
+    as inf, exactly like the dense path's ``fill_diagonal``), and the merge
+    loop performs identical arithmetic on them.  Like the dense input, the
+    working vector is CONSUMED (mutated in place).
+    """
+
+    def __init__(self, values: np.ndarray, n: int):
+        self.n = int(n)
+        v = np.array(values, dtype=np.float64)  # private working copy
+        if v.size != self.n * (self.n - 1) // 2:
+            raise ValueError(
+                f"condensed working vector for n={self.n} needs "
+                f"{self.n * (self.n - 1) // 2} entries, got {v.size}"
+            )
+        self.v = v
+        self._J = np.arange(self.n, dtype=np.int64)
+        self._tri = self._J * (self._J - 1) // 2
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def nbytes(self) -> int:
+        return self.v.nbytes
+
+    def _row_indices(self, i: int) -> np.ndarray:
+        idx = np.empty(self.n, dtype=np.int64)
+        t = int(self._tri[i])
+        idx[:i] = t + self._J[:i]          # pairs (j, i), j < i: contiguous
+        idx[i] = 0                         # placeholder; callers mask it
+        idx[i + 1 :] = self._tri[i + 1 :] + i  # pairs (i, j), j > i: strided
+        return idx
+
+    def row(self, i: int) -> np.ndarray:
+        out = self.v[self._row_indices(i)]
+        out[i] = np.inf
+        return out
+
+    def rows_block(self, idx: np.ndarray) -> np.ndarray:
+        """(len(idx), n) gather, diagonal read as inf (working matrix)."""
+        return condensed_row_gather(self.v, self.n, idx, diag_fill=np.inf)
+
+    def write_row(self, i: int, vals: np.ndarray) -> None:
+        """Symmetric row write (``D[i, :] = D[:, i] = vals``), one scatter."""
+        idx = self._row_indices(i)
+        keep = np.ones(self.n, dtype=bool)
+        keep[i] = False
+        self.v[idx[keep]] = vals[keep]
+
+    def clear_row(self, j: int) -> None:
+        idx = self._row_indices(j)
+        keep = np.ones(self.n, dtype=bool)
+        keep[j] = False
+        self.v[idx[keep]] = np.inf
+
+    def argmin_row(self, k: int) -> tuple[int, float]:
+        r = self.row(k)
+        a = int(r.argmin())
+        return a, r[a]
+
+    def prepare(self) -> tuple[np.ndarray, np.ndarray]:
+        """Initial nearest-neighbor caches, blockwise (peak (block, n))."""
+        n = self.n
+        nn = np.empty(n, dtype=np.int64)
+        nnd = np.empty(n, dtype=np.float64)
+        for lo in range(0, n, ROW_BLOCK):
+            hi = min(lo + ROW_BLOCK, n)
+            R = self.rows_block(np.arange(lo, hi, dtype=np.int64))
+            nn[lo:hi] = R.argmin(axis=1)
+            nnd[lo:hi] = R[np.arange(hi - lo), nn[lo:hi]]
+        return nn, nnd
+
+
+class _DenseWorking:
+    """Adapter giving a dense (K, K) float64 matrix the same row interface
+    (views, not copies — the ops below are bitwise the pre-refactor code)."""
+
+    __slots__ = ("D",)
+
+    def __init__(self, D: np.ndarray):
+        self.D = D
+
+    @property
+    def shape(self):
+        return self.D.shape
+
+    def row(self, i):
+        return self.D[i]
+
+    def write_row(self, i, vals):
+        self.D[i, :] = vals
+        self.D[:, i] = vals
+
+    def clear_row(self, j):
+        self.D[j, :] = np.inf
+        self.D[:, j] = np.inf
+
+    def argmin_row(self, k):
+        r = self.D[k]
+        a = int(r.argmin())
+        return a, r[a]
+
+    def prepare(self):
+        np.fill_diagonal(self.D, np.inf)
+        nn = self.D.argmin(axis=1)
+        return nn, self.D[np.arange(self.D.shape[0]), nn]
 
 
 def lance_williams(
@@ -42,7 +232,7 @@ def lance_williams(
 
 
 def merge_forest(
-    D: np.ndarray,
+    D: Union[np.ndarray, CondensedWorkingMatrix],
     size: np.ndarray,
     members: list[list[int]],
     *,
@@ -53,13 +243,18 @@ def merge_forest(
     """Core agglomerative merge loop, generalized to non-singleton starts.
 
     Runs the generic (global closest pair) algorithm on an initial forest of
-    clusters: ``D`` is the (C, C) float64 cluster-distance matrix (CONSUMED —
-    mutated in place, diagonal set to inf), ``size[i]`` the member count and
-    ``members[i]`` the client ids of initial cluster ``i``.  For tie-breaking
-    to match a singleton-start run on the same leaves, initial clusters must
-    be ordered by their smallest member id (rows then stand in for leaf
-    indices: merging keeps the smaller row, so a row's id stays the min
-    member of its cluster).
+    clusters: ``D`` is the (C, C) float64 cluster-distance matrix — either a
+    dense ndarray or a :class:`CondensedWorkingMatrix` (the strided path the
+    streaming engine's ``banded`` / ``condensed_only`` memory tiers use for
+    a (K, K)-free bootstrap; both are CONSUMED — mutated in place, diagonal
+    read as inf).  ``size[i]`` is the member count and ``members[i]`` the
+    client ids of initial cluster ``i``.  For tie-breaking to match a
+    singleton-start run on the same leaves, initial clusters must be ordered
+    by their smallest member id (rows then stand in for leaf indices:
+    merging keeps the smaller row, so a row's id stays the min member of its
+    cluster).  The two input paths produce bitwise-identical merges: the
+    condensed path gathers rows holding exactly the values the dense rows
+    would, and the loop's arithmetic is shared.
 
     Returns ``(active, members, merges)``: the liveness mask, the merged
     member lists, and the merge script — ``(rep_i, rep_j, height)`` per merge
@@ -72,7 +267,8 @@ def merge_forest(
         raise ValueError("specify exactly one of beta / n_clusters")
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage must be one of {_LINKAGES}")
-    K = D.shape[0]
+    work = D if isinstance(D, CondensedWorkingMatrix) else _DenseWorking(D)
+    K = work.shape[0]
     merges: list[tuple[int, int, float]] = []
     active = np.ones(K, dtype=bool)
     if K == 1:
@@ -81,10 +277,8 @@ def merge_forest(
     # `nn[i]` caches the argmin of row i (first occurrence on ties, matching
     # a fresh row-major argmin) and `nn_dist[i]` its distance, so the closest
     # pair is an O(K) vectorized lookup instead of an O(K^2) submatrix scan.
-    np.fill_diagonal(D, np.inf)
     remaining = K
-    nn = D.argmin(axis=1)
-    nn_dist = D[np.arange(K), nn]
+    nn, nn_dist = work.prepare()
 
     target = 1 if n_clusters is None else max(int(n_clusters), 1)
     while remaining > target:
@@ -102,12 +296,10 @@ def merge_forest(
         # Vectorized Lance-Williams update of distances from merged (i u j);
         # inactive entries hold inf in both rows and stay inf under all
         # three updates.
-        new = lance_williams(D[i], D[j], size[i], size[j], linkage)
+        new = lance_williams(work.row(i), work.row(j), size[i], size[j], linkage)
         new[i] = new[j] = np.inf
-        D[i, :] = new
-        D[:, i] = new
-        D[j, :] = np.inf
-        D[:, j] = np.inf
+        work.write_row(i, new)
+        work.clear_row(j)
         merges.append((min(members[i]), min(members[j]), dmin))
         size[i] += size[j]
         members[i].extend(members[j])
@@ -123,15 +315,13 @@ def merge_forest(
         touched = active & ((nn == i) | (nn == j))
         touched[i] = False
         for k in np.where(touched)[0]:
-            nn[k] = D[k].argmin()
-            nn_dist[k] = D[k, nn[k]]
+            nn[k], nn_dist[k] = work.argmin_row(k)
         others = active & ~touched
         others[i] = False
         better = others & ((new < nn_dist) | ((new == nn_dist) & (i < nn)))
         nn[better] = i
         nn_dist[better] = new[better]
-        nn[i] = D[i].argmin()
-        nn_dist[i] = D[i, nn[i]]
+        nn[i], nn_dist[i] = work.argmin_row(i)
 
     return active, members, merges
 
@@ -151,35 +341,55 @@ def labels_from_members(
     return labels
 
 
-def cluster_distance_matrix(
-    A: np.ndarray, groups: list[list[int]], linkage: str = "average"
+def cluster_distances_from_rows(
+    gather, groups: list[list[int]], linkage: str = "average"
 ) -> np.ndarray:
-    """Cluster-cluster distances from leaf distances, by direct aggregation.
+    """Cluster-cluster distances from a *row gather*, never a full matrix.
 
     For the three supported linkages the cluster distance is a plain
     reduction over leaf pairs (mean / max / min), so it can be computed
-    directly from the leaf matrix instead of replaying Lance-Williams merge
-    by merge — the engine uses this to seed a continuation run on a small
-    active forest.  ``A`` is (K, K) leaf distances; ``groups[i]`` the leaf
-    ids of cluster i.  Returns (C, C) float64 with an inf diagonal.
+    from leaf rows instead of replaying Lance-Williams merge by merge — the
+    engine uses this to seed a continuation run on a small active forest.
+    ``gather(idx)`` must return the ``(len(idx), K)`` float64 leaf-distance
+    rows (e.g. :meth:`CondensedDistances.gather_rows`); rows are requested
+    in blocks of at most ``ROW_BLOCK``, so peak transient memory is
+    ``(ROW_BLOCK, K)`` float64 regardless of group sizes — no (K, K)
+    materialization.  The two-stage reduction (columnwise fold over each
+    group's rows, then a fold over the partner group's columns) is
+    tier-independent: any gather source holding the same values produces a
+    bitwise-identical result.  Returns (C, C) float64 with an inf diagonal.
     """
-    A = np.asarray(A, dtype=np.float64)
     C = len(groups)
+    cols = [np.asarray(g, dtype=np.int64) for g in groups]
+    sizes = np.array([g.size for g in cols], dtype=np.float64)
     out = np.empty((C, C), dtype=np.float64)
-    if linkage == "average":
-        T = np.zeros((A.shape[0], C), dtype=np.float64)
-        for c, g in enumerate(groups):
-            T[g, c] = 1.0
-        counts = np.array([len(g) for g in groups], dtype=np.float64)
-        out = (T.T @ A @ T) / np.outer(counts, counts)
-    else:
-        reduce = np.min if linkage == "single" else np.max
-        for a in range(C):
-            rows = A[groups[a]]
-            for b in range(a + 1, C):
-                out[a, b] = out[b, a] = reduce(rows[:, groups[b]])
+    for a in range(C):
+        # (K,) columnwise fold of group a's leaf rows
+        col = blocked_column_fold(gather, cols[a], linkage)
+        for b in range(a + 1, C):
+            sub = col[cols[b]]
+            if linkage == "average":
+                val = sub.sum() / (sizes[a] * sizes[b])
+            elif linkage == "single":
+                val = sub.min()
+            else:
+                val = sub.max()
+            out[a, b] = out[b, a] = val
     np.fill_diagonal(out, np.inf)
     return out
+
+
+def cluster_distance_matrix(
+    A: np.ndarray, groups: list[list[int]], linkage: str = "average"
+) -> np.ndarray:
+    """Cluster-cluster distances from a dense leaf matrix ``A`` (K, K).
+
+    Thin adapter over :func:`cluster_distances_from_rows` — identical
+    blocked arithmetic, so a dense matrix and a condensed store holding the
+    same values produce bitwise-identical results.
+    """
+    A = np.asarray(A, dtype=np.float64)
+    return cluster_distances_from_rows(lambda idx: A[idx], groups, linkage)
 
 
 def hierarchical_clustering(

@@ -45,6 +45,14 @@ class PACFLConfig:
     # backend's tuned default (blocked: 64 eq3 / 96 eq2; sharded: 64;
     # pallas kernel tile: 8).
     proximity_block: Optional[int] = None
+    # Distance-store memory policy (repro.core.engine.memory.MemoryPolicy):
+    # "auto" | "dense" | "banded" | "condensed_only".  All modes produce
+    # bitwise-identical cluster labels; they trade server cache memory
+    # against steady-state admission latency ("auto" picks per current K
+    # from memory_budget_bytes, default 256 MiB).
+    memory: str = "auto"
+    memory_budget_bytes: Optional[int] = None
+    memory_band_rows: int = 512
 
 
 def engine_config(config: PACFLConfig) -> EngineConfig:
@@ -56,6 +64,9 @@ def engine_config(config: PACFLConfig) -> EngineConfig:
         linkage=config.linkage,
         backend=config.proximity_backend,
         block_size=config.proximity_block,
+        memory=config.memory,
+        memory_budget_bytes=config.memory_budget_bytes,
+        band_rows=config.memory_band_rows,
     )
 
 

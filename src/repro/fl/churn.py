@@ -82,6 +82,20 @@ class DrainPolicy:
     The policy itself is a pure function of ``(c0, c1)`` — deterministic and
     serializable; :meth:`measure` fits the two constants from a seeded
     timing probe against a signature stack.
+
+    Parameters
+    ----------
+    dispatch_cost_us: fixed admission dispatch cost ``c0``, microseconds.
+    per_newcomer_us: marginal per-newcomer cost ``c1``, microseconds.
+    target_overhead: max amortized dispatch-overhead fraction ``rho`` in
+        (0, 1] (default 0.25 — at most a quarter of admission time spent
+        on fixed dispatch).
+    max_batch: hard cap on the admission batch size (default 64).
+
+    Parity guarantee: batch size affects latency only — the engine's
+    labels are a pure function of the distance store, so any batching of
+    the same arrival order reproduces the synchronous schedule's labels
+    bitwise (gated in CI via ``benchmarks/proximity_scale.py --quick``).
     """
 
     dispatch_cost_us: float

@@ -599,6 +599,12 @@ class PACFL(Strategy):
     the condensed distance store, newcomers cost only their signature upload
     plus the (M, B) cross block, and surviving clients keep their stable
     cluster ids — cluster models persist across churn.
+
+    Server memory at scale is governed by ``cfg.pacfl.memory`` /
+    ``memory_budget_bytes`` (the engine's tiered distance-store policy:
+    dense mirror, banded hot-row window, or condensed-only — see
+    ``docs/ENGINE.md``); every tier yields bitwise-identical cluster
+    labels, so the knob never changes training behavior.
     """
 
     name = "pacfl"

@@ -1,0 +1,68 @@
+"""Docs integrity: every cross-reference in README/docs resolves.
+
+Two checks keep the documentation from rotting silently (wired into CI via
+the tier-1 suite):
+
+* every relative markdown link ``[text](target)`` in ``README.md`` and
+  ``docs/*.md`` points at a file (or file#anchor) that exists,
+* every repo path named in backticks in the docs (``src/...``,
+  ``tests/...``, ``benchmarks/...``, ``examples/...``, ``docs/...``)
+  exists on disk.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DOC_FILES = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+# [text](target) markdown links, ignoring images and external URLs
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+# `backtick` repo paths with at least one slash
+_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs)/[A-Za-z0-9_./-]+)`"
+)
+
+
+def _strip_anchor(target: str) -> str:
+    return target.split("#", 1)[0]
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: str(p.relative_to(ROOT)))
+def test_markdown_links_resolve(doc):
+    assert doc.exists(), f"{doc} listed but missing"
+    text = doc.read_text()
+    bad = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        rel = _strip_anchor(target)
+        if not rel:  # pure #anchor link within the same file
+            continue
+        if not (doc.parent / rel).exists():
+            bad.append(target)
+    assert not bad, f"{doc.name}: broken relative links: {bad}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: str(p.relative_to(ROOT)))
+def test_named_repo_paths_exist(doc):
+    text = doc.read_text()
+    bad = []
+    for m in _PATH.finditer(text):
+        path = m.group(1).rstrip("/")
+        if not (ROOT / path).exists():
+            bad.append(m.group(1))
+    assert not bad, f"{doc.name}: paths named in docs but missing: {bad}"
+
+
+def test_docs_pages_exist_and_are_linked_from_readme():
+    """README must link into docs/ (ARCHITECTURE, ENGINE, BENCHMARKS)."""
+    for page in ("ARCHITECTURE.md", "ENGINE.md", "BENCHMARKS.md"):
+        assert (ROOT / "docs" / page).exists(), f"docs/{page} missing"
+    readme = (ROOT / "README.md").read_text()
+    links = {_strip_anchor(m.group(1)) for m in _LINK.finditer(readme)}
+    for page in ("ARCHITECTURE.md", "ENGINE.md", "BENCHMARKS.md"):
+        assert f"docs/{page}" in links, f"README does not link docs/{page}"

@@ -1,0 +1,402 @@
+"""Tiered distance-store memory policy tests.
+
+* unit tests: MemoryPolicy tier resolution / band sizing, BandedRowCache
+  LRU semantics, gather_rows value parity across tiers, fork independence,
+* cross-tier bitwise parity: interleaved admit/depart sequences produce
+  identical stable labels, canonical labels and merge scripts under
+  ``dense`` / ``banded`` / ``condensed_only`` / ``auto`` (randomized and
+  adversarial tie-grid inputs),
+* the K=4096 acceptance regression: bootstrap + replay + depart under the
+  ``banded`` and ``condensed_only`` tiers never materialize a (K, K)
+  float64 (or any dense (K, K) view at all), while still reproducing the
+  dense tier's labels bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import clustered_signatures
+from repro.core.engine import (
+    BandedRowCache,
+    ClusterEngine,
+    CondensedDistances,
+    EngineConfig,
+    MemoryPolicy,
+    replay,
+)
+from repro.core.hc import CondensedWorkingMatrix, hierarchical_clustering
+
+KEY = jax.random.PRNGKey(0)
+MODES = ("dense", "banded", "condensed_only", "auto")
+
+
+def random_distances(rng, K, grid=False):
+    X = (
+        rng.integers(1, 16, size=(K, K)).astype(np.float64)
+        if grid
+        else rng.random((K, K)) * 30
+    )
+    A = (X + X.T) / 2
+    np.fill_diagonal(A, 0)
+    return A
+
+
+def canon(labels):
+    seen = {}
+    return np.array([seen.setdefault(int(x), len(seen)) for x in labels])
+
+
+# ---------------------------------------------------------------------------
+# Policy + cache units
+# ---------------------------------------------------------------------------
+
+
+class TestMemoryPolicy:
+    def test_fixed_modes_resolve_to_themselves(self):
+        for mode in ("dense", "banded", "condensed_only"):
+            assert MemoryPolicy(mode=mode).resolve(10**6) == mode
+
+    def test_auto_tiers_by_budget(self):
+        # 4 KB budget: dense up to n=32 (4n^2 <= 4096), then banded while a
+        # 4-row band fits (16n <= 4096 -> n <= 256), then condensed_only
+        pol = MemoryPolicy(mode="auto", byte_budget=4096, band_rows=4)
+        assert pol.resolve(32) == "dense"
+        assert pol.resolve(33) == "banded"
+        assert pol.resolve(256) == "banded"
+        assert pol.resolve(257) == "condensed_only"
+
+    def test_band_window_clamps_and_grows_with_locality(self):
+        pol = MemoryPolicy(mode="auto", byte_budget=4 * 64 * 1000, band_rows=8)
+        assert pol.band_window(1000) == 8
+        assert pol.band_window(1000, hot_rows=20) == 40       # 2x headroom
+        assert pol.band_window(1000, hot_rows=10**6) == 64    # budget cap
+        assert pol.band_window(4, hot_rows=10**6) == 4        # n cap
+
+    def test_invalid_mode_rejected(self):
+        with pytest.raises(ValueError):
+            MemoryPolicy(mode="mmap")
+
+    def test_explicit_banded_honors_requested_window(self):
+        """The byte budget is an auto-mode knob: explicit banded mode must
+        not silently clamp a user-requested window against it."""
+        pol = MemoryPolicy(mode="banded", byte_budget=4096, band_rows=64)
+        assert pol.band_window(1000) == 64
+        assert pol.band_window(32) == 32  # still clamped to n
+
+    def test_auto_demotion_drops_band_on_append(self):
+        """An auto policy crossing out of the banded tier at the new K must
+        drop the band (gather would never read it again) instead of
+        memcpy-extending a dead buffer past the budget every admission."""
+        rng = np.random.default_rng(12)
+        K = 24
+        A = random_distances(rng, K).astype(np.float32)
+        # a 2-row band costs 8n bytes: budget 160 -> banded up to n=20
+        # (dense needs 4n^2 <= 160 -> n <= 6), condensed_only beyond
+        pol = MemoryPolicy(mode="auto", byte_budget=160, band_rows=2)
+        st = CondensedDistances.from_dense(A[: K - 4, : K - 4], policy=pol)
+        assert st.memory.tier(st.n) == "banded"
+        st.gather_rows(np.array([1, 3]))
+        assert st.memory.band is not None
+        st.append_block(A[: K - 4, K - 4 :], A[K - 4 :, K - 4 :])
+        assert st.memory.tier(st.n) == "condensed_only"
+        assert st.memory.band is None
+
+
+class TestBandedRowCache:
+    def _store(self, K=19, seed=0):
+        rng = np.random.default_rng(seed)
+        A = random_distances(rng, K).astype(np.float32)
+        return CondensedDistances.from_dense(A), A
+
+    def test_gather_matches_store_rows(self):
+        st, A = self._store()
+        band = BandedRowCache(st.n, window=4)
+        idx = np.array([3, 7, 11, 3])
+        got = band.gather(st, idx)
+        np.testing.assert_array_equal(got, A[idx].astype(np.float64))
+        # second gather is served from the band, bitwise identical
+        again = band.gather(st, idx)
+        np.testing.assert_array_equal(again, got)
+        assert band.hits > 0
+
+    def test_lru_eviction_keeps_hot_rows(self):
+        st, _ = self._store()
+        band = BandedRowCache(st.n, window=3)
+        band.gather(st, np.array([0, 1, 2]))
+        band.gather(st, np.array([0]))          # promote row 0
+        band.gather(st, np.array([5, 6]))       # evicts rows 1, 2 (LRU)
+        assert band.resident == 3
+        h0 = band.hits
+        band.gather(st, np.array([0]))
+        assert band.hits == h0 + 1              # row 0 survived the evictions
+
+    def test_promote_false_reads_through(self):
+        st, _ = self._store()
+        band = BandedRowCache(st.n, window=4)
+        band.gather(st, np.arange(10), promote=False)
+        assert band.resident == 0
+
+    def test_extend_keeps_cached_rows_correct(self):
+        rng = np.random.default_rng(3)
+        K, M = 17, 12
+        A = random_distances(rng, K).astype(np.float32)
+        st = CondensedDistances.from_dense(
+            A[:M, :M], policy=MemoryPolicy(mode="banded", band_rows=6)
+        )
+        st.gather_rows(np.array([1, 4, 9]))  # warm three rows
+        st.append_block(A[:M, M:], A[M:, M:])
+        # cached seen rows gained their cross entries; newcomer rows were
+        # pre-seeded — everything bitwise vs the full matrix
+        got = st.gather_rows(np.arange(K))
+        np.testing.assert_array_equal(got, A.astype(np.float64))
+        assert st.memory.band.n == K
+
+    def test_regrow_keeps_resident_rows_warm(self):
+        st, A = self._store(K=19)
+        band = BandedRowCache(st.n, window=2)
+        band.gather(st, np.array([4, 9]))
+        band.regrow(5)
+        assert band.window == 5 and band.resident == 2
+        h0 = band.hits
+        got = band.gather(st, np.array([4, 9]))  # still served from the band
+        assert band.hits == h0 + 2
+        np.testing.assert_array_equal(got, A[[4, 9]].astype(np.float64))
+        band.gather(st, np.array([0, 1, 2]))     # room for 3 more, no evict
+        assert band.resident == 5
+
+    def test_auto_regrow_preserves_band_across_ops(self):
+        """Auto-mode locality growth must enlarge the band in place, not
+        drop the rows an admission just extended and seeded."""
+        rng = np.random.default_rng(21)
+        A = random_distances(rng, 40).astype(np.float32)
+        pol = MemoryPolicy(mode="auto", byte_budget=4 * 40 * 40 - 1, band_rows=2)
+        st = CondensedDistances.from_dense(A, policy=pol)
+        assert st.memory.tier(st.n) == "banded"
+        st.gather_rows(np.arange(8))             # locality 8 >> window 2
+        resident_before = st.memory.band.resident
+        st.memory.begin_op(st)                   # next op: window regrows
+        band = st.memory.band
+        assert band is not None and band.window >= 8
+        assert band.resident == resident_before  # warm rows survived
+
+    def test_fork_isolation(self):
+        st, A = self._store(K=10)
+        st.memory.policy = MemoryPolicy(mode="banded", band_rows=4)
+        st.gather_rows(np.array([2, 5]))
+        fork = st.copy()
+        fork.append_block(
+            np.full((10, 2), 9.0, np.float32), np.zeros((2, 2), np.float32)
+        )
+        assert fork.n == 12 and st.n == 10
+        np.testing.assert_array_equal(
+            st.gather_rows(np.array([2, 5])), A[[2, 5]].astype(np.float64)
+        )
+
+
+class TestGatherRowsTiers:
+    def test_all_tiers_return_identical_rows(self):
+        rng = np.random.default_rng(7)
+        A = random_distances(rng, 33).astype(np.float32)
+        idx = np.array([0, 32, 17, 4])
+        ref = A[idx].astype(np.float64)
+        for mode in MODES:
+            st = CondensedDistances.from_dense(
+                A, policy=MemoryPolicy(mode=mode, band_rows=8)
+            )
+            np.testing.assert_array_equal(st.gather_rows(idx), ref)
+
+    def test_dense_tier_densifies_past_threshold(self):
+        rng = np.random.default_rng(8)
+        A = random_distances(rng, 40).astype(np.float32)
+        st = CondensedDistances.from_dense(A, policy=MemoryPolicy(mode="dense"))
+        st.gather_rows(np.array([1]))
+        assert not st.has_dense_cache          # 1 row: stays strided
+        st.gather_rows(np.arange(20))          # 21 rows * 8 > 40: densify
+        assert st.has_dense_cache
+
+    def test_condensed_only_never_retains(self):
+        rng = np.random.default_rng(9)
+        A = random_distances(rng, 40).astype(np.float32)
+        st = CondensedDistances.from_dense(
+            A, policy=MemoryPolicy(mode="condensed_only")
+        )
+        st.gather_rows(np.arange(40))
+        assert not st.has_dense_cache
+        assert st.memory.band is None
+        assert not st.cache_enabled
+
+
+class TestCondensedWorkingMatrix:
+    def test_rows_and_writes_match_dense(self):
+        rng = np.random.default_rng(5)
+        A = random_distances(rng, 21)
+        st = CondensedDistances.from_dense(A.astype(np.float32))
+        w = CondensedWorkingMatrix(st.values, st.n)
+        D = st.dense(np.float64)
+        np.fill_diagonal(D, np.inf)
+        for i in (0, 10, 20):
+            np.testing.assert_array_equal(w.row(i), D[i])
+        nn, nnd = w.prepare()
+        np.testing.assert_array_equal(nn, D.argmin(axis=1))
+        np.testing.assert_array_equal(nnd, D[np.arange(21), nn])
+        vec = rng.random(21) * 5
+        vec[3] = np.inf
+        w.write_row(3, vec)
+        D[3, :] = vec
+        D[:, 3] = vec
+        np.fill_diagonal(D, np.inf)
+        w.clear_row(7)
+        D[7, :] = np.inf
+        D[:, 7] = np.inf
+        for i in range(21):
+            np.testing.assert_array_equal(w.row(i), D[i])
+
+
+# ---------------------------------------------------------------------------
+# Cross-tier bitwise parity
+# ---------------------------------------------------------------------------
+
+
+def _engine_cfg(mode, linkage, crit):
+    return EngineConfig(
+        linkage=linkage, memory=mode, band_rows=16, **crit
+    )
+
+
+class TestCrossTierParity:
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    @pytest.mark.parametrize("mode", ["beta", "n_clusters"])
+    def test_interleaved_admit_depart_bitwise(self, linkage, mode):
+        """Every memory tier reproduces the dense tier's stable labels,
+        canonical labels AND merge script bitwise across an interleaved
+        admit/depart sequence (band_rows=16 forces LRU eviction)."""
+        key = jax.random.PRNGKey(5)
+        U = clustered_signatures(key, 40, n_bases=5, spread=0.2)
+        crit = {"beta": 25.0} if mode == "beta" else {"n_clusters": 4}
+        states = {}
+        for policy in MODES:
+            eng = ClusterEngine.from_signatures(
+                U, _engine_cfg(policy, linkage, crit)
+            )
+            rng = np.random.default_rng(13)
+            snaps = []
+            for step in range(6):
+                if eng.n_clients > 8 and rng.random() < 0.5:
+                    eng.depart(rng.choice(eng.ids, size=3, replace=False))
+                else:
+                    eng.admit(clustered_signatures(
+                        jax.random.fold_in(key, 60 + step), 4,
+                        n_bases=4, spread=0.3,
+                    ))
+                snaps.append((
+                    eng.labels.copy(), eng.canonical_labels.copy(),
+                    [tuple(m) for m in eng._script],
+                ))
+            states[policy] = snaps
+        ref = states["dense"]
+        for policy in MODES[1:]:
+            for (s1, c1, sc1), (s2, c2, sc2) in zip(ref, states[policy]):
+                np.testing.assert_array_equal(s1, s2)
+                np.testing.assert_array_equal(c1, c2)
+                assert sc1 == sc2
+
+    @pytest.mark.parametrize("linkage", ["average", "single", "complete"])
+    def test_tie_heavy_grids_bitwise_and_oracle(self, linkage):
+        """Integer-grid distances (maximal ties): every tier matches the
+        dense tier bitwise and the from-scratch oracle up to relabeling."""
+        rng = np.random.default_rng(29)
+        for mode_kw in ({"beta": 7.0}, {"n_clusters": 2}):
+            for _ in range(10):
+                K = int(rng.integers(7, 14))
+                A = random_distances(rng, K, grid=True)
+                M = K - int(rng.integers(1, 4))
+                results = {}
+                for policy in MODES:
+                    cfg = _engine_cfg(policy, linkage, mode_kw)
+                    eng = ClusterEngine.from_proximity(
+                        A[:M, :M], jnp.zeros((M, 2, 1)), cfg
+                    )
+                    eng.store.append_block(A[:M, M:], A[M:, M:])
+                    canonical, script, _ = replay(
+                        eng.store, eng._script,
+                        [[M + t] for t in range(K - M)],
+                        linkage=linkage, **mode_kw,
+                    )
+                    results[policy] = (canonical, script)
+                ref_c, ref_s = results["dense"]
+                for policy in MODES[1:]:
+                    np.testing.assert_array_equal(results[policy][0], ref_c)
+                    assert results[policy][1] == ref_s
+                oracle = hierarchical_clustering(
+                    A.astype(np.float32).astype(np.float64),
+                    linkage=linkage, **mode_kw,
+                )
+                assert (canon(oracle) == canon(ref_c)).all()
+
+
+# ---------------------------------------------------------------------------
+# K=4096 acceptance: no (K, K) materialization outside the dense tier
+# ---------------------------------------------------------------------------
+
+
+class TestNoDenseMaterializationAtScale:
+    K = 4096
+    B = 24
+
+    @classmethod
+    def _problem(cls):
+        rng = np.random.default_rng(41)
+        A = random_distances(rng, cls.K).astype(np.float32)
+        off = A[A > 0]
+        beta = float(np.quantile(off, 0.15))
+        return A, beta
+
+    def _run(self, A, beta, mode, forbid_dense, monkeypatch):
+        K, B, M = self.K, self.B, self.K - self.B
+        cfg = EngineConfig(beta=beta, memory=mode, band_rows=256)
+        if forbid_dense:
+            def _boom(self, *a, **kw):
+                raise AssertionError(
+                    "dense (K, K) view materialized under a dense-free tier"
+                )
+            monkeypatch.setattr(CondensedDistances, "dense", _boom)
+            monkeypatch.setattr(CondensedDistances, "dense_ro", _boom)
+        eng = ClusterEngine.from_proximity(A[:M, :M], jnp.zeros((M, 2, 1)), cfg)
+        eng.store.append_block(A[:M, M:], A[M:, M:])
+        canonical, script, _ = replay(
+            eng.store, eng._script, [[M + t] for t in range(B)], beta=beta
+        )
+        eng._canonical = canonical
+        eng._stable = canonical.copy()
+        eng._script = script
+        eng.ids = np.arange(K, dtype=np.int64)
+        eng._next_id = K
+        eng.U = jnp.zeros((K, 2, 1))
+        dep = eng.depart(np.arange(100, 140))
+        return canonical, script, dep.canonical, eng
+
+    @pytest.mark.parametrize("mode", ["banded", "condensed_only"])
+    def test_k4096_bootstrap_replay_depart_without_kk(self, mode, monkeypatch):
+        """Acceptance: bootstrap + replay + depart at K=4096 under the
+        dense-free tiers never build a (K, K) float64 — the dense view
+        constructors are forbidden outright, the strided working set is the
+        condensed float64 vector (half a dense float64), and every gather
+        stays <= (ROW_BLOCK, K) float64 — while labels and scripts stay
+        bitwise identical to the dense tier."""
+        A, beta = self._problem()
+        c_ref, s_ref, d_ref, _ = self._run(A, beta, "dense", False, monkeypatch)
+        canonical, script, dep_c, eng = self._run(
+            A, beta, mode, True, monkeypatch
+        )
+        np.testing.assert_array_equal(canonical, c_ref)
+        assert script == s_ref
+        np.testing.assert_array_equal(dep_c, d_ref)
+        stats = eng.store.memory.stats
+        # largest single gather: at most (ROW_BLOCK, K) float64, far
+        # below the 4 * K^2 bytes of even a float32 (K, K)
+        assert stats.peak_gather_bytes <= 300 * self.K * 8
+        assert stats.peak_gather_bytes < 4 * self.K * self.K
+        if mode == "banded":
+            band = eng.store.memory.band
+            assert band is not None and band.nbytes <= 257 * self.K * 4
