@@ -30,13 +30,25 @@ and band hit rates, and asserting cross-policy label parity (bitwise).
 ``memory_parity`` is the in-process cross-tier bitwise gate (admit +
 depart under every tier) that ``--quick`` runs in CI.
 
+A ``family_parity`` section gates the pluggable signature families
+(repro.core.signatures): the registry-dispatched ``svd`` family must be
+bitwise-identical — signatures, cluster labels and dendrogram merge script
+— to an inline replica of the pre-refactor bucketed loop, and
+``weight_delta`` / ``inference`` run end-to-end through the unchanged
+engine with their canonical-label CRCs recorded.  A ``streaming_bootstrap``
+section times the condensed bootstrap's cache-blocked nearest-neighbor
+pass against the strided row-gather path it replaced (bitwise-gated).
+
 Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
 
 ``--quick`` is the CI parity smoke: K=128 only, every backend and eq2
 solver against the dense reference, the 4-device label check at K=128, the
 engine-vs-full-re-cluster streaming parity check, the queue-drain parity
-check, and the cross-tier memory-policy parity check; no json rewrite,
-nonzero exit on any parity failure.
+check, the signature-family gates, the bootstrap-prepare bitwise check,
+and the cross-tier memory-policy parity check; nonzero exit on any parity
+failure.  ``--quick`` does not rerun the expensive sweeps: it merges only
+its own ``family_parity`` / ``streaming_bootstrap`` sections into an
+existing BENCH_proximity_scale.json (no other fields are touched).
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
 
 Every field of the emitted json is documented in ``docs/BENCHMARKS.md``.
@@ -542,6 +554,183 @@ def _memory_parity_rows(record, rows):
     return ok
 
 
+def _family_parity_rows(record, rows):
+    """Signature-family gates (always run, --quick included).
+
+    1. svd family bitwise parity: the registry-dispatched
+       ``compute_signatures`` against an inline replica of the
+       pre-refactor bucketed/batched loop — signature stack, cluster
+       labels AND the engine's dendrogram merge script must all match
+       exactly (the tentpole's "same engine, unchanged svd path" claim).
+    2. Cross-family smoke: ``weight_delta`` and ``inference`` run
+       end-to-end on a small labeled federation through the SAME
+       family-agnostic engine; canonical-label CRCs are recorded so a
+       behavioral drift in either extractor shows up as a changed CRC in
+       the json history.
+    """
+    import zlib
+
+    from repro.core.pacfl import (
+        PACFLConfig, cluster_clients, compute_signatures,
+    )
+    from repro.core.signatures.svd import SIG_BATCH_MAX
+    from repro.core.svd import batched_client_signatures, bucket_samples
+
+    # -- 1: svd bitwise gate on ragged clients ----------------------------
+    cfg = PACFLConfig(p=3, measure="eq2", beta=45.0)
+    key = jax.random.PRNGKey(11)
+    rng = np.random.default_rng(5)
+    mats = [
+        jnp.asarray(rng.normal(size=(32, m)).astype(np.float32))
+        for m in rng.integers(12, 180, size=48)
+    ]
+
+    def inline_svd():  # the pre-registry compute_signatures loop, verbatim
+        K, n = len(mats), int(mats[0].shape[0])
+        buckets: dict[int, list[int]] = {}
+        for k, D in enumerate(mats):
+            buckets.setdefault(bucket_samples(int(D.shape[1])), []).append(k)
+        U = np.zeros((K, n, cfg.p), dtype=np.float32)
+        for mb, idxs in sorted(buckets.items()):
+            for lo in range(0, len(idxs), SIG_BATCH_MAX):
+                chunk = idxs[lo : lo + SIG_BATCH_MAX]
+                D_stack = jnp.stack([
+                    jnp.pad(
+                        jnp.asarray(mats[k], dtype=jnp.float32),
+                        ((0, 0), (0, mb - mats[k].shape[1])),
+                    )
+                    for k in chunk
+                ])
+                keys = jnp.stack([jax.random.fold_in(key, k) for k in chunk])
+                sigs = batched_client_signatures(
+                    D_stack, keys, cfg.p, cfg.svd_method
+                )
+                U[np.asarray(chunk)] = np.asarray(sigs)
+        return jnp.asarray(U)
+
+    U_ref = inline_svd()
+    U_fam = compute_signatures(mats, cfg, key=key)
+    sig_bitwise = bool((np.asarray(U_ref) == np.asarray(U_fam)).all())
+    clu_ref = cluster_clients(U_ref, cfg)
+    clu_fam = cluster_clients(U_fam, cfg)
+    labels_bitwise = bool(
+        np.array_equal(clu_ref.labels, clu_fam.labels)
+        and np.array_equal(
+            clu_ref.engine.canonical_labels, clu_fam.engine.canonical_labels
+        )
+    )
+    script_bitwise = clu_ref.engine._script == clu_fam.engine._script
+    svd_ok = sig_bitwise and labels_bitwise and script_bitwise
+    record["family_parity"] = {
+        "svd": {
+            "K": len(mats),
+            "signatures_bitwise": sig_bitwise,
+            "labels_bitwise": labels_bitwise,
+            "merge_script_bitwise": script_bitwise,
+        },
+        "families": [],
+    }
+    rows.append((
+        "proximity_scale/family_svd_parity", None,
+        f"signatures={sig_bitwise} labels={labels_bitwise} "
+        f"script={script_bitwise}",
+    ))
+
+    # -- 2: cross-family end-to-end CRCs ----------------------------------
+    from repro.data.synthetic import make_dataset
+    from repro.fl.partition import label_skew
+
+    ds = make_dataset("cifar10s", n_train=360, n_test=60, dim=32, seed=2)
+    clients = label_skew(ds, n_clients=12, rho=0.2, seed=2, test_per_client=10)
+    fam_cfgs = {
+        "svd": PACFLConfig(p=3, measure="eq2", beta=45.0),
+        "weight_delta": PACFLConfig(
+            p=3, measure="eq2", family="weight_delta", beta_quantile=0.15,
+            family_params={"segments": 3, "steps": 4, "sketch_dim": 64},
+        ),
+        "inference": PACFLConfig(
+            p=3, measure="eq2", family="inference", beta_quantile=0.15,
+            family_params={"probe_per_dataset": 16, "steps": 4},
+        ),
+    }
+    fam_ok = True
+    for fam, fcfg in fam_cfgs.items():
+        payloads = (
+            [jnp.asarray(c.x_train.T) for c in clients]
+            if fam == "svd" else clients
+        )
+        clu = cluster_clients(
+            compute_signatures(payloads, fcfg, key=jax.random.PRNGKey(3)),
+            fcfg,
+        )
+        canon = np.asarray(clu.engine.canonical_labels, dtype=np.int64)
+        crc = int(zlib.crc32(np.ascontiguousarray(canon).tobytes()))
+        n_sig = tuple(int(s) for s in clu.U.shape[1:])
+        ok = clu.n_clusters >= 1 and clu.labels.size == len(clients)
+        fam_ok &= ok
+        record["family_parity"]["families"].append({
+            "family": fam,
+            "K": len(clients),
+            "sig_shape": n_sig,
+            "n_clusters": int(clu.n_clusters),
+            "labels_crc": crc,
+            "signature_bytes": int(clu.signature_bytes),
+        })
+        rows.append((
+            f"proximity_scale/family_{fam}", None,
+            f"clusters={clu.n_clusters} sig={n_sig} crc={crc:#010x}",
+        ))
+    return svd_ok and fam_ok
+
+
+def _streaming_bootstrap_rows(record, rows, quick=True):
+    """Carried speed item (b): the condensed bootstrap's initial
+    nearest-neighbor pass — cache-blocked column-segment layout
+    (``CondensedWorkingMatrix.prepare``) vs the strided row-gather path it
+    replaced (``prepare_rowgather``), bitwise-gated."""
+    import time as _time
+
+    from repro.core.hc import CondensedWorkingMatrix
+
+    Ks = (1024,) if quick else (1024, 4096, 8192)
+    iters = 3 if quick else 5
+    record["streaming_bootstrap"] = []
+    ok = True
+    rng = np.random.default_rng(0)
+    for K in Ks:
+        v = rng.random(K * (K - 1) // 2)
+        w = CondensedWorkingMatrix(v, K)
+        t_blk, t_row = [], []
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            nn_b, nnd_b = w.prepare()
+            t_blk.append((_time.perf_counter() - t0) * 1e6)
+            t0 = _time.perf_counter()
+            nn_r, nnd_r = w.prepare_rowgather()
+            t_row.append((_time.perf_counter() - t0) * 1e6)
+        bitwise = bool(
+            np.array_equal(nn_b, nn_r) and np.array_equal(nnd_b, nnd_r)
+        )
+        ok &= bitwise
+        us_b = sorted(t_blk)[iters // 2]
+        us_r = sorted(t_row)[iters // 2]
+        entry = {
+            "K": K,
+            "us_prepare_blocked": us_b,
+            "us_prepare_rowgather": us_r,
+            "speedup": us_r / us_b,
+            "bitwise": bitwise,
+        }
+        record["streaming_bootstrap"].append(entry)
+        rows.append((
+            f"proximity_scale/bootstrap_prepare_K{K}",
+            us_b,
+            f"rowgather={us_r:.0f}us speedup={us_r / us_b:.1f}x "
+            f"bitwise={bitwise}",
+        ))
+    return ok
+
+
 def _queue_parity_rows(record, rows):
     """Async churn queue smoke: draining a ChurnQueue (policy-sized
     admission batches) reproduces the labels of the equivalent synchronous
@@ -708,6 +897,9 @@ def run(quick: bool = True, parity_only: bool = False):
 
     queue_ok = _queue_parity_rows(record, rows)
 
+    family_ok = _family_parity_rows(record, rows)
+    bootstrap_ok = _streaming_bootstrap_rows(record, rows, quick=quick or parity_only)
+
     memory_ok = _memory_parity_rows(record, rows)
     if not parity_only:
         # full-scale tier sweep (peak RSS + admission time per policy),
@@ -719,7 +911,7 @@ def run(quick: bool = True, parity_only: bool = False):
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
-    ) and streaming_ok and queue_ok and memory_ok
+    ) and streaming_ok and queue_ok and memory_ok and family_ok and bootstrap_ok
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -739,12 +931,28 @@ def run(quick: bool = True, parity_only: bool = False):
     assert memory_ok, (
         "memory-policy tiers diverged from the dense tier's labels"
     )
+    assert family_ok, (
+        "signature-family gate failed: svd family diverged from the "
+        "pre-refactor inline path, or a family run produced no clustering"
+    )
+    assert bootstrap_ok, (
+        "cache-blocked condensed bootstrap diverged from the row-gather path"
+    )
     assert parity_ok, "sharded engine diverged from the blocked backend"
 
+    out = ROOT / "BENCH_proximity_scale.json"
     if not parity_only:
-        out = ROOT / "BENCH_proximity_scale.json"
         out.write_text(json.dumps(record, indent=2))
         rows.append(("proximity_scale/json", None, str(out)))
+    elif out.exists():
+        # --quick reruns only the cheap gates; merge their sections into the
+        # existing full-sweep json instead of discarding the expensive
+        # measurements (documented in docs/BENCHMARKS.md)
+        existing = json.loads(out.read_text())
+        existing["family_parity"] = record["family_parity"]
+        existing["streaming_bootstrap"] = record["streaming_bootstrap"]
+        out.write_text(json.dumps(existing, indent=2))
+        rows.append(("proximity_scale/json_merged", None, str(out)))
     return rows
 
 

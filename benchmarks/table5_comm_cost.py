@@ -36,4 +36,19 @@ def run(quick=True):
         if p and i:
             rows.append((f"table5/{tag}/pacfl_cheaper_than_ifca", None,
                          str(p["comm_mb"] < i["comm_mb"])))
+        # per-family pacfl comm rows (opt-in reruns from --family <f>):
+        # one-shot upload cost comes from the family's own accounting
+        # (signature_mb covers probe/sketch-sized uplinks uniformly).
+        for fam in ("weight_delta", "inference"):
+            fdata = load_fl(f"{tag}__{fam}")
+            if fdata is None or "pacfl" not in fdata:
+                continue
+            rec = fdata["pacfl"]
+            hit = next((h for h in rec["history"] if h["acc"] >= target), None)
+            cost = (f"target{target}:round={hit['rnd']},mb={hit['comm_mb']:.2f}"
+                    if hit else f"target{target}:--")
+            rows.append((f"table5/{tag}/pacfl[{fam}]", None, cost))
+            if "signature_mb" in rec:
+                rows.append((f"table5/{tag}/pacfl[{fam}]_signature_mb", None,
+                             f"{rec['signature_mb']:.4f}"))
     return rows

@@ -25,13 +25,37 @@ def _rows_from(tag, label):
     return rows
 
 
+def _family_rows(tag, label):
+    """Per-family pacfl accuracy rows (run_fl_suite.py --family <f> output).
+
+    Missing families are silently skipped — they are opt-in reruns, not part
+    of the default svd suite.
+    """
+    rows = []
+    for fam in ("weight_delta", "inference"):
+        data = load_fl(f"{tag}__{fam}")
+        if data is None or "pacfl" not in data:
+            continue
+        rec = data["pacfl"]
+        rows.append((f"{label}/pacfl[{fam}]", None,
+                     f"{rec['mean']:.4f}±{rec['std']:.4f}"))
+        if "n_clusters" in rec:
+            rows.append((f"{label}/pacfl[{fam}]_clusters", None,
+                         str(rec["n_clusters"])))
+    return rows
+
+
 def run(quick=True):
     rows = []
     for ds in ("fmnists", "cifar10s", "cifar100s", "svhns"):
         rows += _rows_from(f"table2_label20_{ds}", f"table2/{ds}")
+        rows += _family_rows(f"table2_label20_{ds}", f"table2/{ds}")
     for ds in ("cifar10s", "svhns"):
         rows += _rows_from(f"table7_label30_{ds}", f"table7/{ds}")
+        rows += _family_rows(f"table7_label30_{ds}", f"table7/{ds}")
     for ds in ("fmnists", "cifar10s", "cifar100s"):
         rows += _rows_from(f"table8_dir01_{ds}", f"table8/{ds}")
+        rows += _family_rows(f"table8_dir01_{ds}", f"table8/{ds}")
     rows += _rows_from("table3_mix4", "table3/mix4")
+    rows += _family_rows("table3_mix4", "table3/mix4")
     return rows

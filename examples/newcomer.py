@@ -6,7 +6,9 @@ The last section routes the same changes through the async churn queue
 (eager signatures at enqueue, policy-sized admission batches at drain).
 
 Run: PYTHONPATH=src python examples/newcomer.py
+(set REPRO_EXAMPLE_QUICK=1 to shrink the federation for smoke tests)
 """
+import os
 import sys
 from pathlib import Path
 
@@ -19,14 +21,18 @@ from repro.data import make_dataset
 from repro.fl import FLConfig, mix_datasets, run_federation
 from repro.models.cnn import init_mlp_clf, mlp_clf_apply
 
-DIM = 256
-dss = [make_dataset(n, n_train=1500, n_test=500, dim=DIM)
+QUICK = bool(os.environ.get("REPRO_EXAMPLE_QUICK"))
+DIM = 64 if QUICK else 256
+dss = [make_dataset(n, n_train=300 if QUICK else 1500,
+                    n_test=120 if QUICK else 500, dim=DIM)
        for n in ("cifar10s", "fmnists")]
-clients = mix_datasets(dss, [8, 8], samples_per_client=250)
+clients = mix_datasets(dss, [8, 8], samples_per_client=60 if QUICK else 250)
 seen, newcomers = clients[:-3], clients[-3:]          # 3 fmnists newcomers
 
-init_fn = lambda key: init_mlp_clf(key, DIM, 20, hidden=(128, 64))
-cfg = FLConfig(rounds=8, sample_frac=0.25, local_epochs=3, batch_size=20,
+init_fn = lambda key: init_mlp_clf(
+    key, DIM, 20, hidden=(32,) if QUICK else (128, 64))
+cfg = FLConfig(rounds=2 if QUICK else 8, sample_frac=0.25,
+               local_epochs=1 if QUICK else 3, batch_size=20,
                lr=0.05, pacfl=PACFLConfig(p=3, beta=50.0, measure="eq2"))
 res = run_federation("pacfl", seen, mlp_clf_apply, init_fn, cfg, seed=0)
 strat = res.strategy_obj

@@ -6,9 +6,20 @@ Writes one JSON per experiment under experiments/fl/.  Scaled protocol
 momentum 0.5 — the paper's LeNet/200-round protocol shrunk to a 1-core CPU
 budget while keeping the partition protocols exact.
 
+``--family`` selects the PACFL signature family (repro.core.signatures):
+``svd`` (default) runs the full strategy suite on the paper's raw-data
+signatures; ``weight_delta`` / ``inference`` rerun the pacfl rows only,
+under family-suffixed tags (``<tag>__<family>``), resolving the HC
+threshold from the proximity quantile (``beta_quantile``) since model-based
+distance scales differ from raw-data angles.  Every family also runs an
+async-churn experiment — joins AND leaves mid-federation through the eager
+signature queue — so admissions are exercised end-to-end per family.
+
 Run:  PYTHONPATH=src python experiments/run_fl_suite.py [--quick]
+          [--family {svd,weight_delta,inference}]
 """
 import argparse
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -21,6 +32,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.core.pacfl import PACFLConfig
 from repro.data import make_dataset
 from repro.fl import FLConfig, dirichlet_skew, label_skew, mix_datasets, run_federation
+from repro.fl.trainer import ChurnEvent
 from repro.models.cnn import init_mlp_clf, mlp_clf_apply
 
 OUT = Path(__file__).resolve().parent / "fl"
@@ -30,10 +42,32 @@ DIM = 256
 HID = (128, 64)
 STRATS = ["solo", "fedavg", "fedprox", "fednova", "scaffold",
           "lg", "perfedavg", "ifca", "cfl", "pacfl"]
+FAMILIES = ("svd", "weight_delta", "inference")
 
 # eq3/beta chosen via the Fig-2 sweep (benchmarks/fig2_beta_sweep.py)
 PACFL_LS = PACFLConfig(p=3, beta=175.0, measure="eq3")
 PACFL_MIX = PACFLConfig(p=3, beta=50.0, measure="eq2")
+
+# Family-specific warmup hyperparameters for the model-based extractors.
+FAMILY_PARAMS = {
+    "weight_delta": {"segments": 4, "steps": 8, "sketch_dim": 256},
+    "inference": {"probe_per_dataset": 48, "steps": 16},
+}
+
+
+def fam_pacfl(pacfl: PACFLConfig, family: str) -> PACFLConfig:
+    """The suite's PACFL config re-targeted at a signature family.
+
+    Non-svd families swap the absolute beta for a proximity-quantile
+    threshold (their distance scales are not degrees between raw-data
+    subspaces) and pick up the family's warmup knobs.
+    """
+    if family == "svd":
+        return pacfl
+    return dataclasses.replace(
+        pacfl, family=family, beta_quantile=0.1,
+        family_params=dict(FAMILY_PARAMS[family]),
+    )
 
 
 def fl_cfg(rounds, pacfl):
@@ -42,7 +76,7 @@ def fl_cfg(rounds, pacfl):
                     ifca_clusters=2)
 
 
-def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,)):
+def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,), churn=None):
     path = OUT / f"{tag}.json"
     if path.exists():
         print(f"skip {tag} (exists)")
@@ -54,7 +88,7 @@ def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,)):
             init_fn = lambda key: init_mlp_clf(key, DIM, n_classes, hidden=HID)
             t0 = time.time()
             r = run_federation(name, clients, mlp_clf_apply, init_fn, cfg,
-                               seed=seed, eval_every=5)
+                               seed=seed, eval_every=5, churn=churn)
             accs.append(r.final_mean)
             rounds_hist = [
                 {"rnd": rec.rnd, "acc": rec.mean_acc,
@@ -63,8 +97,12 @@ def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,)):
             ]
             extra = {}
             if name == "pacfl":
-                extra["n_clusters"] = int(r.strategy_obj.clustering.n_clusters)
-                extra["signature_mb"] = r.strategy_obj.clustering.signature_bytes / 1e6
+                strat = r.strategy_obj
+                extra["family"] = cfg.pacfl.family
+                extra["n_clusters"] = int(strat.clustering.n_clusters)
+                extra["signature_mb"] = strat.clustering.signature_bytes / 1e6
+                if churn is not None:
+                    extra["final_clients"] = int(strat.data.n_clients)
             print(f"  [{tag}] {name} seed{seed}: {r.final_mean:.4f} "
                   f"({time.time()-t0:.0f}s) {extra}")
         results[name] = {
@@ -79,11 +117,20 @@ def _run(tag, strategies, clients, n_classes, cfg, seeds=(0,)):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--family", choices=FAMILIES, default="svd",
+                    help="PACFL signature family; non-svd reruns pacfl rows "
+                         "only, under <tag>__<family> output tags")
     args = ap.parse_args()
     R = 12 if args.quick else 40
     N_CLIENTS = 20 if args.quick else 100
     NTR = 1500 if args.quick else 4000
     seeds = (0,) if args.quick else (0, 1)
+    fam = args.family
+    # svd reproduces the paper tables against every baseline; the other
+    # families only change the pacfl row, so rerunning baselines would be
+    # wasted compute — their tags carry a __<family> suffix instead.
+    strats = STRATS if fam == "svd" else ["pacfl"]
+    sfx = "" if fam == "svd" else f"__{fam}"
 
     t0 = time.time()
     dss = {
@@ -95,23 +142,24 @@ def main():
     for dname in ("fmnists", "cifar10s", "cifar100s", "svhns"):
         ds = dss[dname]
         clients = label_skew(ds, N_CLIENTS, rho=0.2, seed=0, test_per_client=100)
-        _run(f"table2_label20_{dname}", STRATS, clients, ds.n_classes,
-             fl_cfg(R, PACFL_LS), seeds=seeds)
+        _run(f"table2_label20_{dname}{sfx}", strats, clients, ds.n_classes,
+             fl_cfg(R, fam_pacfl(PACFL_LS, fam)), seeds=seeds)
 
     # ---- Table 7: label skew 30% (2 datasets at this budget) ----------------
     for dname in ("cifar10s", "svhns"):
         ds = dss[dname]
         clients = label_skew(ds, N_CLIENTS, rho=0.3, seed=0, test_per_client=100)
-        _run(f"table7_label30_{dname}", STRATS, clients, ds.n_classes,
-             fl_cfg(R, PACFL_LS), seeds=(0,))
+        _run(f"table7_label30_{dname}{sfx}", strats, clients, ds.n_classes,
+             fl_cfg(R, fam_pacfl(PACFL_LS, fam)), seeds=(0,))
 
     # ---- Table 8: Dirichlet(0.1) --------------------------------------------
     for dname in ("fmnists", "cifar10s", "cifar100s"):
         ds = dss[dname]
         clients = dirichlet_skew(ds, N_CLIENTS, alpha=0.1, seed=0, test_per_client=100)
-        _run(f"table8_dir01_{dname}",
-             STRATS, clients, ds.n_classes,
-             fl_cfg(R, PACFLConfig(p=5, beta=175.0, measure="eq3")), seeds=(0,))
+        _run(f"table8_dir01_{dname}{sfx}",
+             strats, clients, ds.n_classes,
+             fl_cfg(R, fam_pacfl(PACFLConfig(p=5, beta=175.0, measure="eq3"), fam)),
+             seeds=(0,))
 
     # ---- Table 3: MIX-4 ------------------------------------------------------
     mix_counts = [6, 5, 5, 4] if args.quick else [31, 25, 27, 14]
@@ -119,7 +167,24 @@ def main():
         [dss[n] for n in ("cifar10s", "svhns", "fmnists", "uspss")],
         mix_counts, samples_per_client=500 if not args.quick else 150, seed=0,
     )
-    _run("table3_mix4", STRATS, clients, 40, fl_cfg(R, PACFL_MIX), seeds=seeds)
+    _run(f"table3_mix4{sfx}", strats, clients, 40,
+         fl_cfg(R, fam_pacfl(PACFL_MIX, fam)), seeds=seeds)
+
+    # ---- Async churn: joins + leaves through the eager signature queue ------
+    # Every family must admit newcomers mid-federation through the same
+    # engine; holding out clients and churning them in exercises the whole
+    # path (enqueue-time signatures, depart-then-admit, model-stack growth).
+    ds = dss["cifar10s"]
+    churn_clients = label_skew(ds, N_CLIENTS, rho=0.2, seed=1, test_per_client=100)
+    n_late = max(2, N_CLIENTS // 10)
+    base, late = churn_clients[:-n_late], churn_clients[-n_late:]
+    half = len(late) // 2
+    churn = [
+        ChurnEvent(rnd=max(1, R // 3), join=late[:half], leave=[0]),
+        ChurnEvent(rnd=max(2, 2 * R // 3), join=late[half:], leave=[1]),
+    ]
+    _run(f"churn_label20_cifar10s{sfx}", ["pacfl"], base, ds.n_classes,
+         fl_cfg(R, fam_pacfl(PACFL_LS, fam)), seeds=(0,), churn=churn)
 
     print(f"suite done in {(time.time()-t0)/60:.1f} min")
 

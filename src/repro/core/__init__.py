@@ -33,6 +33,14 @@ from repro.core.pme import (
     extend_proximity_matrix,
     remap_onto_old_ids,
 )
+from repro.core.signatures import (
+    FamilyContext,
+    SignatureFamily,
+    family_names,
+    get_family,
+    payloads_from_stacked,
+    register_family,
+)
 from repro.core.svd import (
     batched_client_signatures,
     bucket_samples,
@@ -68,6 +76,12 @@ __all__ = [
     "assign_newcomers",
     "extend_proximity_matrix",
     "remap_onto_old_ids",
+    "FamilyContext",
+    "SignatureFamily",
+    "family_names",
+    "get_family",
+    "payloads_from_stacked",
+    "register_family",
     "batched_client_signatures",
     "bucket_samples",
     "client_signature",

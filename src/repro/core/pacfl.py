@@ -9,10 +9,18 @@ Separates the paper's two concerns:
   ``extend`` for newcomers per Algorithms 2-3, ``depart`` for churn).
 * **Per-cluster federated optimization** — ``repro.fl.trainer`` runs the round
   loop with the ``pacfl`` strategy, which consumes :class:`PACFLClustering`.
+
+The client-side signature extractor is pluggable
+(:mod:`repro.core.signatures`): ``PACFLConfig.family`` picks the
+:class:`~repro.core.signatures.SignatureFamily` — the paper's raw-data
+``svd`` (default), FedClust-style ``weight_delta``, or FLIS-style
+``inference`` — and everything from :func:`cluster_clients` down is
+family-agnostic.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -20,12 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import ClusterEngine, EngineConfig, MembershipSnapshot
-from repro.core.svd import batched_client_signatures, bucket_samples
-
-
-# Max clients per vmapped signature batch: bounds peak host memory of the
-# padded (B, N, M_bucket) stack while leaving the compile count O(#buckets).
-SIG_BATCH_MAX = 64
+from repro.core.signatures import FamilyContext, get_family
+from repro.core.signatures.svd import SIG_BATCH_MAX  # noqa: F401  (back-compat re-export)
 
 
 @dataclass
@@ -36,6 +40,17 @@ class PACFLConfig:
     linkage: str = "average"
     svd_method: str = "exact"      # "exact" | "randomized" | "randomized_tsgemm"
     n_clusters: Optional[int] = None  # fixed cluster count overrides beta when set
+    # Signature family (repro.core.signatures): "svd" | "weight_delta" |
+    # "inference".  Extra per-family hyperparameters (warmup steps, sketch
+    # dim, probe size, ...) ride in family_params.
+    family: str = "svd"
+    family_params: dict = field(default_factory=dict)
+    # Resolve beta from the observed off-diagonal proximity quantile at
+    # cluster time instead of the absolute value above.  Model-based
+    # families live on different distance scales than raw-data angles, so a
+    # quantile threshold transfers across families where a degree value
+    # does not.  Ignored when n_clusters is set.
+    beta_quantile: Optional[float] = None
     # Proximity backend dispatch (see repro.core.angles.proximity_matrix):
     # "auto" | "jnp" | "jnp_blocked" | "jnp_sharded" | "pallas".
     # "jnp_sharded" splits row strips of the (K, K) computation across all
@@ -125,7 +140,7 @@ class PACFLClustering:
         """
         eng = self.engine.copy()
         eng.admit(U_new)
-        extra_bytes = int(U_new.size * U_new.dtype.itemsize)
+        extra_bytes = get_family(self.config.family).upload_bytes(U_new)
         return PACFLClustering(
             config=self.config,
             engine=eng,
@@ -147,63 +162,25 @@ class PACFLClustering:
 
 
 def compute_signatures(
-    client_data: list[jnp.ndarray],
+    client_data: list,
     config: PACFLConfig,
     *,
     key: Optional[jax.Array] = None,
+    context: Optional[FamilyContext] = None,
 ) -> jnp.ndarray:
-    """Client-side one-shot phase: stacked ``U_p`` over clients.
+    """Client-side one-shot phase: stacked per-client bases over clients.
 
-    ``client_data[k]`` is the data matrix ``D_k`` (N features x M_k samples).
-    Clients may own different numbers of samples; signatures all have shape
-    (N, p).
-
-    Ragged clients are grouped into shape buckets (sample counts rounded up
-    to the next power of two, padded with zero columns — zero columns don't
-    change the left singular basis) and each bucket runs one vmapped
-    truncated-SVD batch.  Compile count is O(#buckets), not O(K); the
-    regression test in ``tests/test_recompilation.py`` locks this in via the
-    trace counter in ``repro.core.svd``.
+    Dispatches to the :class:`~repro.core.signatures.SignatureFamily` named
+    by ``config.family``.  For the default ``svd`` family ``client_data[k]``
+    is the data matrix ``D_k`` (N features x M_k samples) — the bucketed
+    batched path in :mod:`repro.core.signatures.svd`, bitwise-identical to
+    the pre-registry inline implementation.  Model-based families
+    (``weight_delta``, ``inference``) take payloads with
+    ``.x_train``/``.y_train`` and read the shared model off ``context``.
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    K = len(client_data)
-    if K == 0:
-        raise ValueError("compute_signatures needs at least one client")
-    n = int(client_data[0].shape[0])
-
-    buckets: dict[int, list[int]] = {}
-    for k, D in enumerate(client_data):
-        if D.ndim != 2 or int(D.shape[0]) != n:
-            raise ValueError(
-                f"client {k}: expected ({n}, M_k) data matrix, got {tuple(D.shape)}"
-            )
-        buckets.setdefault(bucket_samples(int(D.shape[1])), []).append(k)
-
-    # Cap clients per vmapped call so peak memory stays bounded by
-    # SIG_BATCH_MAX padded clients, not a whole bucket's dataset.  Each bucket
-    # costs at most two compiles (full chunks + one remainder), keeping the
-    # total O(#buckets).  Chunk results land in a host-side buffer — a device
-    # scatter per chunk would copy the whole (K, n, p) array each time.
-    U = np.zeros((K, n, config.p), dtype=np.float32)
-    for mb, idxs in sorted(buckets.items()):
-        for lo in range(0, len(idxs), SIG_BATCH_MAX):
-            chunk = idxs[lo : lo + SIG_BATCH_MAX]
-            D_stack = jnp.stack(
-                [
-                    jnp.pad(
-                        jnp.asarray(client_data[k], dtype=jnp.float32),
-                        ((0, 0), (0, mb - client_data[k].shape[1])),
-                    )
-                    for k in chunk
-                ]
-            )
-            keys = jnp.stack([jax.random.fold_in(key, k) for k in chunk])
-            sigs = batched_client_signatures(
-                D_stack, keys, config.p, config.svd_method
-            )
-            U[np.asarray(chunk)] = np.asarray(sigs)
-    return jnp.asarray(U)
+    return get_family(config.family).signatures(
+        client_data, config, key=key, context=context
+    )
 
 
 def cluster_clients(
@@ -213,20 +190,44 @@ def cluster_clients(
 
     Bootstraps a :class:`~repro.core.engine.ClusterEngine` (which caches the
     dendrogram merge script for later streaming ``extend``/``depart``).
+    When ``config.beta_quantile`` is set (and ``n_clusters`` is not), the HC
+    threshold is resolved from the off-diagonal proximity distribution
+    before bootstrapping — the family-portable way to pick beta.
     """
-    engine = ClusterEngine.from_signatures(U_stack, engine_config(config))
-    sig_bytes = int(U_stack.size * U_stack.dtype.itemsize)
+    ecfg = engine_config(config)
+    if config.beta_quantile is not None and config.n_clusters is None:
+        from repro.core.angles import proximity_matrix
+
+        A = np.asarray(
+            proximity_matrix(
+                U_stack,
+                measure=config.measure,
+                backend=config.proximity_backend,
+                block_size=config.proximity_block,
+            )
+        )
+        K = A.shape[0]
+        off = A[~np.eye(K, dtype=bool)]
+        if off.size:
+            ecfg = dataclasses.replace(
+                ecfg, beta=float(np.quantile(off, config.beta_quantile))
+            )
+        engine = ClusterEngine.from_proximity(A, U_stack, ecfg)
+    else:
+        engine = ClusterEngine.from_signatures(U_stack, ecfg)
+    sig_bytes = get_family(config.family).upload_bytes(U_stack)
     return PACFLClustering(
         config=config, engine=engine, signature_bytes=sig_bytes
     )
 
 
 def one_shot_clustering(
-    client_data: list[jnp.ndarray],
+    client_data: list,
     config: PACFLConfig,
     *,
     key: Optional[jax.Array] = None,
+    context: Optional[FamilyContext] = None,
 ) -> PACFLClustering:
     """End-to-end one-shot phase (lines 7-12 of Algorithm 1)."""
-    U = compute_signatures(client_data, config, key=key)
+    U = compute_signatures(client_data, config, key=key, context=context)
     return cluster_clients(U, config)

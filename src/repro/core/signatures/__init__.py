@@ -1,0 +1,34 @@
+"""Pluggable signature families: one engine, many similarity measures.
+
+Importing this package registers the built-in families (``svd``,
+``weight_delta``, ``inference``); resolve one with :func:`get_family` and
+see :mod:`repro.core.signatures.base` for the contract they satisfy.
+"""
+from repro.core.signatures.base import (
+    ClientPayload,
+    FamilyContext,
+    SignatureFamily,
+    client_matrix,
+    family_names,
+    get_family,
+    payloads_from_stacked,
+    register_family,
+)
+from repro.core.signatures.inference import InferenceFamily
+from repro.core.signatures.svd import SIG_BATCH_MAX, SVDFamily
+from repro.core.signatures.weight_delta import WeightDeltaFamily
+
+__all__ = [
+    "ClientPayload",
+    "FamilyContext",
+    "InferenceFamily",
+    "SIG_BATCH_MAX",
+    "SVDFamily",
+    "SignatureFamily",
+    "WeightDeltaFamily",
+    "client_matrix",
+    "family_names",
+    "get_family",
+    "payloads_from_stacked",
+    "register_family",
+]

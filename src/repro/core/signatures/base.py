@@ -1,0 +1,188 @@
+"""Signature-family contract + registry: one engine, many similarity measures.
+
+Everything above the one-shot signature phase — proximity backends, the
+measure core, the streaming :class:`~repro.core.engine.ClusterEngine`, the
+async churn queue — only ever sees a (K, n, p) stack of per-client
+**orthonormal bases** and the distances between them.  A
+:class:`SignatureFamily` is the pluggable client-side extractor that
+produces that stack:
+
+* ``svd`` — the paper's raw-data truncated SVD (:mod:`.svd`): ``n`` is the
+  feature dimension, the basis spans the client's dominant data directions.
+* ``weight_delta`` — FedClust-style model-weight geometry
+  (:mod:`.weight_delta`): ``n`` is a (sketched) parameter dimension, the
+  basis spans the directions a short local-SGD warmup moves the shared
+  init.
+* ``inference`` — FLIS-style inference similarity (:mod:`.inference`):
+  ``n`` is the size of a shared server probe set, the basis spans the
+  client model's prediction profile on it.
+
+The contract every family satisfies:
+
+* :meth:`SignatureFamily.signatures` maps K client payloads to a (K, n, p)
+  float32 stack with orthonormal columns, deterministic in ``(payloads,
+  config, key, context)`` and independent of cluster membership — which is
+  what lets the churn queue compute signatures eagerly at enqueue for any
+  family.
+* :meth:`SignatureFamily.upload_bytes` / :meth:`downlink_bytes` own the
+  family's communication accounting (uplink per signature stack; fixed
+  downlink such as a probe-set broadcast).
+
+Families register under :func:`register_family`; callers resolve them with
+:func:`get_family` via ``PACFLConfig.family``.  Model-based families import
+``repro.fl.client`` lazily inside function bodies — ``repro.fl`` imports
+``repro.core.pacfl`` (and through it this package) at module import time,
+so a module-level import here would cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svd import signature_upload_bytes
+
+
+@dataclass
+class FamilyContext:
+    """Server-side resources a model-based family may need.
+
+    ``apply_fn`` / ``init_fn`` define the shared model the ``weight_delta``
+    and ``inference`` families train their warmups on (the FL strategy
+    passes its own model; core callers may omit them to get a small
+    default MLP).  ``key0`` seeds the shared init theta_0 — every client
+    must warm up from the *same* init or weight deltas are not comparable.
+    ``probe`` overrides the ``inference`` family's server probe set.
+    """
+
+    apply_fn: Optional[Callable] = None
+    init_fn: Optional[Callable] = None
+    key0: Optional[jax.Array] = None
+    probe: Optional[np.ndarray] = None   # (m, d) override for `inference`
+
+    def base_key(self) -> jax.Array:
+        return self.key0 if self.key0 is not None else jax.random.PRNGKey(0)
+
+
+@dataclass
+class ClientPayload:
+    """Minimal family payload: one client's local training split.
+
+    Duck-types the train side of :class:`repro.fl.partition.ClientData`
+    (which is itself a valid payload — the churn queue enqueues those
+    directly).  The ``svd`` family additionally accepts a raw (d, M) data
+    matrix for back-compat with pre-registry callers.
+    """
+
+    x_train: np.ndarray   # (M, d) samples as rows
+    y_train: np.ndarray   # (M,)
+
+
+def payloads_from_stacked(data: Any) -> list[ClientPayload]:
+    """Per-client payloads from a ``repro.fl.client.StackedClients``.
+
+    Slices each client's true (non-cycled) samples back out of the stacked
+    tensors — ``x[k, :n[k]]`` — so family extractors see exactly the local
+    data, never the cycling pad.
+    """
+    return [
+        ClientPayload(
+            x_train=data.x[k, : data.n[k]], y_train=data.y[k, : data.n[k]]
+        )
+        for k in range(data.n_clients)
+    ]
+
+
+def client_matrix(payload: Any) -> jnp.ndarray:
+    """Normalize a payload to the paper's (d features, M samples) matrix."""
+    if hasattr(payload, "x_train"):
+        return jnp.asarray(payload.x_train).T
+    D = jnp.asarray(payload)
+    if D.ndim != 2:
+        raise ValueError(
+            f"payload must be a (d, M) matrix or have .x_train, got "
+            f"shape {tuple(D.shape)}"
+        )
+    return D
+
+
+class SignatureFamily:
+    """Base class: per-client orthonormal (n, p) bases + byte accounting."""
+
+    name = "base"
+    #: whether :meth:`signatures` trains on a shared model (needs a
+    #: :class:`FamilyContext` with ``apply_fn``/``init_fn``, or accepts the
+    #: built-in default model)
+    needs_model = False
+
+    def signatures(
+        self,
+        payloads: list,
+        config,
+        *,
+        key: Optional[jax.Array] = None,
+        context: Optional[FamilyContext] = None,
+    ) -> jnp.ndarray:
+        """(K, n, p) float32 stack of orthonormal client bases."""
+        raise NotImplementedError
+
+    def signature_one(
+        self,
+        payload,
+        config,
+        *,
+        key: Optional[jax.Array] = None,
+        context: Optional[FamilyContext] = None,
+    ) -> jnp.ndarray:
+        """Single-client signature — the churn queue's eager-enqueue hook."""
+        return self.signatures([payload], config, key=key, context=context)[0]
+
+    def prepare_context(
+        self,
+        payloads: list,
+        config,
+        context: Optional[FamilyContext] = None,
+    ) -> FamilyContext:
+        """Resolve server-side resources onto the context before the
+        one-shot phase (e.g. the ``inference`` family builds its probe set
+        here so :meth:`downlink_bytes` can price the broadcast).  The base
+        implementation just materializes an empty context."""
+        del payloads, config
+        return context if context is not None else FamilyContext()
+
+    def upload_bytes(self, U: jnp.ndarray) -> int:
+        """Uplink bytes for a (K, n, p) or (n, p) signature stack."""
+        return signature_upload_bytes(U)
+
+    def downlink_bytes(
+        self, config, context: Optional[FamilyContext], n_clients: int
+    ) -> int:
+        """Fixed server->clients bytes the family needs before signatures
+        can be computed (e.g. the ``inference`` probe broadcast).  Zero for
+        data-local families."""
+        return 0
+
+
+_REGISTRY: dict[str, SignatureFamily] = {}
+
+
+def register_family(family: SignatureFamily) -> SignatureFamily:
+    """Register a family instance under ``family.name`` (latest wins)."""
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> SignatureFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown signature family {name!r}; have {family_names()}"
+        ) from None
+
+
+def family_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

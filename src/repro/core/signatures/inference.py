@@ -1,0 +1,176 @@
+"""The ``inference`` family: FLIS-style inference similarity on a probe set.
+
+FLIS (arXiv:2208.09754) clusters clients by how similarly their locally
+trained models *predict* on a small server-held probe set — no raw data
+leaves the client, and the server needs no per-client model internals,
+only prediction matrices.  Mapped onto the PACFL engine's contract:
+
+1. the server fixes a shared probe set X_probe (m, d) — by default a
+   deterministic draw spanning every synthetic dataset family
+   (``repro.data.synthetic.make_dataset`` over ``DATASET_NAMES``), so
+   probes cover the distributions clients may hold; a
+   :class:`~repro.core.signatures.base.FamilyContext` can override it —
+   and broadcasts it once (:meth:`downlink_bytes`),
+2. every client warms up the common init theta_0 on its own data for a
+   few local-SGD steps (same plumbing as ``weight_delta``),
+3. uploads its softmax prediction matrix P_k = softmax(f(theta_k,
+   X_probe)) — an (m, C) inference profile,
+4. the top-p left singular basis of P_k is the (m, p) orthonormal
+   signature: clients whose models carve the probe set the same way have
+   near-parallel prediction subspaces, clients trained on different label
+   skews diverge.
+
+Everything downstream (proximity backends, engine, churn) is unchanged;
+like ``weight_delta``, distance scales differ from raw-data angles, so
+pair this family with ``PACFLConfig.beta_quantile``.
+
+``family_params`` knobs (defaults): ``probe_per_dataset`` (48 rows drawn
+per synthetic dataset family), ``probe_seed`` (0), ``steps`` (16 warmup
+SGD steps), ``batch_size`` (16), ``lr`` (0.05), ``momentum`` (0.5).
+Requires ``n_classes >= p`` (the prediction matrix has C columns, so its
+left basis has at most C directions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signatures.base import (
+    FamilyContext,
+    SignatureFamily,
+    register_family,
+)
+from repro.core.signatures.warmup import resolve_model, warmup_segments
+from repro.core.svd import truncated_svd
+
+IF_CHUNK = 64
+
+
+def _params(config) -> dict:
+    fp = dict(getattr(config, "family_params", None) or {})
+    return {
+        "probe_per_dataset": int(fp.get("probe_per_dataset", 48)),
+        "probe_seed": int(fp.get("probe_seed", 0)),
+        "steps": int(fp.get("steps", 16)),
+        "batch_size": int(fp.get("batch_size", 16)),
+        "lr": float(fp.get("lr", 0.05)),
+        "momentum": float(fp.get("momentum", 0.5)),
+    }
+
+
+@functools.lru_cache(maxsize=8)
+def _default_probe(dim: int, per_dataset: int, seed: int) -> np.ndarray:
+    """Deterministic (m, d) probe spanning every synthetic dataset family."""
+    from repro.data.synthetic import DATASET_NAMES, make_dataset
+
+    parts = [
+        make_dataset(
+            name, n_train=per_dataset, n_test=8, dim=dim, seed=seed
+        ).x_train
+        for name in DATASET_NAMES
+    ]
+    return np.concatenate(parts, axis=0).astype(np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("apply_fn", "p"))
+def _prediction_bases(apply_fn, params, probe, p):
+    """vmapped softmax-prediction matrices -> top-p left bases (B, m, p)."""
+
+    def one(theta):
+        P = jax.nn.softmax(apply_fn(theta, probe), axis=-1)  # (m, C)
+        return truncated_svd(P, p)
+
+    return jax.vmap(one)(params)
+
+
+class InferenceFamily(SignatureFamily):
+    """Top-p basis of each client's probe-set prediction matrix."""
+
+    name = "inference"
+    needs_model = True
+
+    def probe_for(
+        self, payloads: list, config, context: Optional[FamilyContext]
+    ) -> np.ndarray:
+        if context is not None and context.probe is not None:
+            return np.asarray(context.probe, dtype=np.float32)
+        hp = _params(config)
+        d = int(np.asarray(payloads[0].x_train).shape[1])
+        return _default_probe(d, hp["probe_per_dataset"], hp["probe_seed"])
+
+    def prepare_context(
+        self,
+        payloads: list,
+        config,
+        context: Optional[FamilyContext] = None,
+    ) -> FamilyContext:
+        """Stash the resolved probe so later single-client signature calls
+        (churn enqueues) and downlink accounting agree on one probe set."""
+        ctx = context if context is not None else FamilyContext()
+        if ctx.probe is None:
+            ctx.probe = self.probe_for(payloads, config, ctx)
+        return ctx
+
+    def signatures(
+        self,
+        payloads: list,
+        config,
+        *,
+        key: Optional[jax.Array] = None,
+        context: Optional[FamilyContext] = None,
+    ) -> jnp.ndarray:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if not payloads:
+            raise ValueError("inference needs at least one client")
+        hp = _params(config)
+        apply_fn, init_fn, key0 = resolve_model(context, payloads)
+        probe = jnp.asarray(self.probe_for(payloads, config, context))
+        out: list[np.ndarray] = []
+        for lo in range(0, len(payloads), IF_CHUNK):
+            chunk = payloads[lo : lo + IF_CHUNK]
+            params = None
+            for _, params in warmup_segments(
+                chunk,
+                apply_fn=apply_fn,
+                init_fn=init_fn,
+                key0=key0,
+                key=key,
+                segments=1,
+                steps=hp["steps"],
+                batch_size=hp["batch_size"],
+                lr=hp["lr"],
+                momentum=hp["momentum"],
+                client_offset=lo,
+            ):
+                pass
+            U = _prediction_bases(apply_fn, params, probe, int(config.p))
+            if int(U.shape[-1]) < int(config.p):
+                raise ValueError(
+                    f"inference family needs n_classes >= p: the prediction "
+                    f"matrix has only {U.shape[-1]} columns for p={config.p}"
+                )
+            out.append(np.asarray(U, dtype=np.float32))
+        return jnp.asarray(np.concatenate(out, axis=0))
+
+    def downlink_bytes(
+        self, config, context: Optional[FamilyContext], n_clients: int
+    ) -> int:
+        """Probe broadcast: every client downloads X_probe once.
+
+        The probe's feature dimension comes from client data, so callers
+        that account downlink should stash the resolved probe on
+        ``context.probe`` (``probe_for`` builds it); without one the cost
+        is unknown and reported as 0.
+        """
+        if context is not None and context.probe is not None:
+            probe = np.asarray(context.probe, dtype=np.float32)
+            return int(probe.size * probe.itemsize * n_clients)
+        return 0
+
+
+register_family(InferenceFamily())

@@ -1,0 +1,100 @@
+"""The ``svd`` family: the paper's raw-data truncated-SVD signatures.
+
+This is the bucketed/batched one-shot path that used to live inline in
+``repro.core.pacfl.compute_signatures``, moved here bitwise-unchanged (the
+family-parity gate in ``benchmarks/proximity_scale.py --quick`` pins the
+output, the resulting cluster labels AND the dendrogram merge script
+against an inline replica of the pre-registry loop).  ``repro.core.pacfl``
+re-exports :data:`SIG_BATCH_MAX` and dispatches ``compute_signatures``
+through the registry, so existing callers see no change.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signatures.base import (
+    FamilyContext,
+    SignatureFamily,
+    client_matrix,
+    register_family,
+)
+from repro.core.svd import batched_client_signatures, bucket_samples
+
+# Max clients per vmapped signature batch: bounds peak host memory of the
+# padded (B, N, M_bucket) stack while leaving the compile count O(#buckets).
+SIG_BATCH_MAX = 64
+
+
+class SVDFamily(SignatureFamily):
+    """Top-p left singular basis of each client's raw (d, M) data matrix.
+
+    Ragged clients are grouped into shape buckets (sample counts rounded up
+    to the next power of two, padded with zero columns — zero columns don't
+    change the left singular basis) and each bucket runs one vmapped
+    truncated-SVD batch.  Compile count is O(#buckets), not O(K); the
+    regression tests in ``tests/test_recompilation.py`` lock this in via
+    the trace counter in ``repro.core.svd`` — including through the
+    registry indirection.
+    """
+
+    name = "svd"
+    needs_model = False
+
+    def signatures(
+        self,
+        payloads: list,
+        config,
+        *,
+        key: Optional[jax.Array] = None,
+        context: Optional[FamilyContext] = None,
+    ) -> jnp.ndarray:
+        del context  # data-local: no model, no probe
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        client_data = [client_matrix(p) for p in payloads]
+        K = len(client_data)
+        if K == 0:
+            raise ValueError("compute_signatures needs at least one client")
+        n = int(client_data[0].shape[0])
+
+        buckets: dict[int, list[int]] = {}
+        for k, D in enumerate(client_data):
+            if D.ndim != 2 or int(D.shape[0]) != n:
+                raise ValueError(
+                    f"client {k}: expected ({n}, M_k) data matrix, got "
+                    f"{tuple(D.shape)}"
+                )
+            buckets.setdefault(bucket_samples(int(D.shape[1])), []).append(k)
+
+        # Cap clients per vmapped call so peak memory stays bounded by
+        # SIG_BATCH_MAX padded clients, not a whole bucket's dataset.  Each
+        # bucket costs at most two compiles (full chunks + one remainder),
+        # keeping the total O(#buckets).  Chunk results land in a host-side
+        # buffer — a device scatter per chunk would copy the whole
+        # (K, n, p) array each time.
+        U = np.zeros((K, n, config.p), dtype=np.float32)
+        for mb, idxs in sorted(buckets.items()):
+            for lo in range(0, len(idxs), SIG_BATCH_MAX):
+                chunk = idxs[lo : lo + SIG_BATCH_MAX]
+                D_stack = jnp.stack(
+                    [
+                        jnp.pad(
+                            jnp.asarray(client_data[k], dtype=jnp.float32),
+                            ((0, 0), (0, mb - client_data[k].shape[1])),
+                        )
+                        for k in chunk
+                    ]
+                )
+                keys = jnp.stack([jax.random.fold_in(key, k) for k in chunk])
+                sigs = batched_client_signatures(
+                    D_stack, keys, config.p, config.svd_method
+                )
+                U[np.asarray(chunk)] = np.asarray(sigs)
+        return jnp.asarray(U)
+
+
+register_family(SVDFamily())

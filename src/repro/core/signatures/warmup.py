@@ -1,0 +1,140 @@
+"""Shared local-SGD warmup plumbing for the model-based families.
+
+``weight_delta`` and ``inference`` both need the same thing: every client
+runs a short local-SGD warmup **from a common init** theta_0 on its own
+data, vmapped across clients exactly like the FL round loop
+(``repro.fl.client.make_local_sgd`` over zero-padded stacked tensors).
+This module owns the stacking, the default model fallback, and the
+chunked/jit-cached vmapped segment runner so the two families cannot
+drift.
+
+``repro.fl.client`` is imported lazily inside function bodies:
+``repro.fl`` imports ``repro.core.pacfl`` (and through it this package)
+at module import time, so a module-level import here would cycle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signatures.base import FamilyContext
+from repro.core.svd import bucket_samples
+
+
+def stack_payloads(
+    payloads: list,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Zero-padded (K, n_bucket, d) / (K, n_bucket) / (K,) train tensors.
+
+    Widths are shape-bucketed (next power of two) so a drifting client
+    count reuses compiled warmup updates; zero padding is safe because the
+    local update samples batch indices strictly below the true count
+    ``n[k]`` (same contract as the FL layer's cycling pad).
+    """
+    K = len(payloads)
+    if K == 0:
+        raise ValueError("need at least one client payload")
+    xs = [np.asarray(p.x_train, dtype=np.float32) for p in payloads]
+    ys = [np.asarray(p.y_train, dtype=np.int64) for p in payloads]
+    d = xs[0].shape[1]
+    n = np.array([x.shape[0] for x in xs], dtype=np.int64)
+    n_max = bucket_samples(int(n.max()))
+    x = np.zeros((K, n_max, d), np.float32)
+    y = np.zeros((K, n_max), np.int64)
+    for k in range(K):
+        x[k, : n[k]] = xs[k]
+        y[k, : n[k]] = ys[k]
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(n)
+
+
+def default_model(d_in: int, n_classes: int) -> tuple[Callable, Callable]:
+    """Small MLP fallback for core-level callers without a FamilyContext."""
+    from repro.models.cnn import init_mlp_clf, mlp_clf_apply
+
+    return mlp_clf_apply, functools.partial(
+        init_mlp_clf, d_in=d_in, n_classes=n_classes, hidden=(64,)
+    )
+
+
+def resolve_model(
+    context: Optional[FamilyContext], payloads: list
+) -> tuple[Callable, Callable, jax.Array]:
+    """(apply_fn, init_fn, key0) from the context, with the MLP fallback."""
+    ctx = context or FamilyContext()
+    apply_fn, init_fn = ctx.apply_fn, ctx.init_fn
+    if apply_fn is None or init_fn is None:
+        d = int(np.asarray(payloads[0].x_train).shape[1])
+        n_classes = int(
+            max(int(np.asarray(p.y_train).max(initial=0)) for p in payloads)
+        ) + 1
+        apply_fn, init_fn = default_model(d, max(n_classes, 2))
+    return apply_fn, init_fn, ctx.base_key()
+
+
+@functools.lru_cache(maxsize=32)
+def _vmapped_update(apply_fn, steps, batch_size, lr, momentum):
+    """jit(vmap(local_sgd)) memoized per (model, hyperparam) tuple so
+    repeated family calls (and the churn queue's one-client enqueues)
+    reuse the compiled update."""
+    from repro.fl.client import make_local_sgd
+
+    local = make_local_sgd(
+        apply_fn,
+        steps=steps,
+        batch_size=batch_size,
+        lr=lr,
+        momentum=momentum,
+    )
+    return jax.jit(jax.vmap(local))
+
+
+def warmup_segments(
+    payloads: list,
+    *,
+    apply_fn: Callable,
+    init_fn: Callable,
+    key0: jax.Array,
+    key: jax.Array,
+    segments: int,
+    steps: int,
+    batch_size: int,
+    lr: float,
+    momentum: float = 0.5,
+    client_offset: int = 0,
+):
+    """Run ``segments`` sequential local-SGD segments from theta_0.
+
+    Yields ``(segment_index, params)`` after each segment, where
+    ``params`` is the (K, ...) stacked per-client parameter pytree.  Every
+    client starts from the same theta_0 = init_fn(key0) and follows its
+    own deterministic batch-key stream (``fold_in(key, client)`` then
+    per-segment fold), so signatures are reproducible and
+    membership-independent.  ``client_offset`` keeps key streams aligned
+    when callers chunk their payload list.
+    """
+    x, y, n = stack_payloads(payloads)
+    K = len(payloads)
+    theta0 = init_fn(key0)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (K,) + l.shape), theta0
+    )
+    zeros = jax.tree.map(lambda l: jnp.zeros((K,) + l.shape, l.dtype), theta0)
+    vupdate = _vmapped_update(apply_fn, steps, batch_size, lr, momentum)
+    client_keys = jnp.stack(
+        [jax.random.fold_in(key, client_offset + k) for k in range(K)]
+    )
+    for s in range(segments):
+        seg_keys = jax.vmap(lambda ck: jax.random.fold_in(ck, s))(client_keys)
+        params = vupdate(params, x, y, n, seg_keys, params, zeros)
+        yield s, params
+
+
+def flatten_params(params) -> jnp.ndarray:
+    """(K, n_params) row-stacked flattening of a (K, ...) parameter pytree."""
+    leaves = jax.tree.leaves(params)
+    K = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(K, -1) for l in leaves], axis=1)

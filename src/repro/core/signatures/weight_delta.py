@@ -1,0 +1,135 @@
+"""The ``weight_delta`` family: FedClust-style model-weight geometry.
+
+FedClust (arXiv:2403.04144) clusters clients on the geometry of their
+model-weight updates rather than their raw data — the privacy-constrained
+regime where clients will ship gradients but never samples, and the only
+regime available to LM/SSM/MoE workloads whose "data matrix" is token
+streams.  The extractor here maps that idea onto the PACFL engine's
+orthonormal-basis contract:
+
+1. every client starts from a **common init** theta_0 = init_fn(key0),
+2. runs ``segments`` short local-SGD warmup segments on its own data
+   (vmapped across clients — the same ``repro.fl.client.make_local_sgd``
+   plumbing the round loop uses),
+3. records the flattened delta ``theta_s - theta_0`` after each segment —
+   a (n_params, S) trajectory matrix whose columns are the directions
+   local training pulls the shared model,
+4. optionally sketches the parameter axis down with a shared Gaussian
+   projection (``sketch_dim`` — signatures must be small to upload, and
+   the projection is drawn once from ``key0`` so all clients stay
+   comparable),
+5. takes the top-p left singular basis — a (n, p) orthonormal signature
+   exactly like the ``svd`` family's, so everything downstream (proximity
+   backends, engine, churn queue) is untouched.
+
+Clients with similar label/feature skew drag the shared init in similar
+directions, so principal angles between delta subspaces recover the same
+cluster structure the raw-data angles do — without the server ever seeing
+data.  Distance *scales* differ from the raw-data family, which is what
+``PACFLConfig.beta_quantile`` exists for: resolve the HC threshold from
+the observed proximity distribution instead of a hand-tuned degree value.
+
+``family_params`` knobs (with defaults): ``segments`` (4, floored at
+``p``), ``steps`` (8 SGD steps per segment), ``batch_size`` (16), ``lr``
+(0.05), ``momentum`` (0.5), ``sketch_dim`` (256; 0 disables sketching).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signatures.base import (
+    FamilyContext,
+    SignatureFamily,
+    register_family,
+)
+from repro.core.signatures.warmup import (
+    flatten_params,
+    resolve_model,
+    warmup_segments,
+)
+from repro.core.svd import truncated_svd
+
+# Chunk edge for the vmapped warmup: bounds peak memory at CHUNK stacked
+# model replicas (mirrors the svd family's SIG_BATCH_MAX).
+WD_CHUNK = 64
+
+
+def _params(config) -> dict:
+    fp = dict(getattr(config, "family_params", None) or {})
+    p = int(config.p)
+    return {
+        "segments": max(int(fp.get("segments", 4)), p),
+        "steps": int(fp.get("steps", 8)),
+        "batch_size": int(fp.get("batch_size", 16)),
+        "lr": float(fp.get("lr", 0.05)),
+        "momentum": float(fp.get("momentum", 0.5)),
+        "sketch_dim": int(fp.get("sketch_dim", 256)),
+    }
+
+
+class WeightDeltaFamily(SignatureFamily):
+    """Top-p orthonormal directions of local-update deltas from theta_0."""
+
+    name = "weight_delta"
+    needs_model = True
+
+    def signatures(
+        self,
+        payloads: list,
+        config,
+        *,
+        key: Optional[jax.Array] = None,
+        context: Optional[FamilyContext] = None,
+    ) -> jnp.ndarray:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if not payloads:
+            raise ValueError("weight_delta needs at least one client")
+        hp = _params(config)
+        apply_fn, init_fn, key0 = resolve_model(context, payloads)
+        theta0 = init_fn(key0)
+        flat0 = jnp.concatenate(
+            [l.ravel() for l in jax.tree.leaves(theta0)]
+        )[None, :]  # (1, n_params), broadcasts against (B, n_params)
+        n_params = int(flat0.shape[1])
+        sketch = hp["sketch_dim"]
+        proj = None
+        if 0 < sketch < n_params:
+            # one shared projection, drawn from key0: clients must land in
+            # the same sketched space for angles to mean anything
+            proj = jax.random.normal(
+                jax.random.fold_in(key0, 0x5EED), (n_params, sketch),
+                dtype=jnp.float32,
+            ) / np.sqrt(sketch)
+        out: list[np.ndarray] = []
+        for lo in range(0, len(payloads), WD_CHUNK):
+            chunk = payloads[lo : lo + WD_CHUNK]
+            cols = []
+            for _, params in warmup_segments(
+                chunk,
+                apply_fn=apply_fn,
+                init_fn=init_fn,
+                key0=key0,
+                key=key,
+                segments=hp["segments"],
+                steps=hp["steps"],
+                batch_size=hp["batch_size"],
+                lr=hp["lr"],
+                momentum=hp["momentum"],
+                client_offset=lo,
+            ):
+                delta = flatten_params(params) - flat0   # (B, n_params)
+                if proj is not None:
+                    delta = delta @ proj                 # (B, sketch)
+                cols.append(delta)
+            D = jnp.stack(cols, axis=-1)                 # (B, n, S)
+            U = jax.vmap(lambda Dk: truncated_svd(Dk, config.p))(D)
+            out.append(np.asarray(U, dtype=np.float32))
+        return jnp.asarray(np.concatenate(out, axis=0))
+
+
+register_family(WeightDeltaFamily())

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pacfl import PACFLConfig, cluster_clients, compute_signatures
+from repro.core.signatures import FamilyContext, get_family, payloads_from_stacked
 from repro.fl.client import (
     StackedClients,
     batch_eval,
@@ -614,18 +615,31 @@ class PACFL(Strategy):
         self._build(data)
         self._key = key
         self._sig_seq = 0   # deterministic key stream for eager signatures
-        # One-shot phase: clients compute + upload U_p signatures.  The ragged
-        # (features, samples) matrices go through the shape-bucketed batched
-        # SVD, and the proximity matrix through the backend dispatch selected
-        # by cfg.pacfl.proximity_backend — both scale knobs live on the config.
-        U = compute_signatures(self._client_mats(data), self.cfg.pacfl, key=key)
-        self.clustering = cluster_clients(U, self.cfg.pacfl)
+        # One-shot phase: clients compute + upload their signatures through
+        # the family selected by cfg.pacfl.family (repro.core.signatures).
+        # For the default "svd" family the ragged (features, samples)
+        # matrices go through the shape-bucketed batched SVD; model-based
+        # families warm up this strategy's own model from a shared init.
+        # The proximity matrix goes through the backend dispatch selected by
+        # cfg.pacfl.proximity_backend — all scale knobs live on the config.
+        pcfg = self.cfg.pacfl
+        self._family = get_family(pcfg.family)
+        payloads = self._family_payloads(data)
+        self._fam_ctx = self._family.prepare_context(
+            payloads, pcfg,
+            FamilyContext(apply_fn=self.apply_fn, init_fn=self.init_fn, key0=key),
+        )
+        U = compute_signatures(payloads, pcfg, key=key, context=self._fam_ctx)
+        self.clustering = cluster_clients(U, pcfg)
         self.labels = self.clustering.labels
         Z = self.clustering.n_clusters
         self.cluster_params = jax.vmap(self.init_fn)(
             jnp.broadcast_to(key, (Z,) + key.shape)
         )  # all clusters start from the same theta_g^0 (Algorithm 1 line 12)
         self.comm_up += self.clustering.signature_bytes
+        self.comm_down += self._family.downlink_bytes(
+            pcfg, self._fam_ctx, data.n_clients
+        )
 
     @staticmethod
     def _client_mats(data):
@@ -634,19 +648,34 @@ class PACFL(Strategy):
             jnp.asarray(data.x[k, : data.n[k]].T) for k in range(data.n_clients)
         ]
 
+    def _family_payloads(self, data):
+        """Per-client payloads in the current family's native form.
+
+        The svd family gets the exact (features, samples) matrices the
+        pre-registry path built (bitwise parity is gated in CI); model-based
+        families get (x_train, y_train) payloads sliced from the stack.
+        """
+        if self.cfg.pacfl.family == "svd":
+            return self._client_mats(data)
+        return payloads_from_stacked(data)
+
     def churn_signature_fn(self):
-        """Eager per-client signature for the async queue: the SVD is
-        membership-independent, so it runs at enqueue time and overlaps the
-        in-flight round.  Keys come from a deterministic per-strategy stream
-        (exact SVD ignores them; randomized SVD stays reproducible)."""
+        """Eager per-client signature for the async queue: every family's
+        extractor is membership-independent, so it runs at enqueue time and
+        overlaps the in-flight round.  Keys come from a deterministic
+        per-strategy stream (exact SVD ignores them; randomized SVD and the
+        model-warmup families stay reproducible)."""
 
         def signature(client) -> jnp.ndarray:
             key = jax.random.fold_in(self._key, 1_000_003 + self._sig_seq)
             self._sig_seq += 1
-            U = compute_signatures(
-                [jnp.asarray(client.x_train.T)], self.cfg.pacfl, key=key
+            payload = (
+                jnp.asarray(client.x_train.T)
+                if self.cfg.pacfl.family == "svd" else client
             )
-            return U[0]
+            return self._family.signature_one(
+                payload, self.cfg.pacfl, key=key, context=self._fam_ctx
+            )
 
         return signature
 
@@ -677,13 +706,17 @@ class PACFL(Strategy):
                 # compute from the batch's own join payloads — the stacked
                 # data reflects the whole drain, so its trailing rows are
                 # NOT this batch's newcomers when a drain splits batches
-                mats = [jnp.asarray(c.x_train.T) for c in batch.join]
+                payloads = (
+                    [jnp.asarray(c.x_train.T) for c in batch.join]
+                    if self.cfg.pacfl.family == "svd" else list(batch.join)
+                )
                 U_new = compute_signatures(
-                    mats, self.cfg.pacfl,
+                    payloads, self.cfg.pacfl,
                     key=jax.random.fold_in(self._key, engine.version),
+                    context=self._fam_ctx,
                 )
             engine.admit(U_new)
-            extra = int(U_new.size * U_new.dtype.itemsize)
+            extra = self._family.upload_bytes(U_new)
             self.clustering.signature_bytes += extra
             self.comm_up += extra
         self.labels = engine.labels

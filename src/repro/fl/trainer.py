@@ -8,7 +8,10 @@ Clients may join and leave via the async churn pipeline
 (:mod:`repro.fl.churn`): the declarative ``churn`` schedule of
 :class:`ChurnEvent`s is a thin adapter that *enqueues* joins/departs on a
 :class:`~repro.fl.churn.ChurnQueue` — newcomer signatures are computed
-eagerly at enqueue (overlapping the in-flight round in a real deployment) —
+eagerly at enqueue through the strategy's ``churn_signature_fn`` (the
+active signature family's per-client path, so admissions work for every
+``PACFLConfig.family``, overlapping the in-flight round in a real
+deployment) —
 and the queue drains between rounds into admission batches sized by the
 queue's :class:`~repro.fl.churn.DrainPolicy`.  Strategies that advertise
 ``supports_churn`` absorb each drained :class:`~repro.fl.churn.ChurnBatch`

@@ -1,0 +1,45 @@
+"""Tier-1 smoke: the runnable examples must stay runnable.
+
+Each example executes in a subprocess exactly as the README instructs
+(``PYTHONPATH=src python examples/<name>.py``); the federation-sized
+``newcomer.py`` shrinks itself under ``REPRO_EXAMPLE_QUICK=1``.  The
+examples carry their own assertions (backend agreement, admission
+round-trips, queue-drain bitwise parity), so exit code 0 is a real check,
+not just an import test.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run_example(name: str, extra_env: dict | None = None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.update(extra_env or {})
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / name)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"examples/{name} failed (exit {proc.returncode}):\n"
+        f"--- stdout ---\n{proc.stdout[-3000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-3000:]}"
+    )
+    return proc.stdout
+
+
+def test_quickstart_main_path():
+    out = _run_example("quickstart.py")
+    assert "OK" in out or "cluster" in out.lower()
+
+
+def test_newcomer_main_path_quick_config():
+    out = _run_example("newcomer.py", {"REPRO_EXAMPLE_QUICK": "1"})
+    # the example's own parity assertions all passed if we got here; spot
+    # check that every OK checkpoint was reached
+    assert out.count("OK") >= 3

@@ -252,6 +252,28 @@ class TestCondensedWorkingMatrix:
         for i in range(21):
             np.testing.assert_array_equal(w.row(i), D[i])
 
+    def test_prepare_blocked_bitwise_vs_rowgather_and_dense(self):
+        """The cache-blocked prepare() matches the row-gather path and the
+        dense argmin oracle bitwise — including argmin ties (quantized
+        distances) and sizes straddling the ROW_BLOCK edge."""
+        rng = np.random.default_rng(11)
+        for n in (1, 2, 3, 17, 255, 256, 257, 300):
+            v = np.round(rng.random(n * (n - 1) // 2) * 8) / 8  # many ties
+            w = CondensedWorkingMatrix(v.copy(), n)
+            nn_b, nnd_b = w.prepare()
+            nn_r, nnd_r = CondensedWorkingMatrix(v.copy(), n).prepare_rowgather()
+            D = np.zeros((n, n))
+            for j in range(n):
+                base = j * (j - 1) // 2
+                for i in range(j):
+                    D[i, j] = D[j, i] = v[base + i]
+            np.fill_diagonal(D, np.inf)
+            nn_d = D.argmin(axis=1)
+            np.testing.assert_array_equal(nn_b, nn_d)
+            np.testing.assert_array_equal(nn_b, nn_r)
+            np.testing.assert_array_equal(nnd_b, D[np.arange(n), nn_d])
+            np.testing.assert_array_equal(nnd_b, nnd_r)
+
 
 # ---------------------------------------------------------------------------
 # Cross-tier bitwise parity

@@ -88,6 +88,32 @@ class TestRecompilation:
         assert U.shape[0] == 12
         assert compiles <= n_buckets
 
+    def test_registry_indirection_keeps_bucket_compile_bound(self):
+        """The O(#buckets) invariant must survive the signature-family
+        registry: dispatching through get_family("svd").signatures (what
+        compute_signatures now does) and calling the family object directly
+        must both stay within the bucket bound — and produce the identical
+        stack for the identical key."""
+        from repro.core.signatures import get_family
+
+        data, ms = _ragged_clients(48, lo=20, hi=300, seed=6)
+        n_buckets = len({bucket_samples(int(m)) for m in ms})
+        cfg = PACFLConfig(p=3)
+        key = jax.random.PRNGKey(12)
+
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        U_dispatch = compute_signatures(data, cfg, key=key)
+        compiles = svd.TRACE_COUNTS["batched_client_signatures"] - before
+        assert compiles <= n_buckets
+
+        before = svd.TRACE_COUNTS["batched_client_signatures"]
+        U_family = get_family("svd").signatures(data, cfg, key=key)
+        assert svd.TRACE_COUNTS["batched_client_signatures"] == before, (
+            "direct family call recompiled shapes the dispatcher already "
+            "compiled — the registry indirection broke jit-cache sharing"
+        )
+        np.testing.assert_array_equal(np.asarray(U_dispatch), np.asarray(U_family))
+
     def test_padding_preserves_signature_subspace(self):
         """Zero-padding columns must not move the left singular basis."""
         from repro.core.angles import principal_angles

@@ -1,0 +1,348 @@
+"""Signature-family registry: contract, parity, and FL-layer threading.
+
+The tentpole guarantees: the ``svd`` family is bitwise the pre-refactor
+``compute_signatures`` path; every family emits orthonormal (K, n, p)
+float32 stacks deterministically; byte accounting routes through the
+family; and the FL strategy + async churn queue work for model-based
+families through the same unchanged engine.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pacfl import (
+    PACFLConfig,
+    cluster_clients,
+    compute_signatures,
+    one_shot_clustering,
+)
+from repro.core.signatures import (
+    ClientPayload,
+    FamilyContext,
+    SignatureFamily,
+    client_matrix,
+    family_names,
+    get_family,
+    register_family,
+)
+from repro.core.svd import signature_upload_bytes
+
+
+def _ragged_mats(rng, K=9, n=24):
+    return [
+        jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+        for m in rng.integers(10, 90, size=K)
+    ]
+
+
+def _payloads(rng, K=6, d=16, n_classes=4, m_lo=30, m_hi=60):
+    out = []
+    for _ in range(K):
+        m = int(rng.integers(m_lo, m_hi))
+        out.append(ClientPayload(
+            x_train=rng.normal(size=(m, d)).astype(np.float32),
+            y_train=rng.integers(0, n_classes, size=m).astype(np.int64),
+        ))
+    return out
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert set(family_names()) >= {"svd", "weight_delta", "inference"}
+
+    def test_unknown_family_raises_with_choices(self):
+        with pytest.raises(ValueError, match="unknown signature family"):
+            get_family("nope")
+
+    def test_register_latest_wins(self):
+        class Fake(SignatureFamily):
+            name = "svd"
+
+        orig = get_family("svd")
+        try:
+            register_family(Fake())
+            assert isinstance(get_family("svd"), Fake)
+        finally:
+            register_family(orig)
+        assert get_family("svd") is orig
+
+    def test_config_dispatch(self):
+        with pytest.raises(ValueError, match="unknown signature family"):
+            compute_signatures([], PACFLConfig(family="bogus"))
+
+
+class TestSVDFamily:
+    def test_bitwise_matches_prerefactor_inline_loop(self):
+        """The moved bucketed/batched loop, replicated inline, must produce
+        the identical stack through the registry dispatch."""
+        from repro.core.signatures.svd import SIG_BATCH_MAX
+        from repro.core.svd import batched_client_signatures, bucket_samples
+
+        rng = np.random.default_rng(0)
+        mats = _ragged_mats(rng, K=12)
+        cfg = PACFLConfig(p=3)
+        key = jax.random.PRNGKey(9)
+
+        K, n = len(mats), int(mats[0].shape[0])
+        buckets: dict[int, list[int]] = {}
+        for k, D in enumerate(mats):
+            buckets.setdefault(bucket_samples(int(D.shape[1])), []).append(k)
+        U_ref = np.zeros((K, n, cfg.p), dtype=np.float32)
+        for mb, idxs in sorted(buckets.items()):
+            for lo in range(0, len(idxs), SIG_BATCH_MAX):
+                chunk = idxs[lo : lo + SIG_BATCH_MAX]
+                D_stack = jnp.stack([
+                    jnp.pad(mats[k], ((0, 0), (0, mb - mats[k].shape[1])))
+                    for k in chunk
+                ])
+                keys = jnp.stack([jax.random.fold_in(key, k) for k in chunk])
+                U_ref[np.asarray(chunk)] = np.asarray(
+                    batched_client_signatures(D_stack, keys, cfg.p, cfg.svd_method)
+                )
+
+        U = compute_signatures(mats, cfg, key=key)
+        np.testing.assert_array_equal(np.asarray(U), U_ref)
+
+    def test_payload_and_matrix_forms_agree(self):
+        """A ClientPayload and its transposed raw matrix are the same client."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(40, 16)).astype(np.float32)
+        p1 = ClientPayload(x_train=x, y_train=np.zeros(40, dtype=np.int64))
+        cfg = PACFLConfig(p=2)
+        U_pay = compute_signatures([p1], cfg)
+        U_mat = compute_signatures([jnp.asarray(x.T)], cfg)
+        np.testing.assert_array_equal(np.asarray(U_pay), np.asarray(U_mat))
+
+    def test_client_matrix_rejects_bad_shapes(self):
+        with pytest.raises(ValueError, match="matrix"):
+            client_matrix(np.zeros(5))
+
+    def test_upload_bytes_is_seed_formula(self):
+        U = jnp.zeros((7, 24, 3), dtype=jnp.float32)
+        fam = get_family("svd")
+        assert fam.upload_bytes(U) == int(U.size * U.dtype.itemsize)
+        assert fam.upload_bytes(U) == signature_upload_bytes(U)
+        assert fam.downlink_bytes(PACFLConfig(), None, 7) == 0
+
+
+class TestModelFamilies:
+    @pytest.mark.parametrize("family,params", [
+        ("weight_delta", {"segments": 3, "steps": 2, "sketch_dim": 32}),
+        ("inference", {"probe_per_dataset": 8, "steps": 2}),
+    ])
+    def test_shape_orthonormal_deterministic(self, family, params):
+        rng = np.random.default_rng(2)
+        payloads = _payloads(rng, K=5)
+        cfg = PACFLConfig(p=3, family=family, family_params=params)
+        key = jax.random.PRNGKey(4)
+        U1 = np.asarray(compute_signatures(payloads, cfg, key=key))
+        U2 = np.asarray(compute_signatures(payloads, cfg, key=key))
+        np.testing.assert_array_equal(U1, U2)     # deterministic in inputs
+        assert U1.shape[0] == 5 and U1.shape[2] == 3
+        assert U1.dtype == np.float32
+        G = np.einsum("knp,knq->kpq", U1, U1)
+        np.testing.assert_allclose(
+            G, np.broadcast_to(np.eye(3), G.shape), atol=1e-4
+        )
+
+    def test_weight_delta_sketch_dim_sets_basis_rows(self):
+        rng = np.random.default_rng(3)
+        payloads = _payloads(rng, K=3)
+        cfg = PACFLConfig(
+            p=2, family="weight_delta",
+            family_params={"segments": 2, "steps": 2, "sketch_dim": 24},
+        )
+        U = compute_signatures(payloads, cfg)
+        assert tuple(U.shape) == (3, 24, 2)
+
+    def test_weight_delta_depends_only_on_payload_and_key(self):
+        """Same data + same key -> bitwise-equal basis (what lets the churn
+        queue precompute signatures at enqueue); different labels on the
+        same inputs -> a different basis (the signal the family measures)."""
+        rng = np.random.default_rng(4)
+        d, m = 16, 60
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        mk = lambda lab: ClientPayload(
+            x_train=x.copy(), y_train=np.full(m, lab, dtype=np.int64)
+        )
+        cfg = PACFLConfig(
+            p=2, family="weight_delta",
+            family_params={"segments": 2, "steps": 4, "sketch_dim": 32},
+        )
+        fam = get_family("weight_delta")
+        key = jax.random.PRNGKey(2)
+        Ua = np.asarray(fam.signature_one(mk(0), cfg, key=key))
+        Ua2 = np.asarray(fam.signature_one(mk(0), cfg, key=key))
+        Ub = np.asarray(fam.signature_one(mk(3), cfg, key=key))
+        np.testing.assert_array_equal(Ua, Ua2)
+        assert not np.allclose(Ua, Ub, atol=1e-3)
+
+    def test_inference_signature_rows_match_probe(self):
+        rng = np.random.default_rng(5)
+        payloads = _payloads(rng, K=4, d=16)
+        probe = rng.normal(size=(20, 16)).astype(np.float32)
+        cfg = PACFLConfig(
+            p=3, family="inference", family_params={"steps": 2}
+        )
+        ctx = FamilyContext(probe=probe)
+        U = compute_signatures(payloads, cfg, context=ctx)
+        assert tuple(U.shape) == (4, 20, 3)
+
+    def test_inference_needs_enough_classes(self):
+        rng = np.random.default_rng(6)
+        payloads = _payloads(rng, K=3, n_classes=2)  # default model: C=2
+        cfg = PACFLConfig(
+            p=3, family="inference",
+            family_params={"probe_per_dataset": 8, "steps": 1},
+        )
+        with pytest.raises(ValueError, match="n_classes >= p"):
+            compute_signatures(payloads, cfg)
+
+    def test_inference_prepare_context_stashes_probe_and_prices_downlink(self):
+        rng = np.random.default_rng(7)
+        payloads = _payloads(rng, K=3, d=16)
+        cfg = PACFLConfig(
+            p=2, family="inference",
+            family_params={"probe_per_dataset": 8, "steps": 1},
+        )
+        fam = get_family("inference")
+        assert fam.downlink_bytes(cfg, None, 3) == 0  # unresolved: unknown dim
+        ctx = fam.prepare_context(payloads, cfg, FamilyContext())
+        assert ctx.probe is not None
+        m, d = ctx.probe.shape
+        assert d == 16
+        assert fam.downlink_bytes(cfg, ctx, 3) == m * d * 4 * 3
+
+    def test_signature_one_matches_batch(self):
+        rng = np.random.default_rng(8)
+        payloads = _payloads(rng, K=1)
+        cfg = PACFLConfig(
+            p=2, family="weight_delta",
+            family_params={"segments": 2, "steps": 2, "sketch_dim": 24},
+        )
+        fam = get_family("weight_delta")
+        key = jax.random.PRNGKey(1)
+        one = fam.signature_one(payloads[0], cfg, key=key)
+        batch = fam.signatures(payloads, cfg, key=key)
+        np.testing.assert_array_equal(np.asarray(one), np.asarray(batch[0]))
+
+
+class TestBetaQuantile:
+    def test_quantile_resolves_engine_beta(self):
+        rng = np.random.default_rng(9)
+        U = jnp.asarray(np.linalg.qr(rng.normal(size=(10, 24, 3)))[0])
+        cfg = PACFLConfig(p=3, measure="eq3", beta_quantile=0.5)
+        clu = cluster_clients(U, cfg)
+        A = clu.A
+        off = A[~np.eye(A.shape[0], dtype=bool)]
+        assert clu.engine.config.beta == pytest.approx(
+            float(np.quantile(off, 0.5)), rel=1e-6
+        )
+        assert clu.labels.size == 10
+
+    def test_single_client_guard(self):
+        rng = np.random.default_rng(10)
+        U = jnp.asarray(np.linalg.qr(rng.normal(size=(1, 24, 3)))[0])
+        clu = cluster_clients(U, PACFLConfig(p=3, beta_quantile=0.5))
+        assert clu.n_clusters == 1
+
+    def test_n_clusters_overrides_quantile(self):
+        rng = np.random.default_rng(11)
+        U = jnp.asarray(np.linalg.qr(rng.normal(size=(8, 24, 3)))[0])
+        cfg = PACFLConfig(p=3, n_clusters=4, beta_quantile=0.5)
+        assert cluster_clients(U, cfg).n_clusters == 4
+
+
+class TestFLThreading:
+    """End-to-end: the pacfl strategy + async churn for a model family."""
+
+    def _clients(self, rng, K, d=12, n_classes=4):
+        from repro.fl.partition import ClientData
+
+        out = []
+        for k in range(K):
+            m = int(rng.integers(40, 70))
+            lab = k % n_classes  # hard label skew -> real cluster structure
+            out.append(ClientData(
+                x_train=rng.normal(size=(m, d)).astype(np.float32) + lab,
+                y_train=np.full(m, lab, dtype=np.int64),
+                x_test=rng.normal(size=(10, d)).astype(np.float32) + lab,
+                y_test=np.full(10, lab, dtype=np.int64),
+                dataset_name="synthetic",
+            ))
+        return out
+
+    def test_weight_delta_federation_with_churn(self):
+        from repro.fl.trainer import ChurnEvent, run_federation
+        from repro.fl.strategies import FLConfig
+        from repro.models.cnn import init_mlp_clf, mlp_clf_apply
+
+        rng = np.random.default_rng(12)
+        clients = self._clients(rng, K=7)
+        base, late = clients[:6], clients[6:]
+        cfg = FLConfig(
+            rounds=3, sample_frac=0.5, local_epochs=1, batch_size=16,
+            pacfl=PACFLConfig(
+                p=2, family="weight_delta", beta_quantile=0.3,
+                family_params={"segments": 2, "steps": 2, "sketch_dim": 24},
+            ),
+        )
+        init_fn = functools.partial(
+            init_mlp_clf, d_in=12, n_classes=4, hidden=(16,)
+        )
+        res = run_federation(
+            "pacfl", base, mlp_clf_apply, init_fn, cfg, seed=0, eval_every=3,
+            churn=[ChurnEvent(rnd=1, join=late, leave=[0])],
+        )
+        strat = res.strategy_obj
+        assert strat.data.n_clients == 6          # 6 - 1 + 1
+        assert strat.labels.size == 6
+        # signature bytes: initial K * n * p * 4 plus the churn admit,
+        # all routed through the family's upload accounting
+        n_rows = strat.clustering.U.shape[1]
+        assert strat.clustering.signature_bytes == (6 + 1) * n_rows * 2 * 4
+
+    def test_svd_strategy_unchanged_by_registry(self):
+        """The default-family strategy still satisfies the seed's byte
+        invariant and produces identical signatures to a direct call."""
+        from repro.fl.client import stack_clients
+        from repro.fl.strategies import STRATEGIES, FLConfig
+        from repro.models.cnn import init_mlp_clf, mlp_clf_apply
+
+        rng = np.random.default_rng(13)
+        clients = self._clients(rng, K=5)
+        data = stack_clients(clients)
+        cfg = FLConfig(rounds=1, pacfl=PACFLConfig(p=2, beta=30.0))
+        init_fn = functools.partial(
+            init_mlp_clf, d_in=12, n_classes=4, hidden=(16,)
+        )
+        strat = STRATEGIES["pacfl"](mlp_clf_apply, init_fn, cfg)
+        key = jax.random.PRNGKey(0)
+        strat.setup(key, data)
+        U_direct = compute_signatures(
+            [jnp.asarray(data.x[k, : data.n[k]].T) for k in range(5)],
+            cfg.pacfl, key=key,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(strat.clustering.U), np.asarray(U_direct)
+        )
+        assert strat.clustering.signature_bytes == 5 * 12 * 2 * 4
+
+
+class TestOneShotContext:
+    def test_one_shot_clustering_threads_context(self):
+        rng = np.random.default_rng(14)
+        payloads = _payloads(rng, K=4, d=16)
+        probe = rng.normal(size=(12, 16)).astype(np.float32)
+        cfg = PACFLConfig(
+            p=2, family="inference", beta_quantile=0.4,
+            family_params={"steps": 1},
+        )
+        clu = one_shot_clustering(
+            payloads, cfg, context=FamilyContext(probe=probe)
+        )
+        assert tuple(clu.U.shape) == (4, 12, 2)
+        assert clu.signature_bytes == 4 * 12 * 2 * 4
