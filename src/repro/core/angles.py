@@ -360,6 +360,10 @@ def cross_proximity(
     ``jnp_sharded`` backend shards the U_a row-strip axis across local
     devices (U_b replicated).  The pallas backend is square-only, so it
     falls back to the blocked path here.
+
+    Parity guarantee: entries are bitwise the matching off-diagonal block of
+    :func:`proximity_matrix` over the concatenated stack (same measure and
+    float32 Gram pipeline), independent of backend and block size.
     """
     if measure not in ("eq2", "eq3"):
         raise ValueError(f"unknown measure: {measure!r}")

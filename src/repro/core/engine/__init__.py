@@ -1,4 +1,5 @@
 """Streaming cluster-membership engine (incremental dendrogram + condensed store)."""
+from repro.core.engine import sanitize
 from repro.core.engine.dendrogram import (
     ReplayStats,
     filter_script_for_depart,
@@ -27,4 +28,5 @@ __all__ = [
     "StoreMemory",
     "filter_script_for_depart",
     "replay",
+    "sanitize",
 ]

@@ -116,17 +116,21 @@ class _DirtyRows:
 
     def __post_init__(self):
         cap = 4
-        self.DV = np.full((cap, self.K), np.inf)
+        self.DV = np.full((cap, self.K), np.inf, dtype=np.float64)
         self.rep = np.full(cap, -1, dtype=np.int64)
         self.nn = np.zeros(cap, dtype=np.int64)
-        self.nnd = np.full(cap, np.inf)
+        self.nnd = np.full(cap, np.inf, dtype=np.float64)
 
     def _grow(self) -> None:
         cap = self.DV.shape[0]
-        self.DV = np.vstack([self.DV, np.full((cap, self.K), np.inf)])
+        self.DV = np.vstack(
+            [self.DV, np.full((cap, self.K), np.inf, dtype=np.float64)]
+        )
         self.rep = np.concatenate([self.rep, np.full(cap, -1, dtype=np.int64)])
         self.nn = np.concatenate([self.nn, np.zeros(cap, dtype=np.int64)])
-        self.nnd = np.concatenate([self.nnd, np.full(cap, np.inf)])
+        self.nnd = np.concatenate(
+            [self.nnd, np.full(cap, np.inf, dtype=np.float64)]
+        )
 
     def add(self, rep: int, vec: np.ndarray) -> int:
         if self.count == self.DV.shape[0]:
@@ -248,17 +252,17 @@ class _Forest:
         mem = np.asarray(members, dtype=np.int64)
         m = mem.size
         col = blocked_column_fold(gather, mem, linkage)
-        vec = np.full(self.K, np.inf)
+        vec = np.full(self.K, np.inf, dtype=np.float64)
         if linkage == "average":
-            acc = np.zeros(self.K)
+            acc = np.zeros(self.K, dtype=np.float64)
             np.add.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active] / (m * self.size[self.active])
         elif linkage == "single":
-            acc = np.full(self.K, np.inf)
+            acc = np.full(self.K, np.inf, dtype=np.float64)
             np.minimum.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active]
         else:  # complete
-            acc = np.full(self.K, -np.inf)
+            acc = np.full(self.K, -np.inf, dtype=np.float64)
             np.maximum.at(acc, self.rep_of_leaf, col)
             vec[self.active] = acc[self.active]
         return vec
@@ -430,6 +434,12 @@ def replay(
     Returns ``(labels, new_script, stats)`` — canonical flat labels, the
     merge script of the new dendrogram (cache for the next operation), and
     replay telemetry.
+
+    Parity guarantee: the labels equal a from-scratch
+    :func:`~repro.core.hc.merge_forest` run on the current store (oracle-exact
+    up to the degenerate-tie caveats in the module docstring), bitwise
+    independent of en-bloc folding and of the store's memory tier — replayed
+    clean heights are bitwise the cached ones.
     """
     if (beta is None) == (n_clusters is None):
         raise ValueError("specify exactly one of beta / n_clusters")

@@ -49,6 +49,7 @@ from repro.core.engine.dendrogram import (
     replay,
 )
 from repro.core.engine.memory import MemoryPolicy
+from repro.core.engine.sanitize import allow_dense
 from repro.core.engine.store import CondensedDistances
 from repro.core.hc import CondensedWorkingMatrix, labels_from_members, merge_forest
 
@@ -125,6 +126,13 @@ class MembershipSnapshot:
 
 @dataclass
 class AdmitResult:
+    """Outcome of one (possibly batched) admission.
+
+    ``canonical`` carries the full-re-cluster-parity labels: bitwise what a
+    from-scratch :func:`~repro.core.angles.proximity_matrix` + HC run on the
+    post-admission roster would produce (degenerate-tie caveats aside).
+    """
+
     ids: np.ndarray               # (B,) stable ids assigned to the newcomers
     labels: np.ndarray            # (K,) stable labels after admission
     newcomer_labels: np.ndarray   # (B,)
@@ -135,6 +143,12 @@ class AdmitResult:
 
 @dataclass
 class DepartResult:
+    """Outcome of one (possibly batched) departure.
+
+    ``canonical`` is full-re-cluster parity for the surviving roster: bitwise
+    the labels a from-scratch run over the survivors would produce.
+    """
+
     departed: np.ndarray          # stable ids removed
     labels: np.ndarray            # (K',) stable labels of the survivors
     canonical: np.ndarray         # (K',) full-re-cluster-parity labels
@@ -170,7 +184,8 @@ class ClusterEngine:
                 measure=config.measure,
                 backend=config.backend,
                 block_size=config.block_size,
-            )
+            ),
+            dtype=np.float32,
         )
         eng._bootstrap(A, jnp.asarray(U_stack))
         return eng
@@ -181,7 +196,7 @@ class ClusterEngine:
     ) -> "ClusterEngine":
         """Adopt an existing proximity matrix (upper triangle is kept)."""
         eng = cls(config)
-        eng._bootstrap(np.asarray(A), jnp.asarray(U_stack))
+        eng._bootstrap(np.asarray(A, dtype=np.float32), jnp.asarray(U_stack))
         return eng
 
     def _bootstrap(self, A: np.ndarray, U_stack: jnp.ndarray) -> None:
@@ -236,8 +251,13 @@ class ClusterEngine:
         return int(np.unique(self._stable).size) if self._stable.size else 0
 
     def dense(self, dtype=np.float32) -> np.ndarray:
-        """Transient dense view of the condensed store (API back-compat)."""
-        return self.store.dense(dtype)
+        """Transient dense view of the condensed store (API back-compat).
+
+        The caller explicitly asked for (K, K) memory, so this is a
+        sanitizer-sanctioned dense materialization on every tier.
+        """
+        with allow_dense():
+            return self.store.dense(dtype)
 
     def warm_cache(self) -> None:
         """Build the store's read-only dense float32 cache now (dense tier).
@@ -361,7 +381,9 @@ class ClusterEngine:
             ids=new_ids,
             labels=stable.copy(),
             newcomer_labels=newcomer_labels.copy(),
-            new_cluster=np.array([l not in seen for l in newcomer_labels]),
+            new_cluster=np.array(
+                [l not in seen for l in newcomer_labels], dtype=bool
+            ),
             canonical=canonical.copy(),
             stats=stats,
         )

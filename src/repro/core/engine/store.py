@@ -72,7 +72,7 @@ class CondensedDistances:
         cls, A: np.ndarray, policy: Optional[MemoryPolicy] = None
     ) -> "CondensedDistances":
         """Condense a symmetric (K, K) matrix (upper triangle is kept)."""
-        A = np.asarray(A)
+        A = np.asarray(A, dtype=np.float32)  # store dtype; cast once up front
         n = A.shape[0]
         if A.shape != (n, n):
             raise ValueError("A must be square")

@@ -147,6 +147,10 @@ def measure_pair(
     flop cut over materializing the full ``(a, b, p, p)`` Gram block.  eq2
     genuinely needs every entry (largest singular value) and keeps the full
     Gram + :func:`measure_from_gram` reduction.
+
+    Parity guarantee: bitwise-identical to the full-Gram
+    :func:`measure_from_gram` route (the eq3 diagonal shortcut reorders no
+    floating-point reductions), deterministic for fixed inputs.
     """
     Ui = Ui.astype(jnp.float32)
     Uj = Uj.astype(jnp.float32)
@@ -165,6 +169,10 @@ def measure_from_gram(
     of arccos over identically ordered pairs).  ``eq2_solver`` picks the
     largest-singular-value solver — see the module docstring; ``"jacobi"``
     is the only one that lowers inside the Pallas kernel.
+
+    Parity guarantee: deterministic for fixed ``(G, measure, eq2_solver)``;
+    every backend tile reduces through this exact function (or its bitwise
+    eq3 diagonal shortcut), which is what makes cross-backend parity hold.
     """
     if measure == "eq3":
         return eq3_from_diag(jnp.diagonal(G, axis1=-2, axis2=-1))

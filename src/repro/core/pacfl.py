@@ -34,6 +34,13 @@ from repro.core.signatures.svd import SIG_BATCH_MAX  # noqa: F401  (back-compat 
 
 @dataclass
 class PACFLConfig:
+    """Hyperparameters for one PACFL run (paper Algorithm 1 + the engine).
+
+    Every knob here is deterministic: for a fixed config and fixed client
+    data, clustering labels are bitwise-reproducible across runs, backends
+    and memory tiers (the repo's parity contract; see docs/ENGINE.md).
+    """
+
     p: int = 3                     # number of principal vectors per client (paper: 3-5)
     beta: float = 10.0             # HC distance threshold (degrees)
     measure: str = "eq3"           # "eq2" | "eq3"

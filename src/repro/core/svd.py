@@ -140,6 +140,9 @@ def batched_client_signatures(
     the p-truncated *left* singular basis is unchanged (up to column sign,
     which every angle downstream takes ``abs`` of).
     """
+    # Trace-count shim: fires at trace time only, counting recompilations
+    # for tests/benchmarks; invisible to compiled runs.
+    # repro-lint: ignore[R5]
     _note_trace("batched_client_signatures")
     if method == "exact":
         return jax.vmap(lambda D: truncated_svd(D, p))(D_stack)

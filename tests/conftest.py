@@ -2,9 +2,45 @@ import os
 import sys
 from pathlib import Path
 
+import pytest
+
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (the 512-device mesh is exclusively dryrun.py's).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# repo root: makes the tools.* packages (repro_lint) importable in tests
+sys.path.insert(1, str(Path(__file__).resolve().parents[1]))
+
+# Modules exercising the store/replay read path — the ones whose contracts
+# the runtime sanitizer (repro.core.engine.sanitize) can meaningfully check.
+_SANITIZED_MODULES = {
+    "tests.test_engine",
+    "test_engine",
+    "tests.test_memory_policy",
+    "test_memory_policy",
+    "tests.test_churn_queue",
+    "test_churn_queue",
+}
+
+
+@pytest.fixture(autouse=True)
+def _repro_sanitize(request):
+    """Arm the runtime invariant sanitizer under ``REPRO_SANITIZE=1``.
+
+    Scoped to the engine/memory suites: S1-S3 are store-read-path
+    contracts, and arming everywhere would only slow the rest down.
+    """
+    module = getattr(request, "module", None)
+    name = getattr(module, "__name__", "")
+    if name not in _SANITIZED_MODULES:
+        yield
+        return
+    from repro.core.engine import sanitize
+
+    if not sanitize.enabled_by_env():
+        yield
+        return
+    with sanitize.sanitized():
+        yield
 
 
 def clustered_signatures(key, K, n=32, p=3, n_bases=6, spread=0.08):

@@ -22,7 +22,7 @@ DOC_FILES = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
 _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
 # `backtick` repo paths with at least one slash
 _PATH = re.compile(
-    r"`((?:src|tests|benchmarks|examples|docs)/[A-Za-z0-9_./-]+)`"
+    r"`((?:src|tests|benchmarks|examples|docs|tools)/[A-Za-z0-9_./-]+)`"
 )
 
 
@@ -59,10 +59,14 @@ def test_named_repo_paths_exist(doc):
 
 
 def test_docs_pages_exist_and_are_linked_from_readme():
-    """README must link into docs/ (ARCHITECTURE, ENGINE, BENCHMARKS)."""
-    for page in ("ARCHITECTURE.md", "ENGINE.md", "BENCHMARKS.md"):
+    """README must link into docs/ (ARCHITECTURE, ENGINE, BENCHMARKS,
+    STATIC_ANALYSIS)."""
+    pages = (
+        "ARCHITECTURE.md", "ENGINE.md", "BENCHMARKS.md", "STATIC_ANALYSIS.md",
+    )
+    for page in pages:
         assert (ROOT / "docs" / page).exists(), f"docs/{page} missing"
     readme = (ROOT / "README.md").read_text()
     links = {_strip_anchor(m.group(1)) for m in _LINK.finditer(readme)}
-    for page in ("ARCHITECTURE.md", "ENGINE.md", "BENCHMARKS.md"):
+    for page in pages:
         assert f"docs/{page}" in links, f"README does not link docs/{page}"

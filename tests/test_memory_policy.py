@@ -9,8 +9,12 @@
 * the K=4096 acceptance regression: bootstrap + replay + depart under the
   ``banded`` and ``condensed_only`` tiers never materialize a (K, K)
   float64 (or any dense (K, K) view at all), while still reproducing the
-  dense tier's labels bitwise.
+  dense tier's labels bitwise — enforced by the runtime sanitizer,
+* the sanitizer itself (S1/S2/S3): each rule demonstrably catches a
+  deliberately injected violation and stands down on uninstall.
 """
+from contextlib import nullcontext
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +28,7 @@ from repro.core.engine import (
     EngineConfig,
     MemoryPolicy,
     replay,
+    sanitize,
 )
 from repro.core.hc import CondensedWorkingMatrix, hierarchical_clustering
 
@@ -374,43 +379,40 @@ class TestNoDenseMaterializationAtScale:
         beta = float(np.quantile(off, 0.15))
         return A, beta
 
-    def _run(self, A, beta, mode, forbid_dense, monkeypatch):
+    def _run(self, A, beta, mode, sanitizer):
         K, B, M = self.K, self.B, self.K - self.B
         cfg = EngineConfig(beta=beta, memory=mode, band_rows=256)
-        if forbid_dense:
-            def _boom(self, *a, **kw):
-                raise AssertionError(
-                    "dense (K, K) view materialized under a dense-free tier"
-                )
-            monkeypatch.setattr(CondensedDistances, "dense", _boom)
-            monkeypatch.setattr(CondensedDistances, "dense_ro", _boom)
-        eng = ClusterEngine.from_proximity(A[:M, :M], jnp.zeros((M, 2, 1)), cfg)
-        eng.store.append_block(A[:M, M:], A[M:, M:])
-        canonical, script, _ = replay(
-            eng.store, eng._script, [[M + t] for t in range(B)], beta=beta
-        )
-        eng._canonical = canonical
-        eng._stable = canonical.copy()
-        eng._script = script
-        eng.ids = np.arange(K, dtype=np.int64)
-        eng._next_id = K
-        eng.U = jnp.zeros((K, 2, 1))
-        dep = eng.depart(np.arange(100, 140))
+        ctx = sanitize.sanitized() if sanitizer else nullcontext()
+        with ctx:
+            eng = ClusterEngine.from_proximity(
+                A[:M, :M], jnp.zeros((M, 2, 1)), cfg
+            )
+            eng.store.append_block(A[:M, M:], A[M:, M:])
+            canonical, script, _ = replay(
+                eng.store, eng._script, [[M + t] for t in range(B)], beta=beta
+            )
+            eng._canonical = canonical
+            eng._stable = canonical.copy()
+            eng._script = script
+            eng.ids = np.arange(K, dtype=np.int64)
+            eng._next_id = K
+            eng.U = jnp.zeros((K, 2, 1))
+            dep = eng.depart(np.arange(100, 140))
         return canonical, script, dep.canonical, eng
 
     @pytest.mark.parametrize("mode", ["banded", "condensed_only"])
-    def test_k4096_bootstrap_replay_depart_without_kk(self, mode, monkeypatch):
+    def test_k4096_bootstrap_replay_depart_without_kk(self, mode):
         """Acceptance: bootstrap + replay + depart at K=4096 under the
-        dense-free tiers never build a (K, K) float64 — the dense view
-        constructors are forbidden outright, the strided working set is the
-        condensed float64 vector (half a dense float64), and every gather
-        stays <= (ROW_BLOCK, K) float64 — while labels and scripts stay
-        bitwise identical to the dense tier."""
+        dense-free tiers never build a (K, K) float64 — the runtime
+        sanitizer (repro.core.engine.sanitize) forbids the dense view
+        constructors (S1) and over-threshold gathers (S2) for the whole
+        run, the strided working set is the condensed float64 vector (half
+        a dense float64), and every gather stays <= (ROW_BLOCK, K) float64
+        — while labels and scripts stay bitwise identical to the dense
+        tier."""
         A, beta = self._problem()
-        c_ref, s_ref, d_ref, _ = self._run(A, beta, "dense", False, monkeypatch)
-        canonical, script, dep_c, eng = self._run(
-            A, beta, mode, True, monkeypatch
-        )
+        c_ref, s_ref, d_ref, _ = self._run(A, beta, "dense", False)
+        canonical, script, dep_c, eng = self._run(A, beta, mode, True)
         np.testing.assert_array_equal(canonical, c_ref)
         assert script == s_ref
         np.testing.assert_array_equal(dep_c, d_ref)
@@ -422,3 +424,113 @@ class TestNoDenseMaterializationAtScale:
         if mode == "banded":
             band = eng.store.memory.band
             assert band is not None and band.nbytes <= 257 * self.K * 4
+
+
+# ---------------------------------------------------------------------------
+# The sanitizer itself: each rule catches a deliberately injected violation
+# ---------------------------------------------------------------------------
+
+
+class TestSanitizer:
+    """repro.core.engine.sanitize — the runtime half of repro-lint."""
+
+    @staticmethod
+    def _banded_store(K=48, band_rows=8):
+        rng = np.random.default_rng(7)
+        return CondensedDistances.from_dense(
+            random_distances(rng, K).astype(np.float32),
+            policy=MemoryPolicy(mode="banded", band_rows=band_rows),
+        )
+
+    def test_s1_catches_injected_dense_on_banded_tier(self):
+        """A (K, K) materialization smuggled into a banded-tier run — e.g.
+        a consumer 'optimizing' a gather into store.dense() — is caught."""
+        st = self._banded_store()
+        with sanitize.sanitized() as stats:
+            st.gather_rows(np.arange(4))  # legal reads stay legal
+            with pytest.raises(
+                sanitize.SanitizerViolation, match=r"S1:.*dense"
+            ):
+                st.dense()  # the injected violation
+            with pytest.raises(sanitize.SanitizerViolation, match="S1"):
+                st.dense_ro()
+        assert stats.violations == 2
+        if not sanitize.installed():  # env fixture may still be armed
+            st.dense()  # uninstalled: back-compat behavior restored
+
+    def test_s1_allow_dense_escape_hatch(self):
+        st = self._banded_store()
+        with sanitize.sanitized() as stats:
+            with sanitize.allow_dense():
+                d = st.dense()
+            assert d.shape == (st.n, st.n)
+        assert stats.violations == 0 and stats.allowed_dense == 1
+
+    def test_s1_engine_dense_api_is_sanctioned(self):
+        """ClusterEngine.dense() is the caller-opted-in escape hatch."""
+        rng = np.random.default_rng(11)
+        K = 24
+        A = random_distances(rng, K).astype(np.float32)
+        cfg = EngineConfig(beta=5.0, memory="banded", band_rows=8)
+        eng = ClusterEngine.from_proximity(A, jnp.zeros((K, 2, 1)), cfg)
+        with sanitize.sanitized() as stats:
+            D = eng.dense(np.float64)
+        np.testing.assert_array_equal(
+            D, A.astype(np.float64)
+        )
+        assert stats.violations == 0 and stats.allowed_dense == 1
+
+    def test_s2_catches_over_threshold_gather(self):
+        K = 3000  # bound = max(256, K // 8) = 375
+        st = CondensedDistances.from_dense(
+            np.zeros((K, K), dtype=np.float32),
+            policy=MemoryPolicy(mode="condensed_only"),
+        )
+        with sanitize.sanitized():
+            st.gather_rows(np.arange(sanitize.gather_bound(K)))  # at bound: ok
+            with pytest.raises(sanitize.SanitizerViolation, match="S2"):
+                st.gather_rows(np.arange(sanitize.gather_bound(K) + 1))
+
+    def test_s2_dense_tier_exempt(self):
+        """The dense tier may gather everything — that is its contract."""
+        rng = np.random.default_rng(13)
+        K = 20
+        st = CondensedDistances.from_dense(
+            random_distances(rng, K).astype(np.float32),
+            policy=MemoryPolicy(mode="dense"),
+        )
+        with sanitize.sanitized() as stats:
+            out = st.gather_rows(np.arange(K))
+        assert out.shape == (K, K) and stats.violations == 0
+
+    def test_s3_catches_lru_mutation_on_streaming_scan(self):
+        """An injected promote=True insert during a promote=False scan —
+        the PR 5 regression class — trips S3."""
+        st = self._banded_store()
+        st.gather_rows(np.arange(6))  # warm the band
+        orig = BandedRowCache.gather
+
+        def _leaky(self, store, idx, promote=True):
+            return orig(self, store, idx, promote=True)  # drops the flag
+
+        with sanitize.sanitized():
+            st.gather_rows(np.arange(8, 12), promote=False)  # clean: passes
+            BandedRowCache.gather = _leaky
+            try:
+                with pytest.raises(sanitize.SanitizerViolation, match="S3"):
+                    st.gather_rows(np.arange(12, 16), promote=False)
+            finally:
+                BandedRowCache.gather = orig
+
+    def test_stats_and_reentrancy(self):
+        st = self._banded_store()
+        ambient = sanitize.installed()  # REPRO_SANITIZE=1 arms the fixture
+        with sanitize.sanitized() as outer:
+            with sanitize.sanitized() as inner:
+                assert inner is outer  # reentrant: one shared window
+                st.gather_rows(np.arange(3))
+            assert sanitize.installed()  # still armed after inner exit
+            st.gather_rows(np.arange(3, 6))
+        assert sanitize.installed() == ambient
+        assert outer.gathers == 2
+        assert outer.peak_gather_bytes == 3 * st.n * 8

@@ -9,6 +9,11 @@ Compilations are observed through the lowering-count shim in
 ``repro.core.svd`` (``TRACE_COUNTS``): the jitted batch function bumps a
 Python counter in its traced body, which executes exactly once per
 compilation-cache miss.
+
+This module also runs under ``jax.checking_leaks()`` (autouse fixture):
+the trace-count shim is exactly the kind of impure traced body that could
+smuggle a tracer into module state, so the suite that depends on the shim
+also proves it leaks nothing.
 """
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,13 @@ import pytest
 from repro.core import svd
 from repro.core.pacfl import PACFLConfig, compute_signatures
 from repro.core.svd import bucket_samples
+
+
+@pytest.fixture(autouse=True)
+def _no_tracer_leaks():
+    """Fail any test here that lets a tracer escape its trace."""
+    with jax.checking_leaks():
+        yield
 
 
 def _ragged_clients(n_clients, n_features=24, lo=20, hi=300, seed=0):

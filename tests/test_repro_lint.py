@@ -1,0 +1,323 @@
+"""Self-tests for tools/repro_lint: every rule catches its violation class
+(positive case) and stays quiet on the compliant twin (negative case), plus
+suppression-comment and baseline/CLI exit-code behavior.
+
+Fixture snippets are written under tmp_path at zone-appropriate relative
+paths — the rules are path-scoped (DTYPE_ZONE, DENSE_ALLOWED, R6_DOC_ZONE),
+so where a snippet pretends to live is part of what is under test.
+"""
+import textwrap
+
+import pytest
+
+from tools.repro_lint import cli
+from tools.repro_lint.rules import RULES, lint_files
+
+pytestmark = pytest.mark.lint
+
+
+def _write(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+def _lint(tmp_path, files):
+    _write(tmp_path, files)
+    return lint_files(tmp_path, sorted(files))
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+class TestR1UnseededRandomness:
+    def test_flags_global_state_draws_and_hash(self, tmp_path):
+        fs = _lint(tmp_path, {"src/x.py": """\
+            import numpy as np
+            from numpy.random import default_rng
+            a = np.random.normal(size=3)
+            rng = default_rng()
+            key = hash("client-7")
+        """})
+        assert _rules(fs) == ["R1", "R1", "R1"]
+        assert "PYTHONHASHSEED" in fs[2].message
+
+    def test_flags_argless_default_rng_attribute_form(self, tmp_path):
+        fs = _lint(tmp_path, {"src/x.py": """\
+            import numpy as np
+            rng = np.random.default_rng()
+        """})
+        assert _rules(fs) == ["R1"]
+
+    def test_clean_on_seeded_generators(self, tmp_path):
+        fs = _lint(tmp_path, {"src/x.py": """\
+            import numpy as np
+            import zlib
+            rng = np.random.default_rng(0)
+            a = rng.normal(size=3)
+            b = np.random.default_rng(seed=42).random(4)
+            key = zlib.crc32(b"client-7")
+        """})
+        assert fs == []
+
+
+class TestR2DtypeContract:
+    ZONE = "src/repro/core/engine/newmod.py"
+
+    def test_flags_dtypeless_constructors_in_zone(self, tmp_path):
+        fs = _lint(tmp_path, {self.ZONE: """\
+            import numpy as np
+            a = np.zeros(4)
+            b = np.full((2, 2), np.inf)
+            c = np.asarray([1.0, 2.0])
+        """})
+        assert _rules(fs) == ["R2", "R2", "R2"]
+
+    def test_clean_with_explicit_dtype(self, tmp_path):
+        fs = _lint(tmp_path, {self.ZONE: """\
+            import numpy as np
+            a = np.zeros(4, dtype=np.float64)
+            b = np.full((2, 2), np.inf, dtype=np.float32)
+            c = np.asarray([1.0], dtype=np.float64)
+            d = np.zeros(4, np.float32)  # positional dtype also counts
+        """})
+        assert fs == []
+
+    def test_zone_scoped_not_repo_wide(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/data/loader.py": """\
+            import numpy as np
+            a = np.zeros(4)
+        """})
+        assert fs == []
+
+
+class TestR3DenseMaterialization:
+    def test_flags_dense_outside_allowlist(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/fl/server.py": """\
+            def use(store):
+                return store.dense_ro()[0]
+        """})
+        assert _rules(fs) == ["R3"]
+        assert "gather_rows" in fs[0].message
+
+    def test_allowlisted_modules_are_clean(self, tmp_path):
+        src = """\
+            def _use(store):
+                return store.dense()
+        """
+        for rel in (
+            "src/repro/core/engine/newmod.py",
+            "benchmarks/bench_x.py",
+        ):
+            assert _lint(tmp_path, {rel: src}) == []
+
+
+class TestR4HostSyncHotPath:
+    def test_flags_sync_reachable_from_root(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/newangles.py": """\
+            import jax.numpy as jnp
+
+            def _tile(x):
+                return float(x)
+
+            def proximity_matrix(U):
+                return _tile(U)
+        """})
+        assert _rules(fs) == ["R4"]
+        assert "_tile" in fs[0].message
+
+    def test_unreachable_and_non_jax_modules_are_clean(self, tmp_path):
+        # same sync, but not reachable from any R4 root
+        fs = _lint(tmp_path, {"src/repro/core/newangles.py": """\
+            import jax.numpy as jnp
+
+            def offline_summary(x):
+                return float(x)
+        """})
+        assert fs == []
+        # reachable, but a numpy-only module (the replay) syncs freely
+        fs = _lint(tmp_path, {"src/repro/core/newdendro.py": """\
+            import numpy as np
+
+            def _tile(x):
+                return float(x)
+
+            def proximity_matrix(U):
+                return _tile(U)
+        """})
+        assert fs == []
+
+
+class TestR5JitPurity:
+    def test_flags_mutation_of_enclosing_state(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/newsvd.py": """\
+            import jax
+            COUNTS = {}
+
+            @jax.jit
+            def f(x):
+                COUNTS["f"] = 1
+                return x
+        """})
+        assert _rules(fs) == ["R5"]
+        assert "COUNTS" in fs[0].message
+
+    def test_flags_wrapped_factory_and_impure_helper(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/newsvd.py": """\
+            import jax
+            TRACES = {}
+
+            def _note(name):
+                TRACES[name] = True
+
+            def _impl(x):
+                _note("impl")
+                return x
+
+            batched = jax.jit(_impl)
+        """})
+        # _impl is jitted by being passed into jax.jit; it calls the
+        # impure helper _note, which mutates module state — the svd.py
+        # TRACE_COUNTS pattern, caught through the helper-call path
+        assert "R5" in _rules(fs)
+
+    def test_pure_jitted_functions_are_clean(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/newsvd.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("p",))
+            def f(x, p):
+                y = x + p
+                return y
+        """})
+        assert fs == []
+
+
+class TestR6ApiContract:
+    def test_flags_missing_parity_keyword_on_target(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/angles.py": '''\
+            def proximity_matrix(U):
+                """Pairwise angles."""
+                return U
+
+            def cross_proximity(U_a, U_b):
+                """Rectangular block, bitwise parity with proximity_matrix."""
+                return U_a
+        '''})
+        assert _rules(fs) == ["R6"]
+        assert "proximity_matrix" in fs[0].message
+
+    def test_flags_missing_docstring_on_public_def_in_doc_zone(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/engine/newmod.py": """\
+            def helper():
+                return 1
+
+            def _private_needs_none():
+                return 2
+        """})
+        assert _rules(fs) == ["R6"]
+        assert "helper" in fs[0].message
+
+    def test_flags_renamed_target_as_missing(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/measures.py": '''\
+            def measure_pair_v2(Ui, Uj):
+                """Deterministic, bitwise."""
+                return Ui
+        '''})
+        assert _rules(fs) == ["R6", "R6"]  # measure_pair + measure_from_gram
+        assert all("not found" in f.message for f in fs)
+
+    def test_clean_when_contract_is_stated(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/angles.py": '''\
+            def proximity_matrix(U):
+                """Pairwise angles.  Parity guarantee: bitwise across backends."""
+                return U
+
+            def cross_proximity(U_a, U_b):
+                """Deterministic rectangular block (exact)."""
+                return U_a
+        '''})
+        assert fs == []
+
+
+class TestSuppression:
+    def test_trailing_and_preceding_comment_forms(self, tmp_path):
+        fs = _lint(tmp_path, {"src/x.py": """\
+            import numpy as np
+            a = np.random.normal(size=3)  # repro-lint: ignore[R1]  # timing noise
+            # repro-lint: ignore[R1]
+            b = np.random.normal(size=3)
+            c = np.random.normal(size=3)
+        """})
+        assert len(fs) == 1 and fs[0].line == 5
+
+    def test_rule_scoped_ignore_does_not_blanket(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/engine/newmod.py": """\
+            import numpy as np
+            a = np.zeros(4)  # repro-lint: ignore[R1]
+        """})
+        assert _rules(fs) == ["R2"]  # R1 ignore does not cover R2
+
+    def test_bare_ignore_covers_all_rules(self, tmp_path):
+        fs = _lint(tmp_path, {"src/repro/core/engine/newmod.py": """\
+            import numpy as np
+            a = np.zeros(4)  # repro-lint: ignore
+        """})
+        assert fs == []
+
+
+class TestCliAndBaseline:
+    DIRTY = {"src/x.py": "import numpy as np\na = np.random.normal(size=3)\n"}
+
+    def test_exit_codes_clean_and_dirty(self, tmp_path, capsys):
+        _write(tmp_path, {"src/x.py": "import numpy as np\na = 1\n"})
+        assert cli.main(["src"], root=tmp_path) == 0
+        _write(tmp_path, self.DIRTY)
+        assert cli.main(["src"], root=tmp_path) == 1
+        out = capsys.readouterr()
+        assert "R1" in out.out and "src/x.py:2" in out.out
+
+    def test_baseline_grandfathers_then_ratchets(self, tmp_path, capsys):
+        _write(tmp_path, self.DIRTY)
+        base = tmp_path / "baseline.txt"
+        args = ["src", "--baseline", str(base)]
+        assert cli.main([*args, "--update-baseline"], root=tmp_path) == 0
+        # grandfathered: clean exit, finding counted as baselined
+        assert cli.main(args, root=tmp_path) == 0
+        assert "1 baselined" in capsys.readouterr().out
+        # a second, fresh violation still fails
+        _write(tmp_path, {"src/y.py": "k = hash('x')\n"})
+        assert cli.main(args, root=tmp_path) == 1
+        # fixing the baselined file leaves a stale entry: reported, exit 0
+        _write(tmp_path, {
+            "src/x.py": "a = 1\n", "src/y.py": "k = 2\n",
+        })
+        assert cli.main(args, root=tmp_path) == 0
+        assert "stale" in capsys.readouterr().err
+
+    def test_no_baseline_flag_reports_everything(self, tmp_path, capsys):
+        _write(tmp_path, self.DIRTY)
+        base = tmp_path / "baseline.txt"
+        args = ["src", "--baseline", str(base)]
+        assert cli.main([*args, "--update-baseline"], root=tmp_path) == 0
+        assert cli.main([*args, "--no-baseline"], root=tmp_path) == 1
+
+    def test_list_rules(self, capsys):
+        assert cli.main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rid, name in RULES.items():
+            assert rid in out and name in out
+
+
+class TestRepoTreeIsClean:
+    def test_current_tree_lints_clean_without_baseline(self):
+        """The acceptance bar: the shipped tree has zero findings, so the
+        shipped baseline can stay empty (the ratchet's floor)."""
+        from pathlib import Path
+
+        root = Path(__file__).resolve().parents[1]
+        assert lint_files(root, []) == []  # smoke the API shape
+        assert cli.main(["--no-baseline"], root=root) == 0

@@ -1,0 +1,1 @@
+"""Repo maintenance tooling (not shipped with ``src/repro``)."""

@@ -1,0 +1,25 @@
+"""repro-lint: the repo's parity contracts as enforced static checks.
+
+``python -m tools.repro_lint`` walks ``src/``, ``benchmarks/``,
+``experiments/`` and ``examples/`` with six AST rules (R1-R6, stdlib-only)
+and fails on any finding not grandfathered in ``baseline.txt``.  The runtime
+half of the contract lives in :mod:`repro.core.engine.sanitize`
+(``REPRO_SANITIZE=1``).  Catalog + workflow: ``docs/STATIC_ANALYSIS.md``.
+"""
+from tools.repro_lint.cli import main
+from tools.repro_lint.rules import (
+    DEFAULT_TREES,
+    RULES,
+    Finding,
+    lint_files,
+    lint_tree,
+)
+
+__all__ = [
+    "DEFAULT_TREES",
+    "Finding",
+    "RULES",
+    "lint_files",
+    "lint_tree",
+    "main",
+]

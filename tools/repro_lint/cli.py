@@ -1,0 +1,117 @@
+"""repro-lint CLI: lint the tree, apply the baseline, gate CI.
+
+Exit codes: 0 clean (or everything baselined), 1 non-baselined findings,
+2 usage error.  See ``docs/STATIC_ANALYSIS.md`` for the workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.repro_lint.rules import DEFAULT_TREES, RULES, Finding, lint_tree
+
+BASELINE = Path(__file__).resolve().parent / "baseline.txt"
+
+
+def load_baseline(path: Path) -> set[str]:
+    """Baseline entries: one ``path:line:RULE`` per line; ``#`` comments and
+    blank lines are skipped; an optional trailing ``# reason`` is stripped."""
+    if not path.exists():
+        return set()
+    out: set[str] = set()
+    for raw in path.read_text().splitlines():
+        entry = raw.split("#", 1)[0].strip()
+        if entry:
+            out.add(entry)
+    return out
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    lines = [
+        "# repro-lint baseline — grandfathered findings (ratchet: only ever",
+        "# shrink this file; new code must lint clean).  One `path:line:RULE`",
+        "# per line; trailing `# reason` comments are allowed.",
+    ]
+    lines += [f.key for f in findings]
+    path.write_text("\n".join(lines) + "\n")
+
+
+def main(argv: list[str] | None = None, root: Path | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="repo-specific parity-contract linter (rules R1-R6)",
+    )
+    ap.add_argument(
+        "paths", nargs="*",
+        help=f"files or trees to lint (default: {', '.join(DEFAULT_TREES)})",
+    )
+    ap.add_argument(
+        "--baseline", type=Path, default=None,
+        help=f"baseline file (default: {BASELINE})",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="report every finding, ignoring the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to the current findings and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, name in RULES.items():
+            print(f"{rid}  {name}")
+        return 0
+
+    root = root if root is not None else Path.cwd()
+    if args.paths:
+        rels = []
+        for p in args.paths:
+            q = Path(p)
+            if q.is_absolute():
+                q = q.relative_to(root)
+            rels.append(q.as_posix())
+        # discover() expands directories and passes files through unchanged
+        findings = lint_tree(root, tuple(rels))
+    else:
+        findings = lint_tree(root)
+
+    baseline_path = args.baseline if args.baseline is not None else BASELINE
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"baseline: wrote {len(findings)} entries to {baseline_path}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    fresh = [f for f in findings if f.key not in baseline]
+    stale = baseline - {f.key for f in findings}
+
+    for f in fresh:
+        print(f.render())
+    if stale:
+        print(
+            f"note: {len(stale)} stale baseline entr"
+            f"{'y' if len(stale) == 1 else 'ies'} (fixed or moved — ratchet "
+            f"them out of {baseline_path.name}):",
+            file=sys.stderr,
+        )
+        for key in sorted(stale):
+            print(f"  {key}", file=sys.stderr)
+    if fresh:
+        print(
+            f"\nrepro-lint: {len(fresh)} finding(s) not in the baseline. "
+            "Fix them, suppress a deliberate one inline with "
+            "`# repro-lint: ignore[RULE]  # reason`, or (last resort) "
+            "baseline it — see docs/STATIC_ANALYSIS.md.",
+            file=sys.stderr,
+        )
+        return 1
+    n_base = len(findings) - len(fresh)
+    suffix = f" ({n_base} baselined)" if n_base else ""
+    print(f"repro-lint: clean{suffix}")
+    return 0

@@ -1,0 +1,624 @@
+"""repro-lint rule engine: the repo's parity contracts as AST checks.
+
+Every rule encodes an invariant that was previously enforced only by a test,
+a reviewer, or a postmortem (see ``docs/STATIC_ANALYSIS.md`` for the catalog
+with the PR/bug each rule descends from):
+
+R1  unseeded-randomness   — no module-level ``np.random.*`` draws, no argless
+                            ``default_rng()``, no ``hash()`` (process-salted).
+R2  dtype-contract        — no dtype-less numpy array constructors inside the
+                            f32-store/f64-working contract zone
+                            (``src/repro/core/engine/``, ``core/measures.py``).
+R3  dense-materialization — ``.dense()`` / ``.dense_ro()`` calls only in the
+                            dense-tier allowlist (engine internals, the
+                            legacy API shims, tests, benchmarks).
+R4  host-sync-hot-path    — no ``float()`` / ``.item()`` / ``np.asarray()``
+                            host syncs inside functions reachable from the
+                            proximity/replay hot paths in jax modules.
+R5  jit-purity            — no ``print``, ``global``/``nonlocal``, or
+                            mutation of enclosing state inside jit/vmap-ed
+                            functions (including calls to impure helpers).
+R6  api-contract          — contract-bearing public entry points must carry
+                            docstrings that name their parity guarantee.
+
+Pure stdlib (``ast`` + ``re``); no third-party dependencies.  Findings are
+suppressed per line with ``# repro-lint: ignore[R?]`` (reason encouraged) and
+ratcheted via ``tools/repro_lint/baseline.txt`` — see the doc page.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Optional
+
+RULES = {
+    "R1": "unseeded-randomness",
+    "R2": "dtype-contract",
+    "R3": "dense-materialization",
+    "R4": "host-sync-hot-path",
+    "R5": "jit-purity",
+    "R6": "api-contract",
+}
+
+# Trees walked by default (relative to the repo root).  tests/ is exempt by
+# design: tests get to do hostile things (inject violations, time unseeded
+# noise) that the lint exists to keep out of the library and benchmarks.
+DEFAULT_TREES = ("src", "benchmarks", "experiments", "examples")
+
+# --- R1 ---------------------------------------------------------------------
+
+# Legacy numpy global-state draws (np.random.<fn> without a Generator).  Any
+# of these makes a "seeded" run depend on import order / process history.
+_R1_LEGACY_NP = {
+    "beta", "binomial", "bytes", "chisquare", "choice", "dirichlet",
+    "exponential", "gamma", "geometric", "get_state", "gumbel", "laplace",
+    "logistic", "lognormal", "multinomial", "multivariate_normal", "normal",
+    "permutation", "poisson", "rand", "randint", "randn", "random",
+    "random_integers", "random_sample", "ranf", "sample", "seed",
+    "set_state", "shuffle", "standard_cauchy", "standard_exponential",
+    "standard_gamma", "standard_normal", "standard_t", "uniform", "vonmises",
+    "weibull", "zipf",
+}
+# stdlib `random` module-level draws (also hidden global state).
+_R1_STDLIB = {
+    "betavariate", "choice", "choices", "expovariate", "gauss", "getstate",
+    "lognormvariate", "normalvariate", "paretovariate", "randint", "random",
+    "randrange", "sample", "seed", "setstate", "shuffle", "triangular",
+    "uniform", "vonmisesvariate", "weibullvariate",
+}
+
+# --- R2 ---------------------------------------------------------------------
+
+# Paths where the float32-store / float64-working split is load-bearing for
+# cross-tier bitwise parity: every array constructor must say which side of
+# the split it is on.
+DTYPE_ZONE = ("src/repro/core/engine/", "src/repro/core/measures.py")
+# constructor name -> positional index at which dtype may appear
+_R2_CTORS = {
+    "array": 1, "asarray": 1, "ascontiguousarray": 1, "asfortranarray": 1,
+    "empty": 1, "full": 2, "ones": 1, "zeros": 1,
+}
+
+# --- R3 ---------------------------------------------------------------------
+
+# Modules allowed to name .dense()/.dense_ro(): the engine package itself
+# (store/memory/engine/sanitize own the tier logic), the legacy API shims
+# whose contract IS a transient dense view (pacfl.A, pme's extended matrix),
+# and tests/benchmarks (oracle comparisons).
+DENSE_ALLOWED = (
+    "src/repro/core/engine/",
+    "src/repro/core/pacfl.py",
+    "src/repro/core/pme.py",
+    "benchmarks/",
+    "tests/",
+)
+_R3_ATTRS = ("dense", "dense_ro")
+
+# --- R4 ---------------------------------------------------------------------
+
+# Hot-path roots: functions whose transitive callees must not block on a
+# device->host sync.  Reachability is a simple-name call graph over the
+# scanned files; only functions living in jax-importing modules are checked
+# (the numpy-only engine replay legitimately calls float()).
+R4_ROOTS = ("proximity_matrix", "cross_proximity", "measure_tile")
+_R4_NP_SYNCS = {"asarray", "array"}
+
+# --- R6 ---------------------------------------------------------------------
+
+# (path suffix, dotted target) pairs: the docstring of each target must
+# mention its parity/determinism guarantee.  These are the repo's
+# contract-bearing entry points — the names every doc page and test suite
+# leans on.
+R6_TARGETS = (
+    ("src/repro/core/angles.py", "proximity_matrix"),
+    ("src/repro/core/angles.py", "cross_proximity"),
+    ("src/repro/core/measures.py", "measure_pair"),
+    ("src/repro/core/measures.py", "measure_from_gram"),
+    ("src/repro/core/engine/engine.py", "EngineConfig"),
+    ("src/repro/core/engine/engine.py", "ClusterEngine.admit"),
+    ("src/repro/core/engine/engine.py", "ClusterEngine.depart"),
+    ("src/repro/core/engine/store.py", "CondensedDistances.gather_rows"),
+    ("src/repro/core/engine/memory.py", "MemoryPolicy"),
+    ("src/repro/core/engine/dendrogram.py", "replay"),
+    ("src/repro/core/pacfl.py", "PACFLConfig"),
+)
+R6_KEYWORDS = ("parity", "bitwise", "determinis", "exact")
+# Modules whose *public top-level* defs/classes must at least have docstrings.
+R6_DOC_ZONE = (
+    "src/repro/core/engine/",
+    "src/repro/core/measures.py",
+    "src/repro/core/angles.py",
+)
+
+_SUPPRESS = re.compile(
+    r"#\s*repro-lint:\s*ignore(?:\[(?P<rules>[A-Za-z0-9_,\s]+)\])?"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str       # posix path relative to the lint root
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline identity (column-free so formatting nudges don't churn)."""
+        return f"{self.path}:{self.line}:{self.rule}"
+
+    def render(self) -> str:
+        name = RULES.get(self.rule, "?")
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}[{name}] {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``np.random.default_rng`` -> ["np", "random", "default_rng"]."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _has_kw(call: ast.Call, name: str) -> bool:
+    return any(kw.arg == name for kw in call.keywords)
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Every name bound anywhere inside ``fn`` (params, assignments, loop and
+    comprehension targets, nested defs) — the complement is enclosing state."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            for arg in (
+                *a.posonlyargs, *a.args, *a.kwonlyargs,
+                *([a.vararg] if a.vararg else []),
+                *([a.kwarg] if a.kwarg else []),
+            ):
+                out.add(arg.arg)
+            out.add(node.name)
+        elif isinstance(node, ast.Lambda):
+            a = node.args
+            for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+                out.add(arg.arg)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, ast.ClassDef):
+            out.add(node.name)
+    return out
+
+
+def _store_roots(target: ast.AST) -> Iterable[tuple[str, ast.AST]]:
+    """Root Name of each Attribute/Subscript store target in ``target``."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _store_roots(elt)
+        return
+    node = target
+    if not isinstance(node, (ast.Attribute, ast.Subscript)):
+        return
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        yield node.id, target
+
+
+class FileInfo:
+    """Parsed module plus the cross-file facts the rules need."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        self.imports_jax = any(
+            (isinstance(n, ast.Import) and any(
+                a.name == "jax" or a.name.startswith("jax.") for a in n.names))
+            or (isinstance(n, ast.ImportFrom) and n.module
+                and (n.module == "jax" or n.module.startswith("jax.")))
+            for n in ast.walk(self.tree)
+        )
+        # every def (top-level and nested/methods), by simple name
+        self.defs: dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, node)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        """True if ``line`` carries an ``ignore`` comment for ``rule`` —
+        trailing on the line itself, or standing alone on the line above."""
+        for cand in (line, line - 1):
+            if not (1 <= cand <= len(self.lines)):
+                continue
+            text = self.lines[cand - 1]
+            if cand != line and not text.lstrip().startswith("#"):
+                continue  # the line above only counts if it is comment-only
+            m = _SUPPRESS.search(text)
+            if not m:
+                continue
+            listed = m.group("rules")
+            if listed is None:
+                return True
+            if rule in {r.strip().upper() for r in listed.split(",")}:
+                return True
+        return False
+
+
+def _zone(rel: str, prefixes: Iterable[str]) -> bool:
+    return any(
+        rel.startswith(p) if p.endswith("/") else rel == p for p in prefixes
+    )
+
+
+# ---------------------------------------------------------------------------
+# R1 / R2 / R3 — per-call checks
+# ---------------------------------------------------------------------------
+
+
+def _check_calls(fi: FileInfo, out: list[Finding]) -> None:
+    in_dtype_zone = _zone(fi.rel, DTYPE_ZONE)
+    dense_ok = _zone(fi.rel, DENSE_ALLOWED)
+    for node in ast.walk(fi.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+
+        # R1 — unseeded randomness
+        if chain[:2] in (["np", "random"], ["numpy", "random"]) and len(chain) == 3:
+            fn = chain[2]
+            if fn == "default_rng" and not node.args and not node.keywords:
+                out.append(Finding(
+                    fi.rel, node.lineno, node.col_offset, "R1",
+                    "default_rng() without a seed is entropy-seeded — pass an "
+                    "explicit seed (or thread a Generator in)",
+                ))
+            elif fn in _R1_LEGACY_NP:
+                out.append(Finding(
+                    fi.rel, node.lineno, node.col_offset, "R1",
+                    f"np.random.{fn} draws from the unseeded global state — "
+                    "use a seeded np.random.default_rng(seed) Generator",
+                ))
+        elif chain == ["default_rng"] and not node.args and not node.keywords:
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R1",
+                "default_rng() without a seed is entropy-seeded — pass an "
+                "explicit seed",
+            ))
+        elif chain[:1] == ["random"] and len(chain) == 2 and chain[1] in _R1_STDLIB:
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R1",
+                f"random.{chain[1]} uses the stdlib global RNG — seed an "
+                "explicit random.Random(seed) or use numpy Generators",
+            ))
+        elif chain == ["hash"]:
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R1",
+                "hash() is salted per process (PYTHONHASHSEED) — keying or "
+                "seeding through it is nondeterministic across runs; use "
+                "zlib.crc32 or hashlib (the PR 4 make_dataset bug)",
+            ))
+
+        # R2 — dtype-less constructors in the f32/f64 contract zone
+        if (
+            in_dtype_zone
+            and chain[:1] in (["np"], ["numpy"])
+            and len(chain) == 2
+            and chain[1] in _R2_CTORS
+            and not _has_kw(node, "dtype")
+            and len(node.args) <= _R2_CTORS[chain[1]]
+        ):
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R2",
+                f"np.{chain[1]} without an explicit dtype in the "
+                "f32-store/f64-working contract zone — implicit float64 "
+                "promotion breaks cross-tier bitwise parity silently",
+            ))
+
+        # R3 — dense materialization outside the allowlist
+        if (
+            not dense_ok
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _R3_ATTRS
+        ):
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R3",
+                f".{node.func.attr}() materializes a (K, K) view — only "
+                "dense-tier code, the legacy API shims, tests and benchmarks "
+                "may; stream through gather_rows instead",
+            ))
+
+
+# ---------------------------------------------------------------------------
+# R4 — host syncs in functions reachable from the hot-path roots
+# ---------------------------------------------------------------------------
+
+
+def _call_names(fn: ast.AST) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain:
+                out.add(chain[-1])
+    return out
+
+
+def _r4_reachable(files: list[FileInfo]) -> set[tuple[str, str]]:
+    """(rel, def name) pairs reachable from R4_ROOTS by simple-name calls."""
+    by_name: dict[str, list[tuple[FileInfo, ast.FunctionDef]]] = {}
+    for fi in files:
+        for name, fn in fi.defs.items():
+            by_name.setdefault(name, []).append((fi, fn))
+    seen: set[tuple[str, str]] = set()
+    frontier = list(R4_ROOTS)
+    while frontier:
+        name = frontier.pop()
+        for fi, fn in by_name.get(name, []):
+            key = (fi.rel, fn.name)
+            if key in seen:
+                continue
+            seen.add(key)
+            frontier.extend(
+                c for c in _call_names(fn) if c in by_name and c != fn.name
+            )
+    return seen
+
+
+def _check_r4(files: list[FileInfo], out: list[Finding]) -> None:
+    reachable = _r4_reachable(files)
+    for fi in files:
+        if not fi.imports_jax:
+            continue  # numpy-only modules (the engine replay) sync freely
+        for name, fn in fi.defs.items():
+            if (fi.rel, name) not in reachable:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                msg = None
+                if chain == ["float"] and node.args and not isinstance(
+                    node.args[0], ast.Constant
+                ):
+                    msg = "float() blocks on a device->host transfer"
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and not node.args
+                ):
+                    msg = ".item() blocks on a device->host transfer"
+                elif (
+                    chain[:1] in (["np"], ["numpy"])
+                    and len(chain) == 2
+                    and chain[1] in _R4_NP_SYNCS
+                ):
+                    msg = f"np.{chain[1]}() forces device->host materialization"
+                if msg:
+                    out.append(Finding(
+                        fi.rel, node.lineno, node.col_offset, "R4",
+                        f"{msg} inside `{name}`, reachable from the "
+                        f"proximity/replay hot path ({', '.join(R4_ROOTS)}) — "
+                        "keep the hot path device-resident",
+                    ))
+
+
+# ---------------------------------------------------------------------------
+# R5 — purity of jitted/vmapped functions
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = {"jit", "vmap", "pmap"}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """Does this decorator expression denote jax.jit/vmap (possibly through
+    functools.partial)?"""
+    chain = _attr_chain(node)
+    if chain and chain[-1] in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        fchain = _attr_chain(node.func)
+        if fchain and fchain[-1] in _JIT_NAMES:
+            return True
+        if fchain and fchain[-1] == "partial" and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+def _jitted_defs(fi: FileInfo) -> dict[str, tuple[ast.FunctionDef, str]]:
+    """name -> (def, how) for defs that are jit/vmap-decorated or passed by
+    name into a jit/shard_map call (the lru_cache'd-factory pattern)."""
+    out: dict[str, tuple[ast.FunctionDef, str]] = {}
+    for name, fn in fi.defs.items():
+        if any(_is_jit_expr(d) for d in fn.decorator_list):
+            out[name] = (fn, "decorated")
+    wrap_names = _JIT_NAMES | {"shard_map"}
+    for node in ast.walk(fi.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fchain = _attr_chain(node.func)
+        if not fchain or fchain[-1] not in wrap_names:
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Name) and arg.id in fi.defs:
+                out.setdefault(arg.id, (fi.defs[arg.id], "wrapped"))
+    return out
+
+
+def _impurities(fn: ast.FunctionDef, locals_: set[str]) -> list[tuple[int, int, str]]:
+    out: list[tuple[int, int, str]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            out.append((node.lineno, node.col_offset,
+                        f"{type(node).__name__.lower()} declaration"))
+        elif isinstance(node, ast.Call) and _attr_chain(node.func) == ["print"]:
+            out.append((node.lineno, node.col_offset,
+                        "print() (runs at trace time only, then vanishes)"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for tgt in targets:
+                for root, _ in _store_roots(tgt):
+                    if root not in locals_:
+                        out.append((
+                            node.lineno, node.col_offset,
+                            f"mutates enclosing state `{root}`",
+                        ))
+    return out
+
+
+def _check_r5(fi: FileInfo, out: list[Finding]) -> None:
+    impure: dict[str, str] = {}  # def name -> first impurity description
+    for name, fn in fi.defs.items():
+        bad = _impurities(fn, _local_names(fn))
+        if bad:
+            impure[name] = bad[0][2]
+    for name, (fn, _how) in _jitted_defs(fi).items():
+        locals_ = _local_names(fn)
+        for line, col, what in _impurities(fn, locals_):
+            out.append(Finding(
+                fi.rel, line, col, "R5",
+                f"jitted `{name}` {what} — traced bodies must be pure "
+                "(side effects run once per compile, not per call)",
+            ))
+        # calls into impure same-module helpers leak the same way
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if len(chain) == 1 and chain[0] in impure and chain[0] != name:
+                out.append(Finding(
+                    fi.rel, node.lineno, node.col_offset, "R5",
+                    f"jitted `{name}` calls `{chain[0]}`, which "
+                    f"{impure[chain[0]]} — impure helpers inside traced "
+                    "bodies run once per compile, not per call",
+                ))
+
+
+# ---------------------------------------------------------------------------
+# R6 — docstring contracts on public entry points
+# ---------------------------------------------------------------------------
+
+
+def _resolve_dotted(fi: FileInfo, dotted: str) -> Optional[ast.AST]:
+    parts = dotted.split(".")
+    body = fi.tree.body
+    node: Optional[ast.AST] = None
+    for part in parts:
+        found = None
+        for child in body:
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) and child.name == part:
+                found = child
+                break
+        if found is None:
+            return None
+        node = found
+        body = getattr(found, "body", [])
+    return node
+
+
+def _check_r6(fi: FileInfo, out: list[Finding]) -> None:
+    for suffix, dotted in R6_TARGETS:
+        if not fi.rel.endswith(suffix):
+            continue
+        node = _resolve_dotted(fi, dotted)
+        if node is None:
+            out.append(Finding(
+                fi.rel, 1, 0, "R6",
+                f"contract-bearing entry point `{dotted}` not found — if it "
+                "was renamed, update tools/repro_lint/rules.py:R6_TARGETS "
+                "and carry the parity docstring over",
+            ))
+            continue
+        doc = ast.get_docstring(node) or ""
+        if not doc:
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R6",
+                f"`{dotted}` is a contract-bearing entry point but has no "
+                "docstring — it must state its parity guarantee",
+            ))
+        elif not any(k in doc.lower() for k in R6_KEYWORDS):
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R6",
+                f"`{dotted}`'s docstring never names its parity guarantee "
+                f"(looked for any of {R6_KEYWORDS}) — state what stays "
+                "bitwise/deterministic and under which conditions",
+            ))
+    if _zone(fi.rel, R6_DOC_ZONE):
+        for child in fi.tree.body:
+            if not isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                continue
+            if child.name.startswith("_"):
+                continue
+            if not ast.get_docstring(child):
+                out.append(Finding(
+                    fi.rel, child.lineno, child.col_offset, "R6",
+                    f"public `{child.name}` in a contract-zone module has no "
+                    "docstring",
+                ))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def lint_files(root: Path, rel_paths: Iterable[str]) -> list[Finding]:
+    """Lint the given files (posix paths relative to ``root``).
+
+    Returns findings with line-level ``# repro-lint: ignore[...]``
+    suppressions already removed, sorted by (path, line, rule).
+    """
+    files: list[FileInfo] = []
+    findings: list[Finding] = []
+    for rel in rel_paths:
+        src = (root / rel).read_text()
+        try:
+            files.append(FileInfo(rel, src))
+        except SyntaxError as e:  # pragma: no cover - scanned tree must parse
+            findings.append(Finding(rel, e.lineno or 1, 0, "R0",
+                                    f"syntax error: {e.msg}"))
+    for fi in files:
+        _check_calls(fi, findings)
+        _check_r5(fi, findings)
+        _check_r6(fi, findings)
+    _check_r4(files, findings)
+
+    by_rel = {fi.rel: fi for fi in files}
+    kept = [
+        f for f in findings
+        if f.rule == "R0"
+        or not by_rel[f.path].suppressed(f.line, f.rule)
+    ]
+    kept.sort(key=lambda f: (f.path, f.line, f.rule, f.col))
+    return kept
+
+
+def discover(root: Path, trees: Iterable[str] = DEFAULT_TREES) -> list[str]:
+    """Python files under the given trees, as sorted posix relpaths."""
+    out: list[str] = []
+    for tree in trees:
+        base = root / tree
+        if base.is_file() and base.suffix == ".py":
+            out.append(Path(tree).as_posix())
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            out.append(p.relative_to(root).as_posix())
+    return out
+
+
+def lint_tree(root: Path, trees: Iterable[str] = DEFAULT_TREES) -> list[Finding]:
+    """Lint every Python file under ``trees`` relative to ``root``."""
+    return lint_files(root, discover(root, trees))
