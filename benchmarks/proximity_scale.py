@@ -30,6 +30,16 @@ and band hit rates, and asserting cross-policy label parity (bitwise).
 ``memory_parity`` is the in-process cross-tier bitwise gate (admit +
 depart under every tier) that ``--quick`` runs in CI.
 
+A ``serving`` section measures the membership-as-a-service read path
+(repro.serving): p50/p99 assignment latency and sustained QPS of the
+batched :class:`AssignmentServer` dispatch against the per-cluster
+representative cache at K in {2048, 8192} and batch sizes {1, 16, 128},
+with a bitwise gate that batched served labels equal one-by-one
+``engine.admit`` assignment (``assignment_parity_ok``).
+``serving_parity`` is the cheap in-process smoke of the same gate (plus
+snapshot-epoch isolation) that ``--quick`` runs in CI; ``--serving`` runs
+only the full serving sweep and merges its section into the existing json.
+
 A ``family_parity`` section gates the pluggable signature families
 (repro.core.signatures): the registry-dispatched ``svd`` family must be
 bitwise-identical — signatures, cluster labels and dendrogram merge script
@@ -731,6 +741,152 @@ def _streaming_bootstrap_rows(record, rows, quick=True):
     return ok
 
 
+# --------------------------------------------------------------------------
+# Serving: the membership-as-a-service read path (repro.serving).
+# --------------------------------------------------------------------------
+
+SERVING_KS = (2048, 8192)
+SERVING_BATCHES = (1, 16, 128)
+SERVING_POOL = 512  # query pool size, rotated through by the timing loops
+
+
+def _serving_parity(server, engine, queries):
+    """Batched served labels vs one-by-one engine.admit on throwaway forks."""
+    from repro.serving import admit_oracle
+
+    res = server.assign(queries)
+    ok = True
+    for i in range(int(queries.shape[0])):
+        lbl, is_new = admit_oracle(engine, queries[i])
+        if is_new:
+            ok &= bool(res.new_cluster[i]) and int(res.labels[i]) == -1
+        else:
+            ok &= (not bool(res.new_cluster[i])) and int(res.labels[i]) == lbl
+    return ok, res
+
+
+def _serving_rows(record, rows, Ks=SERVING_KS, batch_sizes=SERVING_BATCHES,
+                  quick=False):
+    """Assignment-serving latency/QPS sweep + the bitwise parity gate.
+
+    Per K: clustered signatures (64 latent bases, the streaming regime),
+    beta from the 5% off-diagonal quantile, C from the fitted dendrogram.
+    Queries rotate through a pool drawn from the same bases.  The parity
+    gate admits a query subset one-by-one on engine forks and demands the
+    batched served labels match bitwise (new-cluster outcomes included).
+    """
+    import time as _time
+
+    from repro.core.engine import ClusterEngine, EngineConfig
+    from repro.serving import AssignmentServer
+
+    record["serving"] = {
+        "representative": "medoid",
+        "rows": [],
+        "parity": [],
+        "batch_speedup_p99": [],
+    }
+    ok = True
+    iters_by_B = {1: 32, 16: 16, 128: 8} if quick else {1: 256, 16: 64, 128: 24}
+    for K in Ks:
+        n_par = 48 if K <= 2048 else 12  # per-query oracle admits are O(K)
+        U_all = _clustered_signatures(K + SERVING_POOL, n_bases=64)
+        U_seen, pool = U_all[:K], U_all[K:]
+        A = np.asarray(proximity_matrix(U_seen, "eq3", backend="jnp_blocked"))
+        beta = float(np.quantile(A[A > 0], 0.05))
+        cfg = EngineConfig(beta=beta, measure="eq3")
+        engine = ClusterEngine.from_proximity(A, U_seen, cfg)
+        engine.warm_cache()
+        server = AssignmentServer(
+            engine, representative="medoid", batch_max=max(batch_sizes)
+        )
+        C = int(server.snapshot.rep_labels.size)
+        per_query_p99 = {}
+        for B in batch_sizes:
+            iters = iters_by_B.get(B, 16)
+            server.assign(pool[:B])  # warmup: compile this pad bucket
+            ts = []
+            for i in range(iters):
+                lo = (i * B) % (SERVING_POOL - B + 1)
+                q = pool[lo : lo + B]
+                t0 = _time.perf_counter()
+                server.assign(q)
+                ts.append((_time.perf_counter() - t0) * 1e6)
+            ts.sort()
+            p50 = ts[len(ts) // 2]
+            p99 = ts[min(len(ts) - 1, int(len(ts) * 0.99))]
+            qps = B * len(ts) / (sum(ts) / 1e6)
+            per_query_p99[B] = p99 / B
+            entry = {
+                "K": K, "C": C, "B": B, "beta": beta,
+                "p50_us": p50, "p99_us": p99,
+                "p50_per_query_us": p50 / B, "p99_per_query_us": p99 / B,
+                "qps": qps,
+            }
+            record["serving"]["rows"].append(entry)
+            rows.append((
+                f"proximity_scale/serving_K{K}_B{B}",
+                p50,
+                f"p99={p99:.0f}us qps={qps:.0f} C={C}",
+            ))
+        b_lo, b_hi = batch_sizes[0], batch_sizes[-1]
+        speedup = per_query_p99[b_lo] / per_query_p99[b_hi]
+        record["serving"]["batch_speedup_p99"].append({
+            "K": K, "B_from": b_lo, "B_to": b_hi,
+            "per_query_speedup": speedup,
+        })
+        par, _ = _serving_parity(server, engine, pool[:n_par])
+        ok &= par
+        record["serving"]["parity"].append({
+            "K": K, "C": C, "queries": n_par, "bitwise": par,
+        })
+        rows.append((
+            f"proximity_scale/serving_K{K}_parity",
+            None,
+            f"bitwise={par} batch_p99_speedup_B{b_lo}->B{b_hi}={speedup:.1f}x",
+        ))
+    record["serving"]["assignment_parity_ok"] = ok
+    return ok
+
+
+def _serving_parity_rows(record, rows):
+    """Serving smoke (--quick CI gate): batched served assignments equal
+    one-by-one ``engine.admit`` labels bitwise, and an epoch swap leaves a
+    held pre-drain snapshot answering unchanged."""
+    from repro.core.engine import ClusterEngine, EngineConfig
+    from repro.serving import AssignmentServer
+
+    K, Q = 256, 24
+    U_all = _clustered_signatures(K + Q + 4, n_bases=64)
+    A = np.asarray(proximity_matrix(U_all[:K], "eq3", backend="jnp_blocked"))
+    beta = float(np.quantile(A[A > 0], 0.05))
+    engine = ClusterEngine.from_proximity(
+        A, U_all[:K], EngineConfig(beta=beta, measure="eq3")
+    )
+    # batch_max below Q: the gate also covers the chunked multi-dispatch path
+    server = AssignmentServer(engine, representative="medoid", batch_max=16)
+    queries = U_all[K : K + Q]
+    par, res = _serving_parity(server, engine, queries)
+
+    snap0 = server.snapshot
+    for i in range(4):
+        server.submit_join(U_all[K + Q + i])
+    server.drain()
+    iso = server.snapshot.epoch == snap0.epoch + 1
+    res0 = server.assign(queries[:4], snapshot=snap0)
+    iso &= bool(np.array_equal(res0.labels, res.labels[:4]))
+    ok = par and iso
+    record["serving_parity"] = {
+        "K": K, "queries": Q,
+        "assignment_bitwise": par, "epoch_isolation": iso,
+    }
+    rows.append((
+        "proximity_scale/serving_parity", None,
+        f"bitwise={par} epoch_iso={iso}",
+    ))
+    return ok
+
+
 def _queue_parity_rows(record, rows):
     """Async churn queue smoke: draining a ChurnQueue (policy-sized
     admission batches) reproduces the labels of the equivalent synchronous
@@ -897,6 +1053,12 @@ def run(quick: bool = True, parity_only: bool = False):
 
     queue_ok = _queue_parity_rows(record, rows)
 
+    # serving read path: the cheap parity/isolation smoke always runs; the
+    # full latency/QPS sweep at K in {2048, 8192} only outside --quick
+    serving_ok = _serving_parity_rows(record, rows)
+    if not parity_only:
+        serving_ok &= _serving_rows(record, rows, quick=quick)
+
     family_ok = _family_parity_rows(record, rows)
     bootstrap_ok = _streaming_bootstrap_rows(record, rows, quick=quick or parity_only)
 
@@ -911,7 +1073,8 @@ def run(quick: bool = True, parity_only: bool = False):
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
-    ) and streaming_ok and queue_ok and memory_ok and family_ok and bootstrap_ok
+    ) and (streaming_ok and queue_ok and serving_ok and memory_ok
+           and family_ok and bootstrap_ok)
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -927,6 +1090,10 @@ def run(quick: bool = True, parity_only: bool = False):
     )
     assert queue_ok, (
         "ChurnQueue drain diverged from the synchronous churn schedule"
+    )
+    assert serving_ok, (
+        "serving assignment parity failed: batched served labels diverged "
+        "from one-by-one engine.admit assignment (or epoch isolation broke)"
     )
     assert memory_ok, (
         "memory-policy tiers diverged from the dense tier's labels"
@@ -951,8 +1118,31 @@ def run(quick: bool = True, parity_only: bool = False):
         existing = json.loads(out.read_text())
         existing["family_parity"] = record["family_parity"]
         existing["streaming_bootstrap"] = record["streaming_bootstrap"]
+        existing["serving_parity"] = record["serving_parity"]
         out.write_text(json.dumps(existing, indent=2))
         rows.append(("proximity_scale/json_merged", None, str(out)))
+    return rows
+
+
+def run_serving_only(quick: bool = False):
+    """--serving mode: run just the serving sweep (plus its parity smoke)
+    and read-modify-write the ``serving`` / ``serving_parity`` sections
+    into the existing BENCH json — refreshing the serving numbers without
+    re-running the multi-minute full sweep."""
+    rows = []
+    record = {}
+    ok = _serving_parity_rows(record, rows)
+    ok &= _serving_rows(record, rows, quick=quick)
+    assert ok, (
+        "serving assignment parity failed: batched served labels diverged "
+        "from one-by-one engine.admit assignment (or epoch isolation broke)"
+    )
+    out = ROOT / "BENCH_proximity_scale.json"
+    existing = json.loads(out.read_text()) if out.exists() else {}
+    existing["serving"] = record["serving"]
+    existing["serving_parity"] = record["serving_parity"]
+    out.write_text(json.dumps(existing, indent=2))
+    rows.append(("proximity_scale/json_merged", None, str(out)))
     return rows
 
 
@@ -967,6 +1157,13 @@ if __name__ == "__main__":
         "--quick", action="store_true",
         help="parity smoke only: no timing sweep, no json rewrite",
     )
+    ap.add_argument(
+        "--serving", action="store_true",
+        help="serving sweep only; merges its sections into the existing json",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    emit(run(quick=not args.full, parity_only=args.quick))
+    if args.serving:
+        emit(run_serving_only(quick=not args.full))
+    else:
+        emit(run(quick=not args.full, parity_only=args.quick))

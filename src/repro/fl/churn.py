@@ -91,17 +91,50 @@ class DrainPolicy:
         (0, 1] (default 0.25 — at most a quarter of admission time spent
         on fixed dispatch).
     max_batch: hard cap on the admission batch size (default 64).
+    deadline_s: availability-aware drain slice — when set, a drain only
+        consumes the longest *prefix* of the queued operations whose
+        modelled apply cost (:meth:`estimated_batch_us` over the batches
+        the prefix forms) fits the deadline; the remainder stays queued
+        for the next drain.  Bounds how long the write path stalls the
+        serving loop per drain (``docs/SERVING.md``'s staleness bound).
+        Default ``None`` = unbounded (drain everything).
+    priority_departures: when true, a deadline-sliced drain always
+        extends through the **last queued departure** (consuming every
+        earlier operation too, to preserve arrival order) — a departed
+        client must stop being served promptly even under a tight
+        deadline, at the price of overshooting it.  Default false.
 
     Parity guarantee: batch size affects latency only — the engine's
     labels are a pure function of the distance store, so any batching of
     the same arrival order reproduces the synchronous schedule's labels
     bitwise (gated in CI via ``benchmarks/proximity_scale.py --quick``).
+    Deadline slicing keeps that guarantee by construction: a drain
+    consumes a *prefix* of the arrival order, never reorders, so a
+    sequence of deadline-sliced drains applies exactly the operations one
+    forced drain would, in the same order.
     """
 
     dispatch_cost_us: float
     per_newcomer_us: float
     target_overhead: float = 0.25
     max_batch: int = 64
+    deadline_s: Optional[float] = None
+    priority_departures: bool = False
+
+    def estimated_batch_us(self, n_leave: int, n_join: int) -> float:
+        """Modelled apply cost of one :class:`ChurnBatch` (microseconds).
+
+        Each departure pays the fixed dispatch cost ``c0`` (a depart is a
+        store compaction + replay dispatch); the admission, if any, pays
+        ``c0 + c1 * n_join`` — the same cost model :meth:`measure` fits.
+        Deterministic: a pure function of the fitted constants.
+        """
+        c0 = max(self.dispatch_cost_us, 0.0)
+        c1 = max(self.per_newcomer_us, 0.0)
+        us = n_leave * c0
+        if n_join:
+            us += c0 + c1 * n_join
+        return us
 
     @property
     def batch_size(self) -> int:
@@ -253,7 +286,48 @@ class ChurnQueue:
 
     # -- drain --------------------------------------------------------------
 
-    def drain(self, *, force: bool = True) -> list[ChurnBatch]:
+    def _deadline_prefix(self, deadline_s: float) -> int:
+        """Longest prefix of the queued ops whose modelled apply cost fits
+        ``deadline_s`` under the policy's cost model.
+
+        Always at least one operation (drains must make progress even
+        under an unmeetable deadline).  With ``policy.priority_departures``
+        the prefix extends through the last queued departure regardless of
+        the budget — including every operation before it, so arrival order
+        is never broken.  A prefix slice preserves the queue's bitwise
+        label parity by construction: the remainder simply stays queued.
+        """
+        policy = self.policy
+        budget_us = float(deadline_s) * 1e6
+        B = policy.batch_size
+        c0 = max(policy.dispatch_cost_us, 0.0)
+        c1 = max(policy.per_newcomer_us, 0.0)
+        spent = 0.0
+        run = 0  # joins in the current (unflushed) admission batch
+        limit = 0
+        for kind, _, _ in self._ops:
+            if kind == "leave":
+                cost = c0
+                run = 0
+            else:
+                cost = c1 + (c0 if run == 0 else 0.0)
+                run += 1
+                if run == B:
+                    run = 0
+            if limit and spent + cost > budget_us:
+                break
+            spent += cost
+            limit += 1
+        if policy.priority_departures:
+            for i in range(len(self._ops) - 1, limit - 1, -1):
+                if self._ops[i][0] == "leave":
+                    limit = i + 1
+                    break
+        return limit
+
+    def drain(
+        self, *, force: bool = True, deadline_s: Optional[float] = None
+    ) -> list[ChurnBatch]:
         """Pop pending operations as ordered :class:`ChurnBatch` units.
 
         Arrival order is preserved: departures bound join runs, adjacent
@@ -262,7 +336,21 @@ class ChurnQueue:
         remainder smaller than the policy batch is *held back* for the next
         drain (throughput mode: admissions amortize the dispatch cost);
         departures always drain.
+
+        ``deadline_s`` (default: the policy's ``deadline_s``) bounds the
+        drain to the longest arrival-order *prefix* whose modelled apply
+        cost fits the deadline — see :meth:`_deadline_prefix`; the rest
+        stays queued.  Prefix slicing never reorders, so repeated
+        deadline-sliced drains reproduce a single forced drain's labels
+        bitwise (gated in ``tests/test_churn_queue.py``).
         """
+        if deadline_s is None and self.policy is not None:
+            deadline_s = self.policy.deadline_s
+        if deadline_s is not None and self.policy is not None:
+            pending = self._ops[self._deadline_prefix(deadline_s):]
+        else:
+            pending = []
+        ops = self._ops[: len(self._ops) - len(pending)]
         B = self.policy.batch_size if self.policy is not None else None
         batches: list[ChurnBatch] = []
         cur = ChurnBatch()
@@ -277,7 +365,7 @@ class ChurnQueue:
             cur, sigs = ChurnBatch(), []
 
         consumed = 0
-        for kind, payload, sig in self._ops:
+        for kind, payload, sig in ops:
             if kind == "leave":
                 if cur.join:
                     flush()
@@ -289,12 +377,15 @@ class ChurnQueue:
                 if B is not None and len(cur.join) == B:
                     flush()
             consumed += 1
+        # hold back a trailing under-sized join-only remainder only when it
+        # is genuinely the queue's tail — a deadline slice's remainder is
+        # already staying queued, so the hold-back applies within the slice
         if not force and B is not None and cur.join and not cur.leave:
             if len(cur.join) < B:
                 consumed -= len(cur.join)
                 cur, sigs = ChurnBatch(), []
         flush()
-        self._ops = self._ops[consumed:]
+        self._ops = self._ops[consumed:]  # un-consumed slice tail + remainder
         self.stats.drained_batches += len(batches)
         self.stats.drained_joins += sum(len(b.join) for b in batches)
         self.stats.drained_leaves += sum(len(b.leave) for b in batches)

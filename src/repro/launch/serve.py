@@ -1,6 +1,10 @@
-"""Serving driver: batched prefill + decode loop.
+"""LM decode-loop demo: batched prefill + autoregressive decode on the
+model zoo (a generation throughput smoke, not the membership service).
 
 ``python -m repro.launch.serve --arch tinyllama-1.1b --reduced --tokens 32``
+
+For cluster-assignment serving — the membership-as-a-service read path —
+use ``python -m repro.launch.assign_serve`` (``repro.serving``).
 """
 import argparse
 import time

@@ -1,0 +1,40 @@
+"""Membership-as-a-service: the batched, snapshot-isolated read path.
+
+After clusters form, production traffic is read-dominated: clients ask
+"which cluster model should I pull?"  This package answers that in O(C)
+per query — a precompiled principal-angle dispatch against per-cluster
+representative signatures — while churn drains asynchronously into the
+write-side engine and epoch-swapped snapshots keep readers isolated.
+See ``docs/SERVING.md`` for the full lifecycle and contracts.
+"""
+from repro.serving.dispatch import (
+    TRACE_COUNTS,
+    pow2_bucket,
+    serve_assign,
+)
+from repro.serving.representatives import (
+    REPRESENTATIVE_KINDS,
+    ClusterRepresentative,
+    RepresentativeCache,
+)
+from repro.serving.server import (
+    AssignmentResult,
+    AssignmentServer,
+    DrainReport,
+    ServingSnapshot,
+    admit_oracle,
+)
+
+__all__ = [
+    "TRACE_COUNTS",
+    "pow2_bucket",
+    "serve_assign",
+    "REPRESENTATIVE_KINDS",
+    "ClusterRepresentative",
+    "RepresentativeCache",
+    "AssignmentResult",
+    "AssignmentServer",
+    "DrainReport",
+    "ServingSnapshot",
+    "admit_oracle",
+]

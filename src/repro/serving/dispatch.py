@@ -1,0 +1,119 @@
+"""Precompiled batched assignment dispatch — the serving hot path.
+
+One jitted kernel scores a (B, n, p) query stack against the (C, n, p)
+representative stack through the shared measure core
+(:func:`repro.core.measures.measure_pair` — the same eq2/eq3 reductions
+every proximity backend tiles through) and returns each query's nearest
+representative index and distance.  Compile discipline mirrors the
+signature path's shape bucketing: both the query batch and the
+representative count are zero-padded to the next power of two before
+entering the kernel, so XLA compiles O(log B_max * log C_max) variants, not
+one per (B, C) — the live representative count rides in as a *traced*
+scalar and masks the padded columns to ``+inf``, which means cluster churn
+between epochs never retraces the kernel while C stays within its bucket.
+
+Zero padding is angle-safe by construction: a zero-padded "signature" has
+zero Gram entries against everything, i.e. 90 degrees per principal angle,
+and padded representative columns are masked to ``+inf`` anyway before the
+argmin, so padding can never win an assignment.
+
+Host-sync discipline: :func:`serve_assign` is a repro-lint R4 hot-path root
+(``tools/repro_lint/rules.py``) — neither it nor anything it reaches may
+call ``float()`` / ``.item()`` / ``np.asarray``; it returns device arrays
+and the single per-batch host readback belongs to the caller
+(:meth:`repro.serving.server.AssignmentServer.assign`).
+
+``TRACE_COUNTS`` is the same lowering-count shim as
+``repro.core.svd.TRACE_COUNTS``: the jitted body bumps a plain Counter once
+per compilation-cache miss, letting tests pin the bucketed-compile bound.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.measures import EQ2_SOLVERS, measure_pair
+
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _note_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
+
+def pow2_bucket(x: int) -> int:
+    """Smallest power of two >= ``x`` (>= 1) — the pad bucket edge."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("measure", "eq2_solver"))
+def _assign_scores(Uq, R, c_real, measure, eq2_solver):
+    """(B, n, p) queries x (C_pad, n, q) reps -> (argmin idx, min distance).
+
+    ``c_real`` (traced int32) masks padded representative columns to +inf;
+    deterministic for fixed inputs — the measure core reduces exactly as
+    the proximity backends do, and argmin ties break to the lowest index.
+    """
+    # Trace-count shim: fires at trace time only, counting recompilations
+    # for tests/benchmarks; invisible to compiled runs.
+    # repro-lint: ignore[R5]
+    _note_trace("assign_scores")
+    D = measure_pair(Uq, R, measure, eq2_solver=eq2_solver)
+    live = jnp.arange(D.shape[1], dtype=jnp.int32) < c_real
+    D = jnp.where(live[None, :], D, jnp.inf)
+    return jnp.argmin(D, axis=1), jnp.min(D, axis=1)
+
+
+def serve_assign(U_queries, reps, measure, *, eq2_solver: str = "jacobi"):
+    """Score a query batch against the representative stack, device-side.
+
+    Parameters
+    ----------
+    U_queries: (B, n, p) stacked query signatures.
+    reps: (C, n, q) representative stack (``RepresentativeCache.rep_stack``).
+        eq2 accepts ``p != q`` (rectangular Gram); eq3 requires ``p == q``.
+    measure / eq2_solver: forwarded to the shared measure core.
+
+    Returns ``(idx, dmin)`` — two (B,) **device** arrays: each query's
+    nearest representative row index and its distance in degrees.  No host
+    sync happens here (R4-rooted); the caller owns the single readback.
+
+    Parity guarantee: deterministic for fixed inputs and bitwise
+    independent of the pad buckets — padded queries are sliced off, padded
+    representative columns are masked to +inf before the argmin, and the
+    per-pair reductions of :func:`~repro.core.measures.measure_pair` never
+    mix pad entries into live ones.
+    """
+    Uq = jnp.asarray(U_queries, dtype=jnp.float32)
+    R = jnp.asarray(reps, dtype=jnp.float32)
+    if Uq.ndim != 3 or R.ndim != 3:
+        raise ValueError(
+            f"expected (B, n, p) queries and (C, n, q) reps, got "
+            f"{Uq.shape} and {R.shape}"
+        )
+    if Uq.shape[1] != R.shape[1]:
+        raise ValueError(
+            f"query ambient dim n={Uq.shape[1]} != representative "
+            f"n={R.shape[1]}"
+        )
+    if measure == "eq3" and Uq.shape[2] != R.shape[2]:
+        raise ValueError(
+            f"eq3 pairs identically ordered angles and needs equal basis "
+            f"ranks: query p={Uq.shape[2]} vs representative p={R.shape[2]} "
+            f"(use eq2 for rectangular pairs)"
+        )
+    if eq2_solver not in EQ2_SOLVERS:
+        raise ValueError(
+            f"unknown eq2 solver: {eq2_solver!r} (want one of {EQ2_SOLVERS})"
+        )
+    B, C = int(Uq.shape[0]), int(R.shape[0])
+    Bp, Cp = pow2_bucket(B), pow2_bucket(C)
+    if Bp > B:
+        Uq = jnp.pad(Uq, ((0, Bp - B), (0, 0), (0, 0)))
+    if Cp > C:
+        R = jnp.pad(R, ((0, Cp - C), (0, 0), (0, 0)))
+    idx, dmin = _assign_scores(Uq, R, jnp.int32(C), measure, eq2_solver)
+    return idx[:B], dmin[:B]

@@ -19,6 +19,8 @@ _SANITIZED_MODULES = {
     "test_memory_policy",
     "tests.test_churn_queue",
     "test_churn_queue",
+    "tests.test_serving",
+    "test_serving",
 }
 
 

@@ -551,3 +551,98 @@ class TestCondensedDeparture:
         assert st.n == 1 and st.values.size == 0
         st.remove(np.array([0]))                # empty store
         assert st.n == 0
+
+
+# ---------------------------------------------------------------------------
+# Availability-aware deadline slicing (DrainPolicy.deadline_s)
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlineDrain:
+    def test_estimated_batch_us_model(self):
+        # leaves pay c0 each; an admission pays c0 + c1 * n_join
+        p = DrainPolicy(100.0, 10.0)
+        assert p.estimated_batch_us(0, 0) == 0.0
+        assert p.estimated_batch_us(2, 0) == 200.0
+        assert p.estimated_batch_us(0, 5) == 150.0
+        assert p.estimated_batch_us(2, 3) == 330.0
+        # negative fitted constants clamp to zero, never negative cost
+        assert DrainPolicy(-5.0, -1.0).estimated_batch_us(3, 4) == 0.0
+
+    def test_sliced_drains_bitwise_equal_single_forced_drain(self):
+        """Draining under a deadline over several rounds applies exactly the
+        ops one forced drain would, in order — engine labels bitwise."""
+        key = jax.random.PRNGKey(11)
+        U = clustered_signatures(key, 20, n_bases=4, spread=0.2)
+        joins = clustered_signatures(jax.random.fold_in(key, 1), 6,
+                                     n_bases=5, spread=0.3)
+        cfg = EngineConfig(beta=25.0)
+        events = [
+            ChurnEvent(rnd=1, join=[joins[0], joins[1]], leave=[3]),
+            ChurnEvent(rnd=2, join=[joins[2], joins[3]], leave=[0, 5]),
+            ChurnEvent(rnd=3, join=[joins[4], joins[5]]),
+        ]
+
+        def apply(engine, batches):
+            for b in batches:
+                if b.leave:
+                    gone, _ = b.resolve_leaves(engine.ids)
+                    engine.depart(np.asarray(gone))
+                if b.join:
+                    engine.admit(b.signatures)
+
+        # reference: one forced, unsliced drain
+        ref = ClusterEngine.from_signatures(U, cfg)
+        qr = ChurnQueue(signature_fn=lambda u: u,
+                        policy=DrainPolicy(100.0, 10.0, max_batch=2))
+        for ev in events:
+            qr.enqueue_event(ev)
+        apply(ref, qr.drain())
+        assert len(qr) == 0
+
+        # sliced: deadline_s fits ~150us of modelled work per drain round
+        sliced = ClusterEngine.from_signatures(U, cfg)
+        qs = ChurnQueue(signature_fn=lambda u: u,
+                        policy=DrainPolicy(100.0, 10.0, max_batch=2,
+                                           deadline_s=150e-6))
+        for ev in events:
+            qs.enqueue_event(ev)
+        rounds = 0
+        while len(qs):
+            apply(sliced, qs.drain())  # deadline defaults from the policy
+            rounds += 1
+            assert rounds <= 9  # must terminate: >=1 op per drain
+        assert rounds > 1  # the deadline actually sliced the backlog
+        np.testing.assert_array_equal(ref.labels, sliced.labels)
+        np.testing.assert_array_equal(ref.canonical_labels,
+                                      sliced.canonical_labels)
+        np.testing.assert_array_equal(ref.dense(), sliced.dense())
+
+    def test_priority_departures_overrides_tight_deadline(self):
+        sigs = clustered_signatures(KEY, 4)
+        q = ChurnQueue(signature_fn=lambda u: u,
+                       policy=DrainPolicy(100.0, 10.0, max_batch=8,
+                                          deadline_s=1e-9,
+                                          priority_departures=True))
+        for s in sigs[:3]:
+            q.enqueue_join(s)
+        q.enqueue_leave(1)
+        batches = q.drain()  # budget ~0.001us, but the leave must go
+        assert len(q) == 0
+        assert sum(len(b.leave) for b in batches) == 1
+        assert sum(len(b.join) for b in batches) == 3
+        # the join->leave order survived: leave is in the last batch
+        assert batches[-1].leave == [1]
+
+    def test_without_priority_tight_deadline_takes_one_op(self):
+        sigs = clustered_signatures(KEY, 4)
+        q = ChurnQueue(signature_fn=lambda u: u,
+                       policy=DrainPolicy(100.0, 10.0, max_batch=8))
+        for s in sigs[:3]:
+            q.enqueue_join(s)
+        q.enqueue_leave(1)
+        drained = 0
+        while len(q):
+            batches = q.drain(deadline_s=0.0)  # unmeetable: 1 op per round
+            drained += sum(len(b.join) + len(b.leave) for b in batches)
+        assert drained == 4

@@ -1,0 +1,324 @@
+"""Membership-as-a-service tests (repro.serving).
+
+* RepresentativeCache: medoid/centroid selection vs brute-force oracles,
+  incremental invalidation (unchanged clusters are reused), the
+  version-fast-path no-op, and the empty-engine edge,
+* serve_assign: pad-bucket independence vs an unpadded measure_pair
+  reference, the 1-cluster edge, and the bucketed-compile bound
+  (TRACE_COUNTS),
+* AssignmentServer: batched == one-by-one label parity, the admit-oracle
+  parity contract on clustered data, ragged eq2 query buckets, shape
+  validation, snapshot-epoch isolation across drains, predicted stable
+  ids for queued joins, and the empty-engine serve path.
+
+The store reads here go through the policy-routed gather path, so this
+module also runs under the runtime sanitizer (REPRO_SANITIZE=1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import clustered_signatures
+from repro.core.angles import proximity_matrix
+from repro.core.engine import ClusterEngine, EngineConfig
+from repro.core.measures import measure_pair
+from repro.serving import (
+    TRACE_COUNTS,
+    AssignmentServer,
+    RepresentativeCache,
+    admit_oracle,
+    pow2_bucket,
+    serve_assign,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _separated_engine(K=60, n_bases=6, measure="eq3", spread=0.05, seed=0,
+                      extra=16):
+    """Engine over well-separated clustered signatures with beta placed in
+    the gap between intra- and inter-base distances — the regime where
+    nearest-representative assignment and dendrogram replay coincide.
+
+    Returns ``(engine, pool, beta)`` where ``pool`` holds ``extra`` query
+    signatures drawn from the *same* cluster bases as the engine's clients
+    (``clustered_signatures`` is per-client keyed, so a longer draw from
+    the same key is a superset of a shorter one).
+    """
+    U_all = clustered_signatures(
+        jax.random.PRNGKey(seed), K + extra, n_bases=n_bases, spread=spread
+    )
+    U = U_all[:K]
+    A = np.asarray(proximity_matrix(U, measure, backend="jnp_blocked"))
+    base = np.arange(K) % n_bases
+    same = base[:, None] == base[None, :]
+    off = ~np.eye(K, dtype=bool)
+    intra_max = float(A[same & off].max())
+    inter_min = float(A[~same].min())
+    assert intra_max < inter_min, "fixture needs separated clusters"
+    beta = 0.5 * (intra_max + inter_min)
+    eng = ClusterEngine.from_proximity(
+        A, U, EngineConfig(beta=beta, measure=measure)
+    )
+    return eng, U_all[K:], beta
+
+
+def _queries(K, n_bases=6, n=32, p=3, spread=0.05, seed=100):
+    return clustered_signatures(
+        jax.random.PRNGKey(seed), K, n_bases=n_bases, n=n, p=p, spread=spread
+    )
+
+
+# ---------------------------------------------------------------------------
+# RepresentativeCache
+# ---------------------------------------------------------------------------
+
+
+class TestRepresentativeCache:
+    def test_medoid_matches_bruteforce(self):
+        eng, _, _ = _separated_engine()
+        cache = RepresentativeCache(kind="medoid")
+        cache.refresh(eng)
+        A = eng.dense(np.float64)
+        U = np.asarray(eng.U)
+        for lbl in np.unique(eng.labels):
+            pos = np.flatnonzero(eng.labels == lbl)
+            sub = A[np.ix_(pos, pos)]
+            expect = pos[int(np.argmin(sub.sum(axis=1)))]
+            rep = cache.representative(int(lbl))
+            assert rep.medoid_id == int(eng.ids[expect])
+            assert np.array_equal(np.asarray(rep.rep), U[expect])
+
+    def test_centroid_matches_bruteforce(self):
+        eng, _, _ = _separated_engine()
+        cache = RepresentativeCache(kind="centroid")
+        cache.refresh(eng)
+        U = np.asarray(eng.U)
+        for lbl in np.unique(eng.labels):
+            pos = np.flatnonzero(eng.labels == lbl)
+            mean = U[pos].mean(axis=0)
+            q = np.linalg.qr(mean)[0]
+            rep = cache.representative(int(lbl))
+            assert rep.medoid_id is None
+            assert np.allclose(np.abs(np.asarray(rep.rep)), np.abs(q),
+                               atol=1e-5)
+
+    def test_refresh_is_incremental(self):
+        eng, pool, _ = _separated_engine()
+        cache = RepresentativeCache(kind="medoid")
+        cache.refresh(eng)
+        C = cache.rep_labels.size
+        assert cache.rebuilt == C and cache.reused == 0
+        # same version -> no-op
+        cache.refresh(eng)
+        assert cache.rebuilt == C and cache.reused == 0
+        # admit two pool members (same bases as the engine): only the
+        # clusters they join may rebuild; the untouched ones must be
+        # reused, not recomputed
+        eng.admit(jnp.stack([pool[0], pool[1]]))
+        cache.refresh(eng)
+        assert cache.reused >= C - 2
+        assert cache.rebuilt < 2 * C
+
+    def test_empty_engine(self):
+        eng = ClusterEngine(EngineConfig())
+        cache = RepresentativeCache()
+        cache.refresh(eng)
+        assert cache.rep_stack is None
+        assert cache.rep_labels.size == 0
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError, match="representative kind"):
+            RepresentativeCache(kind="mode")
+
+
+# ---------------------------------------------------------------------------
+# serve_assign dispatch
+# ---------------------------------------------------------------------------
+
+
+class TestServeAssign:
+    def test_pow2_bucket(self):
+        assert [pow2_bucket(x) for x in (1, 2, 3, 4, 5, 127, 128, 129)] == [
+            1, 2, 4, 4, 8, 128, 128, 256,
+        ]
+
+    @pytest.mark.parametrize("measure", ["eq3", "eq2"])
+    def test_matches_unpadded_measure_pair(self, measure):
+        # B=5 pads to 8, C=3 pads to 4: the reference is computed with no
+        # padding at all, so agreement proves pad independence
+        Uq = _queries(5, n_bases=5, seed=1)
+        R = _queries(3, n_bases=3, seed=2)
+        idx, dmin = serve_assign(Uq, R, measure)
+        D = np.asarray(measure_pair(
+            jnp.asarray(Uq, jnp.float32), jnp.asarray(R, jnp.float32), measure
+        ))
+        assert np.array_equal(np.asarray(idx), D.argmin(axis=1))
+        assert np.allclose(np.asarray(dmin), D.min(axis=1), atol=1e-5)
+
+    def test_single_cluster(self):
+        Uq = _queries(4, n_bases=2, seed=3)
+        R = _queries(1, n_bases=1, seed=4)
+        idx, dmin = serve_assign(Uq, R, "eq3")
+        assert np.array_equal(np.asarray(idx), np.zeros(4, dtype=np.int64))
+        assert np.all(np.isfinite(np.asarray(dmin)))
+
+    def test_eq2_rectangular_ranks(self):
+        Uq = _queries(3, n_bases=3, p=2, seed=5)
+        R = _queries(4, n_bases=4, p=3, seed=6)
+        idx, dmin = serve_assign(Uq, R, "eq2")
+        assert np.asarray(idx).shape == (3,)
+        assert np.all(np.asarray(dmin) >= 0)
+
+    def test_eq3_rank_mismatch_raises(self):
+        with pytest.raises(ValueError, match="eq3"):
+            serve_assign(
+                _queries(2, n_bases=2, p=2, seed=5),
+                _queries(2, n_bases=2, p=3, seed=6),
+                "eq3",
+            )
+
+    def test_ambient_dim_mismatch_raises(self):
+        with pytest.raises(ValueError, match="ambient"):
+            serve_assign(
+                _queries(2, n_bases=2, n=16, seed=5),
+                _queries(2, n_bases=2, n=32, seed=6),
+                "eq3",
+            )
+
+    def test_compile_count_bounded_by_buckets(self):
+        R = _queries(3, n_bases=3, seed=7)
+        TRACE_COUNTS.clear()
+        serve_assign(_queries(3, n_bases=3, seed=8), R, "eq3")
+        before = TRACE_COUNTS["assign_scores"]
+        # same (8, 4) pad bucket: B in {5..8} with C=3 must not retrace
+        for B in (5, 6, 7, 8):
+            serve_assign(_queries(B, n_bases=2, seed=8 + B), R, "eq3")
+        mid = TRACE_COUNTS["assign_scores"]
+        assert mid - before <= 1  # one new (B=8, C=4) bucket at most
+        serve_assign(_queries(9, n_bases=2, seed=30), R, "eq3")  # new bucket
+        assert TRACE_COUNTS["assign_scores"] == mid + 1
+
+
+# ---------------------------------------------------------------------------
+# AssignmentServer
+# ---------------------------------------------------------------------------
+
+
+class TestAssignmentServer:
+    def test_parity_vs_admit_oracle(self):
+        eng, pool, beta = _separated_engine()
+        server = AssignmentServer(eng, batch_max=8)
+        queries = pool[:12]
+        res = server.assign(queries)
+        for i in range(12):
+            lbl, is_new = admit_oracle(eng, queries[i])
+            if is_new:
+                assert res.new_cluster[i] and res.labels[i] == -1
+            else:
+                assert not res.new_cluster[i]
+                assert int(res.labels[i]) == lbl
+
+    def test_far_query_opens_new_cluster(self):
+        eng, _, beta = _separated_engine()
+        server = AssignmentServer(eng)
+        # an orthogonal-complement-ish random subspace: far from every base
+        far = jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(99), (32, 3))
+        )[0]
+        res = server.assign(far)
+        lbl, is_new = admit_oracle(eng, far)
+        assert is_new and bool(res.new_cluster[0]) and res.labels[0] == -1
+
+    def test_batched_equals_one_by_one(self):
+        eng, pool, _ = _separated_engine()
+        server = AssignmentServer(eng, batch_max=5)  # forces chunking too
+        queries = pool[:13]
+        batched = server.assign(queries)
+        for i in range(13):
+            single = server.assign(queries[i])
+            assert int(single.labels[0]) == int(batched.labels[i])
+            assert bool(single.new_cluster[0]) == bool(batched.new_cluster[i])
+
+    def test_ragged_eq2_buckets_in_input_order(self):
+        eng, _, beta = _separated_engine(measure="eq2")
+        server = AssignmentServer(eng)
+        qs = [
+            _queries(1, n_bases=1, seed=41)[0],
+            _queries(1, n_bases=1, p=2, seed=42)[0],   # rank-2 query
+            _queries(1, n_bases=1, seed=43)[0],
+            _queries(1, n_bases=1, p=2, seed=44)[0],
+        ]
+        many = server.assign_many(qs)
+        assert many.labels.shape == (4,)
+        for i, q in enumerate(qs):
+            single = server.assign(q)
+            assert int(single.labels[0]) == int(many.labels[i])
+            assert bool(single.new_cluster[0]) == bool(many.new_cluster[i])
+
+    def test_ragged_ambient_mismatch_raises(self):
+        eng, _, _ = _separated_engine(measure="eq2")
+        server = AssignmentServer(eng)
+        with pytest.raises(ValueError, match="ambient"):
+            server.assign_many([_queries(1, n_bases=1, n=16, seed=45)[0]])
+
+    def test_empty_engine_serves_unassigned(self):
+        server = AssignmentServer(ClusterEngine(EngineConfig()))
+        res = server.assign(_queries(3, n_bases=3))
+        assert np.array_equal(res.labels, np.full(3, -1))
+        assert res.new_cluster.all()
+        assert np.isinf(res.distances).all()
+
+    def test_snapshot_isolation_across_drain(self):
+        eng, pool, _ = _separated_engine()
+        server = AssignmentServer(eng)
+        queries = pool[:6]
+        snap0 = server.snapshot
+        res0 = server.assign(queries)
+        predicted = [server.submit_join(_queries(1, n_bases=1, seed=50 + i)[0])
+                     for i in range(3)]
+        # nothing applied yet: the live snapshot still answers epoch 0
+        assert server.assign(queries).epoch == snap0.epoch
+        report = server.drain()
+        assert report.joins == 3 and report.pending == 0
+        assert server.epoch == snap0.epoch + 1
+        # queued joins got exactly the predicted stable ids
+        assert predicted == [int(i) for i in eng.ids[-3:]]
+        # the held snapshot answers bitwise as before the drain
+        held = server.assign(queries, snapshot=snap0)
+        assert held.epoch == snap0.epoch
+        assert np.array_equal(held.labels, res0.labels)
+
+    def test_submit_leave_by_stable_id(self):
+        eng, _, _ = _separated_engine()
+        server = AssignmentServer(eng)
+        victim = int(eng.ids[4])
+        server.submit_leave(victim)
+        report = server.drain()
+        assert report.leaves == 1
+        assert victim not in eng.ids.tolist()
+        with pytest.raises(KeyError):
+            server.submit_leave(victim)
+
+    def test_leave_of_predicted_join_id(self):
+        eng, _, _ = _separated_engine()
+        server = AssignmentServer(eng)
+        K0 = eng.n_clients
+        cid = server.submit_join(_queries(1, n_bases=1, seed=60)[0])
+        server.submit_leave(cid)  # join + leave of the same queued client
+        server.drain()
+        assert eng.n_clients == K0
+        assert cid not in eng.ids.tolist()
+
+    def test_representative_cache_reused_across_epochs(self):
+        eng, _, _ = _separated_engine()
+        server = AssignmentServer(eng)
+        C = server.reps.rep_labels.size
+        rebuilt0 = server.reps.rebuilt
+        server.submit_join(_queries(1, n_bases=1, seed=61)[0])
+        server.drain()
+        # one join touches one cluster (or opens one): the other C-1
+        # representatives must come from the cache, not a recompute
+        assert server.reps.reused >= C - 1
+        assert server.reps.rebuilt <= rebuilt0 + 2

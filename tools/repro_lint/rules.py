@@ -102,7 +102,9 @@ _R3_ATTRS = ("dense", "dense_ro")
 # device->host sync.  Reachability is a simple-name call graph over the
 # scanned files; only functions living in jax-importing modules are checked
 # (the numpy-only engine replay legitimately calls float()).
-R4_ROOTS = ("proximity_matrix", "cross_proximity", "measure_tile")
+R4_ROOTS = (
+    "proximity_matrix", "cross_proximity", "measure_tile", "serve_assign",
+)
 _R4_NP_SYNCS = {"asarray", "array"}
 
 # --- R6 ---------------------------------------------------------------------
