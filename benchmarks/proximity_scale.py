@@ -366,7 +366,7 @@ def _streaming_rows(record, rows, Ks, Bs, iters):
 # --------------------------------------------------------------------------
 
 MEMORY_KS = (2048, 8192)
-MEMORY_POLICIES = ("dense", "banded", "condensed_only")
+MEMORY_POLICIES = ("dense", "banded", "condensed_only", "spilled")
 MEMORY_B = 16
 # Sweep window: sized to the workload's hot set (the members of the
 # clusters successive admissions dirty) — 2048 rows is 1/4 of the dense
@@ -416,6 +416,13 @@ beta = float(data["beta"])
 B = int(data["B"])
 cfg = EngineConfig(beta=beta, measure="eq3", memory=mode,
                    band_rows=int(data["band_rows"]))
+if mode == "spilled":
+    # quarter-of-the-store budget (2 K (K-1) bytes condensed, 4 MiB floor):
+    # most of the vector must live on disk for the RSS delta to mean much
+    cfg = EngineConfig(beta=beta, measure="eq3", memory=mode,
+                       band_rows=int(data["band_rows"]),
+                       memory_budget_bytes=max(1 << 22, K * (K - 1) // 2),
+                       spill_segment_rows=512)
 t0 = time.perf_counter()
 eng = ClusterEngine.from_proximity(A[:K, :K], jnp.zeros((K, 2, 1)), cfg)
 boot_s = time.perf_counter() - t0
@@ -462,6 +469,9 @@ out = {
     "band_hits": int(band.hits) if band is not None else 0,
     "band_misses": int(band.misses) if band is not None else 0,
     "peak_gather_bytes": int(mem.stats.peak_gather_bytes),
+    "spilled_bytes": int(getattr(st, "spilled_nbytes", 0)),
+    "resident_store_bytes": int(getattr(st, "resident_nbytes", 0)),
+    "cold_segment_reads": int(getattr(st, "cold_segment_reads", 0)),
     "labels_sum": int(np.asarray(labels, dtype=np.int64).sum()),
     "labels_crc": int(zlib.crc32(
         np.ascontiguousarray(np.asarray(labels, dtype=np.int64)).tobytes())),
@@ -527,6 +537,22 @@ def _memory_rows(record, rows, Ks=MEMORY_KS, policies=MEMORY_POLICIES):
             rows.append((
                 f"proximity_scale/memory_K{K}_label_parity", None, str(same)
             ))
+            by_mode = {e["mode"]: e for e in per_k}
+            if K >= 8192 and {"spilled", "condensed_only"} <= by_mode.keys():
+                # the tier's acceptance claim: with most of the condensed
+                # vector on disk, spilled peak RSS must sit strictly below
+                # condensed_only's (whose vector is fully resident)
+                below = (
+                    by_mode["spilled"]["peak_rss_mb"]
+                    < by_mode["condensed_only"]["peak_rss_mb"]
+                )
+                ok &= below
+                rows.append((
+                    f"proximity_scale/memory_K{K}_spilled_rss_below",
+                    None,
+                    f"{by_mode['spilled']['peak_rss_mb']:.0f}MB < "
+                    f"{by_mode['condensed_only']['peak_rss_mb']:.0f}MB: {below}",
+                ))
     finally:
         os.unlink(tmp)
         if os.path.exists(tmp_a):
@@ -538,7 +564,8 @@ def _memory_rows(record, rows, Ks=MEMORY_KS, policies=MEMORY_POLICIES):
 def _memory_parity_rows(record, rows):
     """Cross-tier bitwise parity gate: bootstrap + admit + depart under
     every memory tier reproduce the dense tier's labels bitwise (--quick
-    CI smoke; band_rows small enough to force LRU eviction)."""
+    CI smoke; band_rows small enough to force LRU eviction, and the spilled
+    tier's budget small enough that cold segments really hit the disk)."""
     from repro.core.engine import ClusterEngine, EngineConfig
 
     K, B = 192, 12
@@ -546,8 +573,15 @@ def _memory_parity_rows(record, rows):
     A = np.asarray(proximity_matrix(U_all[:K], "eq3", backend="jnp_blocked"))
     beta = float(np.quantile(A[A > 0], 0.05))
     results = {}
-    for mode in ("dense", "banded", "condensed_only", "auto"):
-        cfg = EngineConfig(beta=beta, measure="eq3", memory=mode, band_rows=16)
+    for mode in ("dense", "banded", "condensed_only", "auto", "spilled"):
+        spill = (
+            {"memory_budget_bytes": 1 << 14, "spill_segment_rows": 64}
+            if mode == "spilled"
+            else {}
+        )
+        cfg = EngineConfig(
+            beta=beta, measure="eq3", memory=mode, band_rows=16, **spill
+        )
         eng = ClusterEngine.from_proximity(A, U_all[:K], cfg)
         eng.admit(U_all[K:])
         eng.depart(np.arange(40, 60))

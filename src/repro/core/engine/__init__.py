@@ -14,6 +14,7 @@ from repro.core.engine.engine import (
 )
 from repro.core.engine.memory import BandedRowCache, MemoryPolicy, StoreMemory
 from repro.core.engine.store import CondensedDistances
+from repro.core.engine.store_backends import RamSegments, Segment, SpilledSegments
 
 __all__ = [
     "AdmitResult",
@@ -24,7 +25,10 @@ __all__ = [
     "EngineConfig",
     "MembershipSnapshot",
     "MemoryPolicy",
+    "RamSegments",
     "ReplayStats",
+    "Segment",
+    "SpilledSegments",
     "StoreMemory",
     "filter_script_for_depart",
     "replay",

@@ -63,7 +63,12 @@ Memory: every leaf-row read goes through the store's tiered memory policy
 strided condensed gathers, see :mod:`repro.core.engine.memory`), in blocks
 of at most ``ROW_BLOCK`` rows (repro.core.hc), so the replay never materializes a
 (K, K) outside the dense tier and its aggregation arithmetic — hence the
-labels — is identical across tiers.  The caveats above and the tier table
+labels — is identical across tiers.  On the ``spilled`` tier those strided
+gathers resolve through the store's segmented backend
+(:mod:`repro.core.engine.store_backends`), which walks mmap'd cold
+column-range segments one at a time under a residency budget — so replay
+never faults in more than one cold segment block at once and its peak RSS
+is budget-bounded, not K-bounded.  The caveats above and the tier table
 are documented for humans in ``docs/ENGINE.md``.
 """
 from __future__ import annotations

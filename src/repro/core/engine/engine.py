@@ -73,13 +73,18 @@ class EngineConfig:
         for the admission blocks (defaults: backend ``"auto"``,
         block_size ``None`` = the backend's tuned tile edge).
     memory: distance-store memory policy mode — ``"auto"`` (default) |
-        ``"dense"`` | ``"banded"`` | ``"condensed_only"``; see
-        :class:`repro.core.engine.memory.MemoryPolicy`.  All modes produce
-        bitwise-identical labels; they trade cache memory against
+        ``"dense"`` | ``"banded"`` | ``"condensed_only"`` | ``"spilled"``;
+        see :class:`repro.core.engine.memory.MemoryPolicy`.  All modes
+        produce bitwise-identical labels; they trade cache memory against
         steady-state admission latency.
     memory_budget_bytes: ``auto``-mode cache byte budget (default ``None``
-        = 256 MiB).
+        = 256 MiB); in the ``spilled`` tier it also bounds the store's
+        resident bytes.
     band_rows: banded-tier window height in rows (default 512).
+    spill_dir: directory for the ``spilled`` tier's segment file (default
+        ``None`` = system temp dir).
+    spill_segment_rows: columns per cold segment the ``spilled`` tier
+        flushes (default 1024).
     dense_cache: legacy opt-out (PR 4's knob).  ``False`` with the default
         ``memory="auto"`` forces the ``condensed_only`` tier — no
         persistent dense cache, exactly the old opt-out guarantee.
@@ -96,6 +101,8 @@ class EngineConfig:
     memory: str = "auto"
     memory_budget_bytes: Optional[int] = None
     band_rows: int = 512
+    spill_dir: Optional[str] = None
+    spill_segment_rows: int = 1024
 
     def memory_policy(self) -> MemoryPolicy:
         """The :class:`MemoryPolicy` this config resolves to."""
@@ -106,6 +113,8 @@ class EngineConfig:
             mode=mode,
             byte_budget=self.memory_budget_bytes,
             band_rows=self.band_rows,
+            spill_dir=self.spill_dir,
+            spill_segment_rows=self.spill_segment_rows,
         )
 
 
@@ -211,13 +220,16 @@ class ClusterEngine:
         self._next_id = K
         self.store.memory.begin_op(self.store)
         # Bootstrap working matrix: the dense tier runs the merge loop on a
-        # transient (K, K) float64 (fastest); banded/condensed_only run the
+        # transient (K, K) float64 (fastest); the other tiers run the
         # (K, K)-free strided path on a condensed float64 working vector —
-        # half the dense float64 footprint, bitwise-identical merges.
+        # half the dense float64 footprint, bitwise-identical merges.  The
+        # vector is built from the store's segment-aware condensed source,
+        # so a spilled store streams it one cold segment at a time instead
+        # of materializing the full float32 vector first.
         if self.store.cache_enabled:
             work = self.store.dense(np.float64)
         else:
-            work = CondensedWorkingMatrix(self.store.values, K)
+            work = CondensedWorkingMatrix(self.store.condensed_source(), K)
         active, members, merges = merge_forest(
             work,
             np.ones(K, dtype=np.int64),

@@ -21,13 +21,22 @@ hardcoded cache with a **policy layer** that every dense-ish read of
 ``condensed_only``
     No cache at all — every row read is a strided gather.  Minimal memory
     (the condensed vector only), for K where even a band is too expensive.
+``spilled``
+    Past the host-RAM wall: even the condensed vector itself no longer
+    fits, so the store switches its backend to
+    :class:`~repro.core.engine.store_backends.SpilledSegments` — cold
+    column-range segments live in an mmap'd spill file, only a hot tail
+    plus a bounded residency window of cold pages stay in RAM.  No cache
+    on top; every row read is a strided gather through the segments.
 ``auto``
     Picks a tier per current K from a byte budget (default
-    :data:`DEFAULT_BYTE_BUDGET`): ``dense`` while the full cache fits,
-    ``banded`` while a window does, ``condensed_only`` beyond that.  The
-    band window additionally tracks the *observed* per-operation row
-    locality (:attr:`StoreMemory.hot_rows`, a decayed max of distinct rows
-    gathered per replay) and regrows when an operation overflows it.
+    :data:`DEFAULT_BYTE_BUDGET`): ``spilled`` once the condensed vector
+    itself (``2 K (K - 1)`` bytes) exceeds the budget, else ``dense``
+    while the full cache fits, ``banded`` while a window does,
+    ``condensed_only`` beyond that.  The band window additionally tracks
+    the *observed* per-operation row locality (:attr:`StoreMemory.hot_rows`,
+    a decayed max of distinct rows gathered per replay) and regrows when
+    an operation overflows it.
 
 Label parity: every tier returns bitwise-identical row values (the store is
 float32; float32 -> float64 upcasts are exact), and all consumers aggregate
@@ -44,11 +53,14 @@ from typing import Optional
 
 import numpy as np
 
-MEMORY_MODES = ("auto", "dense", "banded", "condensed_only")
+MEMORY_MODES = ("auto", "dense", "banded", "condensed_only", "spilled")
 
 # auto-mode byte budget for cache structures (the persistent condensed
-# vector is not counted — it is the store itself, not a cache).  256 MiB
-# keeps `dense` up to K ~ 8k, a 512-row band up to K ~ 128k.
+# vector is not counted — it is the store itself, not a cache — EXCEPT for
+# the spill decision: once the vector itself outgrows the budget, auto
+# resolves to "spilled" and the budget bounds the store's resident bytes).
+# 256 MiB keeps `dense` up to K ~ 8k, a 512-row band up to K ~ 128k, and
+# the condensed vector fully in RAM up to K ~ 11.5k.
 DEFAULT_BYTE_BUDGET = 256 * 2**20
 
 # Gather blocking note: consumers aggregate leaf rows through
@@ -64,16 +76,24 @@ class MemoryPolicy:
     Parameters
     ----------
     mode: ``"auto"`` (default) | ``"dense"`` | ``"banded"`` |
-        ``"condensed_only"`` — see the module docstring for the tiers.
-        ``auto`` resolves a concrete tier per current client count K
-        against ``byte_budget``.
+        ``"condensed_only"`` | ``"spilled"`` — see the module docstring for
+        the tiers.  ``auto`` resolves a concrete tier per current client
+        count K against ``byte_budget``.
     byte_budget: cache byte budget for ``auto`` resolution (bytes; the
-        condensed store itself is not counted).  ``None`` (default) means
-        :data:`DEFAULT_BYTE_BUDGET` (256 MiB).
+        condensed store itself is not counted, except for the spill
+        decision — see the module docstring).  ``None`` (default) means
+        :data:`DEFAULT_BYTE_BUDGET` (256 MiB).  In the ``spilled`` tier
+        this same budget bounds the store's *resident* bytes (hot tail +
+        cold-segment residency window).
     band_rows: requested window height of the banded row cache, in rows
         (default 512).  The effective window is clamped to the budget and
         to K, and in ``auto`` mode grows with the observed per-operation
         row locality.
+    spill_dir: directory for the ``spilled`` tier's segment file
+        (default ``None`` — the system temp dir).
+    spill_segment_rows: columns per cold segment flushed by the
+        ``spilled`` tier (default 1024).  Smaller segments mean finer
+        residency granularity; larger ones fewer mmap regions.
 
     All tiers produce bitwise-identical HC labels; the policy trades
     memory against steady-state admission latency only.
@@ -82,6 +102,8 @@ class MemoryPolicy:
     mode: str = "auto"
     byte_budget: Optional[int] = None
     band_rows: int = 512
+    spill_dir: Optional[str] = None
+    spill_segment_rows: int = 1024
 
     def __post_init__(self):
         if self.mode not in MEMORY_MODES:
@@ -90,6 +112,8 @@ class MemoryPolicy:
             )
         if self.band_rows < 1:
             raise ValueError("band_rows must be >= 1")
+        if self.spill_segment_rows < 1:
+            raise ValueError("spill_segment_rows must be >= 1")
 
     @property
     def budget(self) -> int:
@@ -98,9 +122,17 @@ class MemoryPolicy:
         )
 
     def resolve(self, n: int) -> str:
-        """Concrete tier for a store of ``n`` clients."""
+        """Concrete tier for a store of ``n`` clients.
+
+        Resolution order: ``spilled`` first — once the condensed vector
+        itself (``4 * n(n-1)/2`` bytes) exceeds the budget, no in-RAM
+        cache arrangement can help — then ``dense`` / ``banded`` /
+        ``condensed_only`` by cache cost as before.
+        """
         if self.mode != "auto":
             return self.mode
+        if 2 * n * (n - 1) > self.budget:
+            return "spilled"
         if 4 * n * n <= self.budget:
             return "dense"
         if 4 * n * min(self.band_rows, max(n, 1)) <= self.budget:
@@ -136,6 +168,8 @@ class MemoryStats:
     gathered_rows: int = 0       # rows handed out across all gathers
     peak_gather_bytes: int = 0   # largest single gather allocation
     densifications: int = 0      # dense-tier cache builds
+    spilled_bytes: int = 0       # store bytes in the spill file (spilled tier)
+    cold_segment_reads: int = 0  # cold-segment touches (spilled tier)
 
 
 class BandedRowCache:
@@ -341,7 +375,17 @@ class StoreMemory:
             self.stats.band_hits = band.hits
             self.stats.band_misses = band.misses
         else:
+            # condensed_only and spilled: strided condensed gathers — the
+            # spilled backend walks cold segments one at a time under its
+            # residency budget inside store.rows
             out = store.rows(idx)
+            if tier == "spilled":
+                self.stats.spilled_bytes = int(
+                    getattr(store, "spilled_nbytes", 0)
+                )
+                self.stats.cold_segment_reads = int(
+                    getattr(store, "cold_segment_reads", 0)
+                )
         self.stats.peak_gather_bytes = max(
             self.stats.peak_gather_bytes, int(out.nbytes)
         )

@@ -21,6 +21,15 @@ runtime, by patching the distance-store read path while tests run:
     A ``promote=False`` (streaming-scan) gather must leave the banded
     LRU untouched — no inserts, no reordering.  PR 5's n_clusters tail
     relied on exactly this to keep the hot window warm.
+``S4  bounded cold-segment residency``
+    On the ``spilled`` tier the whole contract is that the condensed
+    vector is *not* resident: (a) materializing the full flat vector from
+    a :class:`~repro.core.engine.store_backends.SpilledSegments` backend
+    (``CondensedDistances.values`` does this) is forbidden outside
+    :func:`allow_dense`, and (b) after every segment gather the backend's
+    tracked cold-page residency must sit within its budget plus at most
+    one in-flight segment — a broken/bypassed LRU eviction would silently
+    re-inflate peak RSS to condensed_only levels.
 
 Violations raise :class:`SanitizerViolation` carrying the offending call
 stack, so the failing test points at the code path that broke the
@@ -49,6 +58,7 @@ import numpy as np
 
 from repro.core.engine.memory import StoreMemory
 from repro.core.engine.store import CondensedDistances
+from repro.core.engine.store_backends import SpilledSegments
 from repro.core.hc import ROW_BLOCK
 
 
@@ -64,6 +74,8 @@ class SanitizerStats:
     peak_gather_bytes: int = 0
     dense_builds: int = 0     # dense()/dense_ro() materializations observed
     allowed_dense: int = 0    # of those, inside an allow_dense() block
+    spilled_materializations: int = 0  # full-vector builds off a spilled backend
+    peak_cold_resident_bytes: int = 0  # max tracked cold residency observed
     violations: int = 0
 
 
@@ -143,6 +155,36 @@ def _checked_gather(self, store, idx, promote: bool = True):
     return out
 
 
+def _checked_materialize(self):
+    stats.spilled_materializations += 1
+    if not _allow_depth:
+        _violation(
+            f"S4: full condensed-vector materialization from a spilled "
+            f"backend ({self.size} entries, {self.nbytes} bytes) — the "
+            f"spilled tier exists so this never happens; wrap intentional "
+            f"escapes (e.g. CondensedDistances.values) in "
+            f"sanitize.allow_dense()"
+        )
+    return _orig["materialize"](self)
+
+
+def _checked_gather_flat(self, flat):
+    out = _orig["gather_flat"](self, flat)
+    resident = int(self.cold_resident_bytes)
+    stats.peak_cold_resident_bytes = max(
+        stats.peak_cold_resident_bytes, resident
+    )
+    bound = int(self.cold_budget) + int(self.max_segment_nbytes)
+    if resident > bound:
+        _violation(
+            f"S4: cold-segment residency {resident} bytes exceeds the "
+            f"budget-plus-one-segment bound {bound} (cold_budget="
+            f"{self.cold_budget}, largest segment {self.max_segment_nbytes}"
+            f") — LRU eviction is broken or bypassed"
+        )
+    return out
+
+
 def install() -> None:
     """Arm the sanitizer (reentrant — pair every call with uninstall)."""
     global _installed, stats
@@ -153,9 +195,13 @@ def install() -> None:
     _orig["dense"] = CondensedDistances.dense
     _orig["dense_ro"] = CondensedDistances.dense_ro
     _orig["gather"] = StoreMemory.gather
+    _orig["materialize"] = SpilledSegments.materialize
+    _orig["gather_flat"] = SpilledSegments.gather_flat
     CondensedDistances.dense = _checked_dense
     CondensedDistances.dense_ro = _checked_dense_ro
     StoreMemory.gather = _checked_gather
+    SpilledSegments.materialize = _checked_materialize
+    SpilledSegments.gather_flat = _checked_gather_flat
 
 
 def uninstall() -> None:
@@ -169,6 +215,8 @@ def uninstall() -> None:
     CondensedDistances.dense = _orig.pop("dense")
     CondensedDistances.dense_ro = _orig.pop("dense_ro")
     StoreMemory.gather = _orig.pop("gather")
+    SpilledSegments.materialize = _orig.pop("materialize")
+    SpilledSegments.gather_flat = _orig.pop("gather_flat")
 
 
 def installed() -> bool:

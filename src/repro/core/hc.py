@@ -51,6 +51,13 @@ def condensed_row_gather(
     The single implementation of the strided-gather formula — shared by
     :meth:`CondensedDistances.rows` and
     :meth:`CondensedWorkingMatrix.rows_block`, so the two can never drift.
+
+    ``values`` may be a flat ndarray or a segmented store backend
+    (anything with ``gather_flat``, e.g.
+    :class:`repro.core.engine.store_backends.SpilledSegments`) — a
+    segmented source resolves the fancy-gather itself, walking its cold
+    segments one at a time under the residency budget, and returns the
+    bitwise-same float32 values a flat vector would.
     """
     idx = np.atleast_1d(np.asarray(idx, dtype=np.int64))
     if values.size == 0:  # n <= 1: no pairs
@@ -61,7 +68,8 @@ def condensed_row_gather(
     flat = hi * (hi - 1) // 2 + lo
     diag = hi == lo
     flat[diag] = 0  # any in-range slot; overwritten below
-    out = values[flat]
+    take = getattr(values, "gather_flat", None)
+    out = values[flat] if take is None else take(flat)
     if out.dtype != dtype:
         out = out.astype(dtype)
     out[diag] = diag_fill
@@ -113,13 +121,25 @@ class CondensedWorkingMatrix:
     working vector is CONSUMED (mutated in place).
     """
 
-    def __init__(self, values: np.ndarray, n: int):
+    def __init__(self, values, n: int):
         self.n = int(n)
-        v = np.array(values, dtype=np.float64)  # private working copy
-        if v.size != self.n * (self.n - 1) // 2:
+        need = self.n * (self.n - 1) // 2
+        segs = getattr(values, "segments", None)
+        if segs is not None:
+            # segmented store backend: fill the private float64 working
+            # copy one column-range segment at a time (exact float32
+            # upcasts — bitwise what the flat path computes), so a spilled
+            # source faults in at most one cold segment per step and the
+            # full float32 vector is never materialized alongside
+            v = np.empty(int(values.size), dtype=np.float64)
+            for seg in segs():
+                v[seg.base : seg.base + seg.values.size] = seg.values
+        else:
+            v = np.array(values, dtype=np.float64)  # private working copy
+        if v.size != need:
             raise ValueError(
                 f"condensed working vector for n={self.n} needs "
-                f"{self.n * (self.n - 1) // 2} entries, got {v.size}"
+                f"{need} entries, got {v.size}"
             )
         self.v = v
         self._J = np.arange(self.n, dtype=np.int64)
@@ -183,7 +203,10 @@ class CondensedWorkingMatrix:
         resolve to the smallest column index — ``np.argmin``'s
         first-occurrence rule — and parity with the dense oracle is bitwise
         (values are copied, never recomputed).  Peak scratch is
-        ``ROW_BLOCK * n`` float64, same as the row-gather path.
+        ``ROW_BLOCK * n`` float64, same as the row-gather path.  All reads
+        hit the private float64 working copy — for a segmented (spilled)
+        source that copy was already filled one cold segment at a time in
+        ``__init__``, so bootstrap never re-touches the store's segments.
         """
         n = self.n
         nn = np.zeros(n, dtype=np.int64)    # all-inf rows argmin to 0, like dense

@@ -68,13 +68,18 @@ class PACFLConfig:
     # pallas kernel tile: 8).
     proximity_block: Optional[int] = None
     # Distance-store memory policy (repro.core.engine.memory.MemoryPolicy):
-    # "auto" | "dense" | "banded" | "condensed_only".  All modes produce
-    # bitwise-identical cluster labels; they trade server cache memory
-    # against steady-state admission latency ("auto" picks per current K
-    # from memory_budget_bytes, default 256 MiB).
+    # "auto" | "dense" | "banded" | "condensed_only" | "spilled".  All modes
+    # produce bitwise-identical cluster labels; they trade server cache
+    # memory against steady-state admission latency ("auto" picks per
+    # current K from memory_budget_bytes, default 256 MiB — including
+    # "spilled" once the condensed store itself outgrows the budget).
     memory: str = "auto"
     memory_budget_bytes: Optional[int] = None
     memory_band_rows: int = 512
+    # Spilled-tier knobs: segment-file directory (None = system temp dir)
+    # and columns per flushed cold segment.
+    memory_spill_dir: Optional[str] = None
+    memory_spill_segment_rows: int = 1024
 
 
 def engine_config(config: PACFLConfig) -> EngineConfig:
@@ -89,6 +94,8 @@ def engine_config(config: PACFLConfig) -> EngineConfig:
         memory=config.memory,
         memory_budget_bytes=config.memory_budget_bytes,
         band_rows=config.memory_band_rows,
+        spill_dir=config.memory_spill_dir,
+        spill_segment_rows=config.memory_spill_segment_rows,
     )
 
 

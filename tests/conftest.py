@@ -21,6 +21,8 @@ _SANITIZED_MODULES = {
     "test_churn_queue",
     "tests.test_serving",
     "test_serving",
+    "tests.test_store_backends",
+    "test_store_backends",
 }
 
 

@@ -4,13 +4,15 @@
   LRU semantics, gather_rows value parity across tiers, fork independence,
 * cross-tier bitwise parity: interleaved admit/depart sequences produce
   identical stable labels, canonical labels and merge scripts under
-  ``dense`` / ``banded`` / ``condensed_only`` / ``auto`` (randomized and
-  adversarial tie-grid inputs),
+  ``dense`` / ``banded`` / ``condensed_only`` / ``spilled`` / ``auto``
+  (randomized and adversarial tie-grid inputs; the spilled runs use a
+  budget small enough that cold segments really live on disk),
 * the K=4096 acceptance regression: bootstrap + replay + depart under the
-  ``banded`` and ``condensed_only`` tiers never materialize a (K, K)
-  float64 (or any dense (K, K) view at all), while still reproducing the
-  dense tier's labels bitwise — enforced by the runtime sanitizer,
-* the sanitizer itself (S1/S2/S3): each rule demonstrably catches a
+  ``banded``, ``condensed_only`` and ``spilled`` tiers never materialize a
+  (K, K) float64 (or any dense (K, K) view at all), while still
+  reproducing the dense tier's labels bitwise — enforced by the runtime
+  sanitizer,
+* the sanitizer itself (S1/S2/S3/S4): each rule demonstrably catches a
   deliberately injected violation and stands down on uninstall.
 """
 from contextlib import nullcontext
@@ -33,7 +35,7 @@ from repro.core.engine import (
 from repro.core.hc import CondensedWorkingMatrix, hierarchical_clustering
 
 KEY = jax.random.PRNGKey(0)
-MODES = ("dense", "banded", "condensed_only", "auto")
+MODES = ("dense", "banded", "condensed_only", "spilled", "auto")
 
 
 def random_distances(rng, K, grid=False):
@@ -59,17 +61,22 @@ def canon(labels):
 
 class TestMemoryPolicy:
     def test_fixed_modes_resolve_to_themselves(self):
-        for mode in ("dense", "banded", "condensed_only"):
+        for mode in ("dense", "banded", "condensed_only", "spilled"):
             assert MemoryPolicy(mode=mode).resolve(10**6) == mode
 
     def test_auto_tiers_by_budget(self):
-        # 4 KB budget: dense up to n=32 (4n^2 <= 4096), then banded while a
-        # 4-row band fits (16n <= 4096 -> n <= 256), then condensed_only
-        pol = MemoryPolicy(mode="auto", byte_budget=4096, band_rows=4)
-        assert pol.resolve(32) == "dense"
-        assert pol.resolve(33) == "banded"
-        assert pol.resolve(256) == "banded"
-        assert pol.resolve(257) == "condensed_only"
+        # 24 KB budget: dense up to n=77 (4n^2 <= 24000), then banded while
+        # a 64-row band fits (256n <= 24000 -> n <= 93), then
+        # condensed_only while the condensed vector itself still fits
+        # (2n(n-1) <= 24000 -> n <= 110), then spilled — the vector itself
+        # is past the budget, so no in-RAM arrangement helps
+        pol = MemoryPolicy(mode="auto", byte_budget=24000, band_rows=64)
+        assert pol.resolve(77) == "dense"
+        assert pol.resolve(78) == "banded"
+        assert pol.resolve(93) == "banded"
+        assert pol.resolve(94) == "condensed_only"
+        assert pol.resolve(110) == "condensed_only"
+        assert pol.resolve(111) == "spilled"
 
     def test_band_window_clamps_and_grows_with_locality(self):
         pol = MemoryPolicy(mode="auto", byte_budget=4 * 64 * 1000, band_rows=8)
@@ -96,9 +103,11 @@ class TestMemoryPolicy:
         rng = np.random.default_rng(12)
         K = 24
         A = random_distances(rng, K).astype(np.float32)
-        # a 2-row band costs 8n bytes: budget 160 -> banded up to n=20
-        # (dense needs 4n^2 <= 160 -> n <= 6), condensed_only beyond
-        pol = MemoryPolicy(mode="auto", byte_budget=160, band_rows=2)
+        # budget 1200: dense needs 4n^2 <= 1200 (n <= 17), a 14-row band
+        # fits through n=21 (56n <= 1200), the condensed vector itself fits
+        # through n=25 (2n(n-1) <= 1200) — so n=20 is banded and n=24 is
+        # condensed_only (not yet spilled)
+        pol = MemoryPolicy(mode="auto", byte_budget=1200, band_rows=14)
         st = CondensedDistances.from_dense(A[: K - 4, : K - 4], policy=pol)
         assert st.memory.tier(st.n) == "banded"
         st.gather_rows(np.array([1, 3]))
@@ -286,8 +295,15 @@ class TestCondensedWorkingMatrix:
 
 
 def _engine_cfg(mode, linkage, crit):
+    # spilled: a budget far below the K=40 store (2 * 40 * 39 = 3120 bytes)
+    # so the parity sequences really flush cold segments to disk
+    spill = (
+        {"memory_budget_bytes": 1 << 11, "spill_segment_rows": 8}
+        if mode == "spilled"
+        else {}
+    )
     return EngineConfig(
-        linkage=linkage, memory=mode, band_rows=16, **crit
+        linkage=linkage, memory=mode, band_rows=16, **spill, **crit
     )
 
 
@@ -381,7 +397,14 @@ class TestNoDenseMaterializationAtScale:
 
     def _run(self, A, beta, mode, sanitizer):
         K, B, M = self.K, self.B, self.K - self.B
-        cfg = EngineConfig(beta=beta, memory=mode, band_rows=256)
+        # spilled: 8 MiB budget vs the ~33.5 MB K=4096 condensed store, so
+        # the bulk of the vector is on disk for the whole run
+        spill = (
+            {"memory_budget_bytes": 8 << 20, "spill_segment_rows": 256}
+            if mode == "spilled"
+            else {}
+        )
+        cfg = EngineConfig(beta=beta, memory=mode, band_rows=256, **spill)
         ctx = sanitize.sanitized() if sanitizer else nullcontext()
         with ctx:
             eng = ClusterEngine.from_proximity(
@@ -400,16 +423,17 @@ class TestNoDenseMaterializationAtScale:
             dep = eng.depart(np.arange(100, 140))
         return canonical, script, dep.canonical, eng
 
-    @pytest.mark.parametrize("mode", ["banded", "condensed_only"])
+    @pytest.mark.parametrize("mode", ["banded", "condensed_only", "spilled"])
     def test_k4096_bootstrap_replay_depart_without_kk(self, mode):
         """Acceptance: bootstrap + replay + depart at K=4096 under the
         dense-free tiers never build a (K, K) float64 — the runtime
         sanitizer (repro.core.engine.sanitize) forbids the dense view
-        constructors (S1) and over-threshold gathers (S2) for the whole
-        run, the strided working set is the condensed float64 vector (half
-        a dense float64), and every gather stays <= (ROW_BLOCK, K) float64
-        — while labels and scripts stay bitwise identical to the dense
-        tier."""
+        constructors (S1), over-threshold gathers (S2), and (spilled)
+        full-vector materialization / unbounded cold residency (S4) for
+        the whole run, the strided working set is the condensed float64
+        vector (half a dense float64), and every gather stays
+        <= (ROW_BLOCK, K) float64 — while labels and scripts stay bitwise
+        identical to the dense tier."""
         A, beta = self._problem()
         c_ref, s_ref, d_ref, _ = self._run(A, beta, "dense", False)
         canonical, script, dep_c, eng = self._run(A, beta, mode, True)
@@ -424,6 +448,11 @@ class TestNoDenseMaterializationAtScale:
         if mode == "banded":
             band = eng.store.memory.band
             assert band is not None and band.nbytes <= 257 * self.K * 4
+        if mode == "spilled":
+            # most of the condensed vector is on disk, and the resident
+            # slice (hot tail + cold residency window) is budget-bounded
+            assert eng.store.spilled_nbytes > eng.store.nbytes // 2
+            assert eng.store.resident_nbytes <= (8 << 20) + (2 << 20)
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +550,48 @@ class TestSanitizer:
                     st.gather_rows(np.arange(12, 16), promote=False)
             finally:
                 BandedRowCache.gather = orig
+
+    @staticmethod
+    def _spilled_store(K=48):
+        """A store whose budget (2 KiB) is far below its condensed vector
+        (tri(48) * 4 = 4512 bytes), so most segments are cold on disk."""
+        rng = np.random.default_rng(7)
+        return CondensedDistances.from_dense(
+            random_distances(rng, K).astype(np.float32),
+            policy=MemoryPolicy(
+                mode="spilled", byte_budget=1 << 11, spill_segment_rows=4
+            ),
+        )
+
+    def test_s4_catches_full_materialization_on_spilled(self):
+        """Reading .values on a spilled store pages every cold segment in
+        at once — exactly the RSS spike the tier exists to avoid."""
+        st = self._spilled_store()
+        assert st.spilled_nbytes > 0  # the store really spilled
+        with sanitize.sanitized() as stats:
+            st.gather_rows(np.arange(4))  # bounded reads stay legal
+            with pytest.raises(sanitize.SanitizerViolation, match="S4"):
+                _ = st.values
+        assert stats.spilled_materializations == 1
+        assert stats.violations == 1
+
+    def test_s4_allow_dense_escape_hatch(self):
+        st = self._spilled_store()
+        with sanitize.sanitized() as stats:
+            with sanitize.allow_dense():
+                v = st.values
+            assert v.size == st.n * (st.n - 1) // 2
+        assert stats.violations == 0
+
+    def test_s4_catches_broken_cold_eviction(self):
+        """An injected no-op eviction — cold segments pile up past the
+        residency budget during a full-row gather — trips S4."""
+        st = self._spilled_store()
+        with sanitize.sanitized():
+            st.gather_rows(np.arange(4))  # clean: passes
+            st._backend._evict = lambda: None  # the injected leak
+            with pytest.raises(sanitize.SanitizerViolation, match="S4"):
+                st.gather_rows(np.arange(st.n))
 
     def test_stats_and_reentrancy(self):
         st = self._banded_store()

@@ -1,0 +1,277 @@
+"""Segmented store backends (repro.core.engine.store_backends).
+
+Pins the PR 9 storage-layer contracts:
+
+* RamSegments: geometric capacity growth — a 16-admit loop never recopies
+  the full vector per admit (the old ``np.concatenate`` regression),
+* ``CondensedDistances.values``: read-only *view*, never a frozen base —
+  handing it out can't poison later in-place writes or forks,
+* SpilledSegments: bitwise parity with the RAM backend, bounded cold
+  residency, fork semantics (shared mmap'd spill file, divergence on
+  append, no double-flush, no cross-fork corruption), spill-file cleanup,
+* auto-tier backend migration (RAM -> spilled on admit past the budget,
+  spilled -> RAM on depart back under it) with bitwise-stable contents.
+
+Runs under the armed runtime sanitizer (``REPRO_SANITIZE=1``), so every
+full-vector materialization of a spilled backend below goes through the
+``allow_dense()`` escape hatch — exactly the discipline S4 enforces.
+"""
+import gc
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.engine import sanitize
+from repro.core.engine.memory import MemoryPolicy
+from repro.core.engine.store import CondensedDistances
+from repro.core.engine.store_backends import RamSegments, SpilledSegments, _tri
+
+
+def _dist(rng, K):
+    """Random symmetric float32 distances with a zero diagonal."""
+    A = rng.random((K, K)).astype(np.float32)
+    A = ((A + A.T) / 2).astype(np.float32)
+    np.fill_diagonal(A, 0.0)
+    return A
+
+
+def _condensed(A):
+    """Ground-truth column-block condensed vector, built without the store."""
+    n = A.shape[0]
+    out = np.empty(_tri(n), dtype=np.float32)
+    off = 0
+    for j in range(n):
+        out[off : off + j] = A[:j, j]
+        off += j
+    return out
+
+
+def _spilled_policy(budget=1 << 11, seg_rows=4, spill_dir=None):
+    return MemoryPolicy(
+        mode="spilled",
+        byte_budget=budget,
+        spill_segment_rows=seg_rows,
+        spill_dir=spill_dir,
+    )
+
+
+def _admit_blocks(rng, M, B):
+    """A random (cross, square) admission pair for a store of M leaves."""
+    cross = rng.random((M, B)).astype(np.float32)
+    square = _dist(rng, B)
+    return cross, square
+
+
+def _grow_dense(A, cross, square):
+    """Dense-side mirror of ``append_block`` for ground truth."""
+    M, B = cross.shape
+    out = np.zeros((M + B, M + B), dtype=np.float32)
+    out[:M, :M] = A
+    out[:M, M:] = cross
+    out[M:, :M] = cross.T
+    out[M:, M:] = square
+    return out
+
+
+class TestRamSegmentsGrowth:
+    """Satellite: the O(K^2)-copy-per-admission regression."""
+
+    def test_16_admit_loop_never_recopies_per_admit(self):
+        """Across 16 admissions the backend reallocates only on geometric
+        capacity doublings — total bytes recopied stay O(final size), not
+        the O(sum of prefixes) the old per-admit ``np.concatenate`` paid."""
+        rng = np.random.default_rng(0)
+        A = _dist(rng, 64)
+        st = CondensedDistances.from_dense(A)
+        assert isinstance(st._backend, RamSegments)
+        naive_copied = 0
+        for _ in range(16):
+            naive_copied += st._backend.size  # what concatenate would copy
+            cross, square = _admit_blocks(rng, st.n, 8)
+            st.append_block(cross, square)
+        b = st._backend
+        # doubling from tri(64)=2016 to tri(192)=18336 entries: ~4 growths
+        assert b.reallocs <= 8
+        # geometric growth copies at most ~2x the final length in total;
+        # the old path would have copied the whole prefix on every admit
+        assert b.copied_elems <= 2 * b.size
+        assert b.copied_elems < naive_copied // 4
+        # and the contents are still exactly right
+        assert st.get(0, 1) == A[0, 1]
+
+    def test_append_validates_block_size(self):
+        b = RamSegments()
+        b.append(np.zeros(_tri(4), dtype=np.float32), 4)
+        with pytest.raises(ValueError, match="entries"):
+            b.append(np.zeros(3, dtype=np.float32), 2)  # needs tri(6)-tri(4)=9
+
+    def test_from_values_adopts_without_copy(self):
+        v = np.arange(_tri(5), dtype=np.float32)
+        b = RamSegments.from_values(v, 5)
+        assert b._buf is v and b.reallocs == 0 and b.copied_elems == 0
+
+
+class TestValuesReadOnlyView:
+    """Satellite: ``.values`` freezes a fresh view, never the base buffer."""
+
+    def test_values_is_read_only(self):
+        rng = np.random.default_rng(1)
+        st = CondensedDistances.from_dense(_dist(rng, 16))
+        v = st.values
+        assert v.flags.writeable is False
+        with pytest.raises(ValueError):
+            v[0] = 1.0
+
+    def test_values_does_not_poison_later_writes(self):
+        """Reading .values must leave the store (and its forks) writable —
+        the old implementation flipped the flag on a shared view chain."""
+        rng = np.random.default_rng(2)
+        st = CondensedDistances.from_dense(_dist(rng, 16))
+        before = st.values.copy()
+        assert st._backend._buf.flags.writeable is True  # base untouched
+        fork = st.copy()
+        cross, square = _admit_blocks(rng, st.n, 4)
+        st.append_block(cross, square)   # in-place tail write: must not raise
+        fork.append_block(cross, square)
+        after = st.values
+        assert after.flags.writeable is False
+        np.testing.assert_array_equal(after[: before.size], before)
+        np.testing.assert_array_equal(np.asarray(fork.values), after)
+
+
+class TestSpilledSegments:
+    def test_bitwise_parity_with_ram_backend(self):
+        """Same appends through both backends: every read path agrees
+        bitwise (the backend choice can never change labels)."""
+        rng = np.random.default_rng(3)
+        ram, spl = RamSegments(), SpilledSegments(budget=1 << 10, seg_cols=3)
+        cols = 0
+        for ncols in (5, 1, 8, 2, 16):
+            block = rng.random(_tri(cols + ncols) - _tri(cols)).astype(
+                np.float32
+            )
+            ram.append(block, ncols)
+            spl.append(block, ncols)
+            cols += ncols
+        assert spl.spilled_nbytes > 0 and spl.flushes > 0
+        assert spl.size == ram.size and spl.cols == ram.cols
+        flat = np.arange(ram.size, dtype=np.int64)
+        rng.shuffle(flat)
+        np.testing.assert_array_equal(spl.gather_flat(flat), ram.gather_flat(flat))
+        for t in flat[:32]:
+            assert spl.get_flat(t) == ram.get_flat(t)
+        with sanitize.allow_dense():
+            np.testing.assert_array_equal(spl.materialize(), ram.materialize())
+
+    def test_store_parity_admit_depart_vs_dense_tier(self):
+        """Full store lifecycle under a spilling policy stays bitwise equal
+        to the dense-tier store — including through admit and depart."""
+        rng = np.random.default_rng(4)
+        A = _dist(rng, 48)
+        ref = CondensedDistances.from_dense(A, policy=MemoryPolicy(mode="dense"))
+        st = CondensedDistances.from_dense(A, policy=_spilled_policy())
+        assert isinstance(st._backend, SpilledSegments)
+        assert st.spilled_nbytes > 0
+        cross, square = _admit_blocks(rng, 48, 8)
+        ref.append_block(cross, square)
+        st.append_block(cross, square)
+        idx = np.array([0, 3, 17, 50], dtype=np.int64)
+        keep_ref = ref.remove(idx)
+        keep = st.remove(idx)
+        np.testing.assert_array_equal(keep, keep_ref)
+        rows = np.arange(st.n, dtype=np.int64)
+        np.testing.assert_array_equal(st.rows(rows), ref.rows(rows))
+        assert st.get(2, 40) == ref.get(2, 40)
+        assert st.cold_segment_reads > 0
+
+    def test_cold_residency_stays_bounded(self):
+        """Row gathers touching every cold segment never hold more than the
+        cold budget plus one in-flight segment resident (the S4 bound)."""
+        rng = np.random.default_rng(5)
+        st = CondensedDistances.from_dense(_dist(rng, 64), policy=_spilled_policy())
+        b = st._backend
+        assert b.spilled_nbytes > b.cold_budget  # bound is actually binding
+        for i in range(0, 64, 8):
+            st.rows(np.arange(i, i + 8, dtype=np.int64))
+            assert b.cold_resident_bytes <= b.cold_budget + b.max_segment_nbytes
+        assert st.cold_segment_reads > 0
+
+    def test_fork_shares_spill_file_and_diverges_on_append(self):
+        """Satellite: forks share the mmap'd cold segments + spill file;
+        appends diverge into disjoint file regions (no double-flush, no
+        cross-fork corruption), each fork bitwise equal to its own dense
+        reference."""
+        rng = np.random.default_rng(6)
+        A = _dist(rng, 40)
+        st = CondensedDistances.from_dense(A, policy=_spilled_policy())
+        size_at_fork = st._backend._file.size
+        ncold_at_fork = len(st._backend._cold)
+        fork = st.copy()
+        # shared: same _SpillFile object, same immutable cold segment objects
+        assert fork._backend._file is st._backend._file
+        assert all(
+            fork._backend._cold[k] is st._backend._cold[k]
+            for k in range(ncold_at_fork)
+        )
+        # diverge: different admissions on each side
+        c1, s1 = _admit_blocks(rng, 40, 8)
+        c2, s2 = _admit_blocks(rng, 40, 8)
+        st.append_block(c1, s1)   # 8 new columns: past the hot budget, so
+        fork.append_block(c2, s2)  # each side flushes its own divergent tail
+        # pre-fork cold segments were not re-flushed (append-only regions)
+        assert st._backend._file.size >= size_at_fork
+        new_parent = [s for s in st._backend._cold[ncold_at_fork:]]
+        new_fork = [s for s in fork._backend._cold[ncold_at_fork:]]
+        spans = sorted(
+            (int(s.values.offset), int(s.values.offset) + s.nbytes)
+            for s in new_parent + new_fork
+        )
+        assert all(a1 <= b0 for (_, a1), (b0, _) in zip(spans, spans[1:]))
+        assert all(b0 >= size_at_fork for b0, _ in spans)
+        # no cross-fork corruption: each side bitwise equals its reference
+        ref1 = _condensed(_grow_dense(A, c1, s1))
+        ref2 = _condensed(_grow_dense(A, c2, s2))
+        with sanitize.allow_dense():
+            np.testing.assert_array_equal(np.asarray(st.values), ref1)
+            np.testing.assert_array_equal(np.asarray(fork.values), ref2)
+
+    def test_spill_file_unlinked_with_last_reference(self, tmp_path):
+        rng = np.random.default_rng(7)
+        st = CondensedDistances.from_dense(
+            _dist(rng, 40), policy=_spilled_policy(spill_dir=str(tmp_path))
+        )
+        path = st._backend.spill_path
+        assert os.path.exists(path) and os.path.dirname(path) == str(tmp_path)
+        fork = st.copy()
+        del st
+        gc.collect()
+        assert os.path.exists(path)  # the fork still references the file
+        del fork
+        gc.collect()
+        assert not os.path.exists(path)
+
+
+class TestAutoBackendMigration:
+    def test_admit_past_budget_spills_and_depart_returns_to_ram(self):
+        """An ``auto`` policy crosses the spill threshold on admit (RAM ->
+        spilled, streamed) and returns on depart (spilled -> RAM), with
+        contents bitwise stable across both migrations."""
+        rng = np.random.default_rng(8)
+        A = _dist(rng, 100)
+        pol = MemoryPolicy(
+            mode="auto", byte_budget=24000, band_rows=64, spill_segment_rows=8
+        )
+        st = CondensedDistances.from_dense(A, policy=pol)
+        assert isinstance(st._backend, RamSegments)  # 2*100*99 <= 24000
+        cross, square = _admit_blocks(rng, 100, 20)
+        st.append_block(cross, square)  # 2*120*119 > 24000 -> spill
+        assert isinstance(st._backend, SpilledSegments)
+        assert st.spilled_nbytes > 0
+        grown = _grow_dense(A, cross, square)
+        with sanitize.allow_dense():
+            np.testing.assert_array_equal(np.asarray(st.values), _condensed(grown))
+        keep = st.remove(np.arange(100, 120, dtype=np.int64))
+        assert isinstance(st._backend, RamSegments)  # back under the budget
+        np.testing.assert_array_equal(keep, np.arange(100))
+        np.testing.assert_array_equal(np.asarray(st.values), _condensed(A))

@@ -11,7 +11,9 @@ R2  dtype-contract        — no dtype-less numpy array constructors inside the
                             (``src/repro/core/engine/``, ``core/measures.py``).
 R3  dense-materialization — ``.dense()`` / ``.dense_ro()`` calls only in the
                             dense-tier allowlist (engine internals, the
-                            legacy API shims, tests, benchmarks).
+                            legacy API shims, tests, benchmarks); direct
+                            segment-file mapping (``np.memmap`` /
+                            ``mmap.mmap``) only in the store backend module.
 R4  host-sync-hot-path    — no ``float()`` / ``.item()`` / ``np.asarray()``
                             host syncs inside functions reachable from the
                             proximity/replay hot paths in jax modules.
@@ -95,6 +97,17 @@ DENSE_ALLOWED = (
     "tests/",
 )
 _R3_ATTRS = ("dense", "dense_ro")
+
+# Segmented-store extension of R3: the spilled tier's segment files are an
+# implementation detail of the store backend — mapping them directly from
+# anywhere else (np.memmap / mmap.mmap) bypasses the residency accounting
+# that keeps spilled-tier RSS budget-bounded.  Only the backend module (and
+# tests, which inject hostile cases by design) may.
+SEGMENT_ALLOWED = (
+    "src/repro/core/engine/store_backends.py",
+    "tests/",
+)
+_R3_SEGMENT_CALLS = (("np", "memmap"), ("numpy", "memmap"), ("mmap", "mmap"))
 
 # --- R4 ---------------------------------------------------------------------
 
@@ -268,6 +281,7 @@ def _zone(rel: str, prefixes: Iterable[str]) -> bool:
 def _check_calls(fi: FileInfo, out: list[Finding]) -> None:
     in_dtype_zone = _zone(fi.rel, DTYPE_ZONE)
     dense_ok = _zone(fi.rel, DENSE_ALLOWED)
+    seg_ok = _zone(fi.rel, SEGMENT_ALLOWED)
     for node in ast.walk(fi.tree):
         if not isinstance(node, ast.Call):
             continue
@@ -335,6 +349,21 @@ def _check_calls(fi: FileInfo, out: list[Finding]) -> None:
                 f".{node.func.attr}() materializes a (K, K) view — only "
                 "dense-tier code, the legacy API shims, tests and benchmarks "
                 "may; stream through gather_rows instead",
+            ))
+
+        # R3 — direct segment-file mapping outside the store backend
+        if (
+            not seg_ok
+            and len(chain) == 2
+            and tuple(chain) in _R3_SEGMENT_CALLS
+        ):
+            out.append(Finding(
+                fi.rel, node.lineno, node.col_offset, "R3",
+                f"{chain[0]}.{chain[1]}() maps a segment file directly — "
+                "only the store backend module "
+                "(src/repro/core/engine/store_backends.py) and tests may; "
+                "read spilled data through CondensedDistances / "
+                "SpilledSegments so cold-page residency stays accounted",
             ))
 
 
