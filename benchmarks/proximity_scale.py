@@ -40,6 +40,14 @@ with a bitwise gate that batched served labels equal one-by-one
 snapshot-epoch isolation) that ``--quick`` runs in CI; ``--serving`` runs
 only the full serving sweep and merges its section into the existing json.
 
+A ``move_parity`` section gates the engine's fused ``move`` (drift-aware
+signature refresh): under every memory tier the one-pass fused move must
+reproduce bitwise the labels of sequential depart-then-admit (canonical)
+and of a full re-clustering of the post-move store; ``--quick`` runs it in
+CI.  A ``drift_churn`` section (full sweep only) times the fused move
+against the sequential composition at K=2048 / B=64, gating the speedup at
+``DRIFT_SPEEDUP_GATE`` with canonical-label CRC parity.
+
 A ``family_parity`` section gates the pluggable signature families
 (repro.core.signatures): the registry-dispatched ``svd`` family must be
 bitwise-identical — signatures, cluster labels and dendrogram merge script
@@ -55,10 +63,11 @@ Run: PYTHONPATH=src python benchmarks/proximity_scale.py [--full | --quick]
 solver against the dense reference, the 4-device label check at K=128, the
 engine-vs-full-re-cluster streaming parity check, the queue-drain parity
 check, the signature-family gates, the bootstrap-prepare bitwise check,
-and the cross-tier memory-policy parity check; nonzero exit on any parity
-failure.  ``--quick`` does not rerun the expensive sweeps: it merges only
-its own ``family_parity`` / ``streaming_bootstrap`` sections into an
-existing BENCH_proximity_scale.json (no other fields are touched).
+the cross-tier memory-policy parity check, and the fused-move parity
+check; nonzero exit on any parity failure.  ``--quick`` does not rerun the
+expensive sweeps: it merges only its own ``family_parity`` /
+``streaming_bootstrap`` / ``serving_parity`` / ``move_parity`` sections
+into an existing BENCH_proximity_scale.json (no other fields are touched).
 (also registered as the ``proximity_scale`` suite of benchmarks.run).
 
 Every field of the emitted json is documented in ``docs/BENCHMARKS.md``.
@@ -598,6 +607,154 @@ def _memory_parity_rows(record, rows):
     return ok
 
 
+def _move_parity_rows(record, rows):
+    """Fused-move bitwise parity gate (--quick CI smoke).
+
+    Under every memory tier, ``engine.move`` (one replay pass) must
+    reproduce — bitwise — (a) the dense tier's labels, (b) the canonical
+    labels of the *sequential* depart-then-admit composition it fuses, and
+    (c) a full re-clustering of the post-move store (the oracle).  Stable
+    labels differ between fused and sequential by design (movers keep
+    their client ids under move; depart+admit assigns fresh ones), so the
+    cross-path gate is on canonical labels.
+    """
+    import zlib
+
+    from repro.core.engine import ClusterEngine, EngineConfig
+    from repro.core.hc import hierarchical_clustering
+
+    K, B = 192, 12
+    movers = np.arange(30, 30 + B, dtype=np.int64)
+    U_all = _clustered_signatures(K + B, n_bases=16, seed=7)
+    U_ref = U_all[K:]
+    A = np.asarray(proximity_matrix(U_all[:K], "eq3", backend="jnp_blocked"))
+    beta = float(np.quantile(A[A > 0], 0.05))
+    results = {}
+    ok = True
+    for mode in ("dense", "banded", "condensed_only", "auto", "spilled"):
+        spill = (
+            {"memory_budget_bytes": 1 << 14, "spill_segment_rows": 64}
+            if mode == "spilled"
+            else {}
+        )
+        cfg = EngineConfig(
+            beta=beta, measure="eq3", memory=mode, band_rows=16, **spill
+        )
+        eng = ClusterEngine.from_proximity(A, U_all[:K], cfg)
+        seq = eng.copy()
+        res = eng.move(movers, U_ref)
+        seq.depart(movers)
+        seq.admit(U_ref)
+        oracle = hierarchical_clustering(
+            eng.dense(np.float64), beta=beta, linkage="average"
+        )
+        ok &= bool(
+            np.array_equal(res.canonical, seq.canonical_labels)
+            and np.array_equal(res.canonical, oracle)
+        )
+        results[mode] = (eng.labels.copy(), eng.canonical_labels.copy())
+    ok &= all(
+        np.array_equal(results[m][0], results["dense"][0])
+        and np.array_equal(results[m][1], results["dense"][1])
+        for m in results
+    )
+    record["move_parity"] = {
+        "K": K, "B": B, "modes": sorted(results), "labels_bitwise": ok,
+        "canonical_crc": int(zlib.crc32(np.ascontiguousarray(
+            results["dense"][1].astype(np.int64)).tobytes())),
+    }
+    rows.append(("proximity_scale/move_parity", None, f"bitwise={ok}"))
+    return ok
+
+
+DRIFT_K = 2048
+DRIFT_B = 64
+DRIFT_SPEEDUP_GATE = 1.3
+
+
+def _drift_churn_rows(record, rows, iters: int = 3):
+    """Fused-move speedup gate at scale (full sweep only).
+
+    ``move`` replaces sequential depart+admit's two replay passes (plus
+    two stable-label remaps and an extra store compaction bookkeeping
+    round) with one of each; at K=2048 / B=64 the fused path must be at
+    least ``DRIFT_SPEEDUP_GATE``x faster with canonical-label CRC parity.
+
+    Measured in the ``condensed_only`` memory tier — the streaming regime
+    the fused move targets.  A dense-mirror tier spends most of each
+    churn call on shared mirror maintenance (identical for both paths),
+    which drowns the replay saving in co-tenant load noise; with the
+    condensed store alone, replay dominates and the dirty-merge ratio
+    (one fused pass vs depart's + admit's) shows through.  Iterations
+    are interleaved (fused, sequential, fused, ...) and the gated
+    statistic is the *median of per-pair ratios*: adjacent runs see the
+    same machine load, so each ratio is load-normalized even when a
+    spike spans several seconds.
+    """
+    import time as _time
+    import zlib
+
+    from repro.core.engine import ClusterEngine, EngineConfig
+
+    K, B = DRIFT_K, DRIFT_B
+    U_all = _clustered_signatures(K + B, n_bases=64, seed=13)
+    U_ref = U_all[K:]
+    # movers spread across the roster, not one contiguous range
+    movers = np.linspace(0, K - 1, B).astype(np.int64)
+    A = np.asarray(proximity_matrix(U_all[:K], "eq3", backend="jnp_blocked"))
+    beta = float(np.quantile(A[A > 0], 0.05))
+    cfg = EngineConfig(beta=beta, measure="eq3", memory="condensed_only")
+    base = ClusterEngine.from_proximity(A, U_all[:K], cfg)
+
+    def fused(e):
+        e.move(movers, U_ref)
+        return e
+
+    def sequential(e):
+        e.depart(movers)
+        e.admit(U_ref)
+        return e
+
+    def timed_once(fn):
+        eng = base.copy()
+        t0 = _time.perf_counter()
+        out = fn(eng)
+        return (_time.perf_counter() - t0) * 1e6, out
+
+    fused(base.copy())  # warmup: compile the (M, B) cross-block kernels
+    sequential(base.copy())
+    fused_ts, seq_ts = [], []
+    for _ in range(iters):
+        us, fused_eng = timed_once(fused)
+        fused_ts.append(us)
+        us, seq_eng = timed_once(sequential)
+        seq_ts.append(us)
+    fused_us, seq_us = min(fused_ts), min(seq_ts)
+    ratios = sorted(s / f for f, s in zip(fused_ts, seq_ts))
+    pair_speedup = ratios[len(ratios) // 2]
+
+    def crc(labels):
+        return int(zlib.crc32(np.ascontiguousarray(
+            np.asarray(labels, dtype=np.int64)).tobytes()))
+
+    crc_fused = crc(fused_eng.canonical_labels)
+    crc_seq = crc(seq_eng.canonical_labels)
+    parity = crc_fused == crc_seq
+    record["drift_churn"] = {
+        "K": K, "B": B, "iters": iters,
+        "fused_move_us": fused_us, "depart_admit_us": seq_us,
+        "speedup": pair_speedup, "speedup_gate": DRIFT_SPEEDUP_GATE,
+        "min_ratio_speedup": seq_us / max(fused_us, 1e-9),
+        "canonical_crc_fused": crc_fused, "canonical_crc_seq": crc_seq,
+        "crc_parity": parity,
+    }
+    rows.append((
+        f"proximity_scale/drift_churn_K{K}_B{B}_fused", fused_us,
+        f"speedup={pair_speedup:.2f}x crc_parity={parity}",
+    ))
+    return parity and pair_speedup >= DRIFT_SPEEDUP_GATE
+
+
 def _family_parity_rows(record, rows):
     """Signature-family gates (always run, --quick included).
 
@@ -1102,13 +1259,18 @@ def run(quick: bool = True, parity_only: bool = False):
         # subprocess-isolated; --quick keeps only the in-process gate above
         memory_ok &= _memory_rows(record, rows)
 
+    move_ok = _move_parity_rows(record, rows)
+    if not parity_only:
+        # fused-move speedup + CRC parity at K=2048 (full sweep only)
+        move_ok &= _drift_churn_rows(record, rows, iters=3 if quick else 5)
+
     parity_ok = all(
         e["max_err_vs_ref_deg"] <= PARITY_TOL_DEG for e in record["parity"]
     ) and all(
         r["hc_labels_identical"] and r["max_dev_deg"] <= PARITY_TOL_DEG
         for r in sharded["rows"]
     ) and (streaming_ok and queue_ok and serving_ok and memory_ok
-           and family_ok and bootstrap_ok)
+           and family_ok and bootstrap_ok and move_ok)
     record["parity_ok"] = parity_ok
     rows.append((
         f"proximity_scale/parity_K{PARITY_K}_ok", None, str(parity_ok)
@@ -1132,6 +1294,10 @@ def run(quick: bool = True, parity_only: bool = False):
     assert memory_ok, (
         "memory-policy tiers diverged from the dense tier's labels"
     )
+    assert move_ok, (
+        "fused move diverged from sequential depart+admit / the re-cluster "
+        "oracle, or missed the drift_churn speedup gate"
+    )
     assert family_ok, (
         "signature-family gate failed: svd family diverged from the "
         "pre-refactor inline path, or a family run produced no clustering"
@@ -1153,6 +1319,7 @@ def run(quick: bool = True, parity_only: bool = False):
         existing["family_parity"] = record["family_parity"]
         existing["streaming_bootstrap"] = record["streaming_bootstrap"]
         existing["serving_parity"] = record["serving_parity"]
+        existing["move_parity"] = record["move_parity"]
         out.write_text(json.dumps(existing, indent=2))
         rows.append(("proximity_scale/json_merged", None, str(out)))
     return rows

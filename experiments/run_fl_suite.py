@@ -31,6 +31,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.pacfl import PACFLConfig
 from repro.data import make_dataset
+from repro.data.synthetic import DriftGenerator, DriftSpec
 from repro.fl import FLConfig, dirichlet_skew, label_skew, mix_datasets, run_federation
 from repro.fl.trainer import ChurnEvent
 from repro.models.cnn import init_mlp_clf, mlp_clf_apply
@@ -185,6 +186,35 @@ def main():
     ]
     _run(f"churn_label20_cifar10s{sfx}", ["pacfl"], base, ds.n_classes,
          fl_cfg(R, fam_pacfl(PACFL_LS, fam)), seeds=(0,), churn=churn)
+
+    # ---- Drift: clients whose distributions move mid-federation -------------
+    # A covariate-drift schedule (exact subspace rotation per round —
+    # repro.data.synthetic.DriftGenerator) refreshes the first n_drift
+    # clients' signatures at R//3 and 2R//3; PACFL routes the drained
+    # refresh batches through the engine's fused move, so drifted clients
+    # migrate clusters without losing their stable ids.
+    drift_clients = label_skew(ds, N_CLIENTS, rho=0.2, seed=2, test_per_client=100)
+    gen = DriftGenerator(
+        DriftSpec(kind="covariate", angle_per_round_deg=25.0, rank=6, seed=0),
+        DIM,
+    )
+    n_drift = max(2, N_CLIENTS // 10)
+
+    def drift_event(rnd: int) -> ChurnEvent:
+        refresh = []
+        for pos in range(n_drift):
+            c = drift_clients[pos]
+            x2, y2 = gen.apply(
+                f"client-{pos}", rnd, np.asarray(c.x_train), np.asarray(c.y_train)
+            )
+            refresh.append(
+                (pos, dataclasses.replace(c, x_train=x2, y_train=y2))
+            )
+        return ChurnEvent(rnd=rnd, refresh=refresh)
+
+    drift = [drift_event(max(1, R // 3)), drift_event(max(2, 2 * R // 3))]
+    _run(f"drift_label20_cifar10s{sfx}", ["pacfl"], drift_clients, ds.n_classes,
+         fl_cfg(R, fam_pacfl(PACFL_LS, fam)), seeds=(0,), churn=drift)
 
     print(f"suite done in {(time.time()-t0)/60:.1f} min")
 

@@ -5,12 +5,14 @@ from repro.core.engine.dendrogram import (
     filter_script_for_depart,
     replay,
 )
+from repro.core.engine.drift import ClusterDrift, DriftReport, DriftTracker
 from repro.core.engine.engine import (
     AdmitResult,
     ClusterEngine,
     DepartResult,
     EngineConfig,
     MembershipSnapshot,
+    MoveResult,
 )
 from repro.core.engine.memory import BandedRowCache, MemoryPolicy, StoreMemory
 from repro.core.engine.store import CondensedDistances
@@ -19,12 +21,16 @@ from repro.core.engine.store_backends import RamSegments, Segment, SpilledSegmen
 __all__ = [
     "AdmitResult",
     "BandedRowCache",
+    "ClusterDrift",
     "ClusterEngine",
     "CondensedDistances",
     "DepartResult",
+    "DriftReport",
+    "DriftTracker",
     "EngineConfig",
     "MembershipSnapshot",
     "MemoryPolicy",
+    "MoveResult",
     "RamSegments",
     "ReplayStats",
     "Segment",

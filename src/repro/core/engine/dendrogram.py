@@ -12,7 +12,11 @@ Admission and departure both reduce to the same replay problem: a forest of
 script is still exact for them), plus **dirty** clusters that deviate from
 the script — newcomer singletons on admit; on depart, the survivors of
 dropped merges, promoted lazily via *tombstone* entries the script rewrite
-leaves at the drop heights (:func:`filter_script_for_depart`).  The replay
+leaves at the drop heights (:func:`filter_script_for_depart`).  The two
+dirty sources compose: :func:`replay` accepts a tombstoned script AND
+dirty singletons *in the same pass*, which is what makes the engine's
+fused ``move`` (signature refresh — depart the stale rows, re-admit the
+refreshed ones) a single replay instead of two.  The replay
 walks the script in height order, maintaining a Lance-Williams distance
 *vector* (one row per dirty cluster, slots = leaf representatives) instead
 of the full matrix:

@@ -17,7 +17,10 @@ The pre-engine lifecycle was batch-synchronous: every newcomer batch went
 ``admit(U_new)`` costs the O((M+B) * B) proximity blocks plus near-O(B * K)
 dendrogram maintenance (clean script runs fold *en bloc* — see the
 dendrogram module); ``depart(ids)`` is the symmetric delete — a scenario
-the batch API could not express at all.  Both reproduce the labels a full
+the batch API could not express at all; ``move(ids, U_new)`` is the fused
+composition for *drifted* clients (signature refresh): tombstoned depart
+and dirty-singleton re-admission in a single replay pass, with the movers
+keeping their stable client ids.  All reproduce the labels a full
 re-clustering of the current distance matrix would produce (oracle-checked
 up to degenerate distance ties; see the dendrogram module docstring).
 Server memory is governed by a tiered policy
@@ -161,6 +164,27 @@ class DepartResult:
     departed: np.ndarray          # stable ids removed
     labels: np.ndarray            # (K',) stable labels of the survivors
     canonical: np.ndarray         # (K',) full-re-cluster-parity labels
+    stats: ReplayStats
+
+
+@dataclass
+class MoveResult:
+    """Outcome of one fused signature-refresh move (:meth:`ClusterEngine.move`).
+
+    The movers keep their stable **client** ids (same client, refreshed
+    signature); their *cluster* labels may change — that is the point.
+    ``canonical`` carries the usual full-re-cluster-parity guarantee for the
+    post-move roster.  ``changed`` flags movers whose stable cluster label
+    differs from their pre-move one — the drifted clients that actually
+    migrated.
+    """
+
+    moved: np.ndarray             # (B,) stable ids whose signatures moved
+    labels: np.ndarray            # (K,) stable labels after the move
+    moved_labels: np.ndarray      # (B,) stable labels of the movers
+    changed: np.ndarray           # (B,) bool — mover's cluster label changed
+    new_cluster: np.ndarray       # (B,) bool — mover landed in a fresh cluster
+    canonical: np.ndarray         # (K,) full-re-cluster-parity labels
     stats: ReplayStats
 
 
@@ -462,6 +486,118 @@ class ClusterEngine:
         return DepartResult(
             departed=departed_ids,
             labels=stable.copy(),
+            canonical=canonical.copy(),
+            stats=stats,
+        )
+
+    def move(self, client_ids: np.ndarray, U_new: jnp.ndarray) -> MoveResult:
+        """Fused depart+admit: migrate drifted clients in ONE replay pass.
+
+        ``client_ids`` are stable engine ids whose signatures have drifted;
+        ``U_new[t]`` is the refreshed (n, p) signature of ``client_ids[t]``.
+        The sequential schedule (``depart(ids)`` then ``admit(U_new)``) pays
+        two full script replays and two stable-label remaps; the fused move
+        exploits that :func:`~repro.core.engine.dendrogram.replay` natively
+        handles a tombstoned script AND dirty singletons *simultaneously*:
+        the movers' old rows are tombstoned out of the script
+        (:func:`filter_script_for_depart`) and their refreshed signatures
+        re-enter as dirty singletons in the same pass — one store
+        compaction, one cross-block append, one replay, one remap, one
+        version bump.
+
+        Parity: the final distance store is bitwise the sequential
+        schedule's (same survivors, same refreshed cross blocks), so
+        ``canonical`` labels equal both the sequential depart-then-admit
+        result and a full re-clustering of the post-move store — under
+        every memory tier (gated in ``--quick`` CI and the fuzz suite).
+        Stable *cluster* labels are remapped against the pre-move
+        partition, so a mover whose refreshed signature still belongs to
+        its old cluster keeps that cluster's label and its model; unlike
+        the sequential schedule, the movers also keep their stable
+        *client* ids (same client, new signature).
+        """
+        from repro.core.pme import proximity_blocks, remap_onto_old_ids
+
+        client_ids = np.atleast_1d(np.asarray(client_ids, dtype=np.int64))
+        U_new = jnp.asarray(U_new)
+        B = int(client_ids.size)
+        if B == 0:
+            raise ValueError("move needs at least one client")
+        if np.unique(client_ids).size != B:
+            raise ValueError("duplicate client ids in move")
+        if int(U_new.shape[0]) != B:
+            raise ValueError(
+                f"U_new has {int(U_new.shape[0])} signatures for {B} clients"
+            )
+        id_pos = {int(c): p for p, c in enumerate(self.ids)}
+        missing = [int(c) for c in client_ids if int(c) not in id_pos]
+        if missing:
+            raise KeyError(f"unknown client ids: {missing}")
+        pos = np.array([id_pos[int(c)] for c in client_ids], dtype=np.int64)
+        K = self.store.n
+        prev_labels = self._stable[pos].copy()
+        cfg = self.config
+        if B == K:  # whole-roster refresh: re-bootstrap, keeping id lineage
+            nid, ver = self._next_id, self.version
+            eng = ClusterEngine.from_signatures(U_new, cfg)
+            self.__dict__.update(eng.__dict__)
+            self.ids = client_ids.copy()
+            self._next_id = nid
+            self.version = ver + 1
+            stats = ReplayStats()
+            self.last_stats = stats
+            moved_labels = self._stable.copy()
+            return MoveResult(
+                moved=client_ids.copy(),
+                labels=self._stable.copy(),
+                moved_labels=moved_labels,
+                changed=moved_labels != prev_labels,
+                new_cluster=np.ones(B, dtype=bool),
+                canonical=self._canonical.copy(),
+                stats=stats,
+            )
+        kept_script = filter_script_for_depart(self._script, K, pos)
+        keep = self.store.remove(np.sort(pos))
+        inv = np.full(K, -1, dtype=np.int64)
+        inv[keep] = np.arange(keep.size, dtype=np.int64)
+        script_new = [
+            (int(inv[a]), int(inv[b]) if b >= 0 else -1, h)
+            for a, b, h in kept_script
+        ]
+        M = int(keep.size)
+        U_keep = jnp.take(self.U, jnp.asarray(keep), axis=0)
+        cross, square = proximity_blocks(
+            U_keep, U_new,
+            measure=cfg.measure, backend=cfg.backend, block_size=cfg.block_size,
+        )
+        self.store.append_block(cross, square)
+        self.U = jnp.concatenate([U_keep, U_new.astype(U_keep.dtype)], axis=0)
+        old_stable = self._stable[keep]
+        # movers keep their stable client ids, re-entering at tail positions
+        self.ids = np.concatenate([self.ids[keep], client_ids])
+
+        canonical, script, stats = replay(
+            self.store,
+            script_new,
+            [[M + t] for t in range(B)],
+            **self._criterion(),
+        )
+        stable = remap_onto_old_ids(canonical, old_stable, M)
+        self._canonical = canonical
+        self._stable = stable
+        self._script = script
+        self.last_stats = stats
+        self.version += 1
+        moved_labels = stable[M:]
+        seen = set(stable[:M].tolist())
+        return MoveResult(
+            moved=client_ids.copy(),
+            labels=stable.copy(),
+            moved_labels=moved_labels.copy(),
+            changed=moved_labels != prev_labels,
+            new_cluster=np.array(
+                [l not in seen for l in moved_labels], dtype=bool
+            ),
             canonical=canonical.copy(),
             stats=stats,
         )

@@ -1,4 +1,18 @@
 """Synthetic datasets with controllable subspace structure."""
-from repro.data.synthetic import DATASET_NAMES, SyntheticDataset, data_matrix, make_dataset
+from repro.data.synthetic import (
+    DATASET_NAMES,
+    DriftGenerator,
+    DriftSpec,
+    SyntheticDataset,
+    data_matrix,
+    make_dataset,
+)
 
-__all__ = ["DATASET_NAMES", "SyntheticDataset", "make_dataset", "data_matrix"]
+__all__ = [
+    "DATASET_NAMES",
+    "DriftGenerator",
+    "DriftSpec",
+    "SyntheticDataset",
+    "make_dataset",
+    "data_matrix",
+]

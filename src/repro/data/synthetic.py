@@ -157,3 +157,119 @@ def make_dataset(
 def data_matrix(x: np.ndarray) -> np.ndarray:
     """Arrange samples as *columns* (paper footnote 2): (N_features, M)."""
     return np.ascontiguousarray(x.T)
+
+
+# -- drift schedules ---------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DriftSpec:
+    """Schedule for a client's local distribution shift over rounds.
+
+    kind: ``"covariate"`` rotates a rank-``rank`` slice of the client's
+        data subspace by exactly ``angle_per_round_deg * rnd`` degrees — the
+        drifted signature's principal angles against the original are
+        *analytically* the rotation angle, so drift magnitude is a control
+        knob, not an emergent property.  ``"label"`` resamples the client's
+        data under a fresh Dirichlet(``label_gamma``) class distribution
+        each round (the classic label-shift model; smaller gamma = more
+        skew).
+    seed: root of the RNG tree.  Every stream is keyed
+        ``[seed, crc32(name), ...]`` — process-stable (see
+        :func:`_name_digest`'s note on the salted-``hash()`` bug), so
+        identical schedules reproduce bitwise across interpreters.
+    """
+
+    kind: str = "covariate"
+    angle_per_round_deg: float = 5.0
+    rank: int = 4
+    label_gamma: float = 0.5
+    seed: int = 0
+
+
+class DriftGenerator:
+    """Deterministic per-client drift: ``apply(name, rnd, x, y)``.
+
+    ``name`` keys the client's private drift directions (stable across
+    rounds — a client drifts along one trajectory, not a fresh one per
+    round) and ``rnd`` the position along the schedule.  The same
+    ``(spec, dim, name, rnd)`` always produces the same output arrays, in
+    any process: the generator holds no mutable state.
+
+    Covariate drift is an exact plane rotation: with ``(B, C)`` an
+    orthonormal ``(dim, 2 * rank)`` frame private to the client,
+
+        x' = x + (x @ B) @ ((cos(theta) - 1) B + sin(theta) C)^T
+
+    maps each basis direction ``b_i`` to ``cos(theta) b_i + sin(theta)
+    c_i`` and leaves the orthogonal complement untouched — every principal
+    angle between ``span(B)`` and its drifted image is exactly ``theta =
+    rnd * angle_per_round_deg``.
+    """
+
+    def __init__(self, spec: DriftSpec, dim: int):
+        if spec.kind not in ("covariate", "label"):
+            raise ValueError(
+                f"unknown drift kind {spec.kind!r}; have covariate | label"
+            )
+        if spec.kind == "covariate" and 2 * spec.rank > dim:
+            raise ValueError(
+                f"rank {spec.rank} needs a 2x complement inside dim {dim}"
+            )
+        self.spec = spec
+        self.dim = int(dim)
+
+    def _rng(self, name: str, *extra: int) -> np.random.Generator:
+        return np.random.default_rng(
+            [self.spec.seed, _name_digest(str(name)), *map(int, extra)]
+        )
+
+    def frame(self, name: str) -> tuple[np.ndarray, np.ndarray]:
+        """The client's private rotation frame ``(B, C)``, float64
+        ``(dim, rank)`` each, orthonormal and mutually orthogonal."""
+        r = self.spec.rank
+        Q, _ = np.linalg.qr(self._rng(name).standard_normal((self.dim, 2 * r)))
+        return Q[:, :r], Q[:, r:]
+
+    def theta_deg(self, rnd: int) -> float:
+        """Cumulative rotation angle at round ``rnd`` (degrees)."""
+        return float(self.spec.angle_per_round_deg * int(rnd))
+
+    def apply(
+        self, name: str, rnd: int, x: np.ndarray, y: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Drift ``(x, y)`` to round ``rnd``'s distribution.
+
+        ``x`` is always the *original* (round-0) data: the schedule is
+        cumulative from the origin, not compounded from the previous
+        round, so replaying round ``rnd`` never depends on having applied
+        rounds ``1..rnd-1`` first.
+        """
+        if int(rnd) <= 0:
+            return np.asarray(x).copy(), np.asarray(y).copy()
+        if self.spec.kind == "covariate":
+            return self._covariate(name, rnd, x, y)
+        return self._label(name, rnd, x, y)
+
+    def _covariate(self, name, rnd, x, y):
+        B, C = self.frame(name)
+        theta = np.deg2rad(self.theta_deg(rnd))
+        delta = (np.cos(theta) - 1.0) * B + np.sin(theta) * C
+        x64 = np.asarray(x, dtype=np.float64)
+        x2 = x64 + (x64 @ B) @ delta.T
+        return x2.astype(np.asarray(x).dtype), np.asarray(y).copy()
+
+    def _label(self, name, rnd, x, y):
+        y = np.asarray(y)
+        rng = self._rng(name, int(rnd))
+        present = np.unique(y)
+        w = rng.dirichlet(np.full(present.size, self.spec.label_gamma))
+        drawn = rng.choice(present.size, size=y.size, p=w)
+        idx = np.empty(y.size, dtype=np.int64)
+        for c in range(present.size):
+            mask = drawn == c
+            if not mask.any():
+                continue
+            pool = np.where(y == present[c])[0]
+            idx[mask] = pool[rng.integers(0, pool.size, size=int(mask.sum()))]
+        return np.asarray(x)[idx].copy(), y[idx].copy()

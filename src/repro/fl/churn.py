@@ -3,11 +3,13 @@
 The paper's efficiency claim is that membership is decided *outside* the
 training loop — a one-shot SVD signature plus server-side principal-angle
 clustering.  :class:`ChurnQueue` makes the serving path match the math:
-clients may announce joins and departures at any time (e.g. while a round is
-in flight), newcomer signatures are computed **eagerly on enqueue**
-(signatures are membership-independent, so the SVD overlaps the running
-round), and the queue drains between rounds into :class:`ChurnBatch` units —
-departures plus admission batches whose size is picked by a
+clients may announce joins, departures, and signature *refreshes* (a client
+whose local distribution shifted re-uploads) at any time (e.g. while a round
+is in flight), newcomer and refreshed signatures are computed **eagerly on
+enqueue** (signatures are membership-independent, so the SVD overlaps the
+running round), and the queue drains between rounds into :class:`ChurnBatch`
+units — departures, admission batches, and exclusive refresh batches (the
+fused ``ClusterEngine.move`` input) whose size is picked by a
 :class:`DrainPolicy` fitted to the measured cross-block dispatch cost.
 
 Determinism: enqueue order is preserved — a drain applies departures and
@@ -45,14 +47,26 @@ class ChurnBatch:
     in order.  ``signatures`` stacks the eagerly computed (n, p) signatures
     of ``join`` — (B, n, p), or ``None`` when the queue has no signature
     function (global strategies).
+
+    ``refresh`` batches are **exclusive**: a batch carrying refreshes
+    carries no leaves or joins (the drain flushes on every kind boundary),
+    so the three apply phases never race inside one batch and the
+    positions in ``refresh`` unambiguously index the membership as this
+    batch is applied.  ``refresh_clients`` holds the replacement payloads
+    (same client identity, shifted local data) and ``refresh_signatures``
+    their eagerly re-computed (B, n, p) signature stack — the fused
+    ``ClusterEngine.move`` input.
     """
 
     leave: list[int] = field(default_factory=list)
     join: list[Any] = field(default_factory=list)
     signatures: Optional[jnp.ndarray] = None
+    refresh: list[int] = field(default_factory=list)
+    refresh_clients: list[Any] = field(default_factory=list)
+    refresh_signatures: Optional[jnp.ndarray] = None
 
     def __bool__(self) -> bool:
-        return bool(self.leave or self.join)
+        return bool(self.leave or self.join or self.refresh)
 
     def resolve_leaves(self, order):
         """Apply the sequential-leave contract to ``order`` (any sequence).
@@ -121,19 +135,26 @@ class DrainPolicy:
     deadline_s: Optional[float] = None
     priority_departures: bool = False
 
-    def estimated_batch_us(self, n_leave: int, n_join: int) -> float:
+    def estimated_batch_us(
+        self, n_leave: int, n_join: int, n_refresh: int = 0
+    ) -> float:
         """Modelled apply cost of one :class:`ChurnBatch` (microseconds).
 
         Each departure pays the fixed dispatch cost ``c0`` (a depart is a
         store compaction + replay dispatch); the admission, if any, pays
         ``c0 + c1 * n_join`` — the same cost model :meth:`measure` fits.
-        Deterministic: a pure function of the fitted constants.
+        A refresh batch is a *fused* depart+admit (one cross-block dispatch,
+        one replay), so it is modelled like an admission:
+        ``c0 + c1 * n_refresh``.  Deterministic: a pure function of the
+        fitted constants.
         """
         c0 = max(self.dispatch_cost_us, 0.0)
         c1 = max(self.per_newcomer_us, 0.0)
         us = n_leave * c0
         if n_join:
             us += c0 + c1 * n_join
+        if n_refresh:
+            us += c0 + c1 * n_refresh
         return us
 
     @property
@@ -205,10 +226,12 @@ class QueueStats:
 
     enqueued_joins: int = 0
     enqueued_leaves: int = 0
+    enqueued_refreshes: int = 0
     signature_us: float = 0.0     # eager SVD time overlapped with rounds
     drained_batches: int = 0
     drained_joins: int = 0
     drained_leaves: int = 0
+    drained_refreshes: int = 0
 
 
 class ChurnQueue:
@@ -248,6 +271,10 @@ class ChurnQueue:
     def pending_leaves(self) -> int:
         return sum(1 for kind, _, _ in self._ops if kind == "leave")
 
+    @property
+    def pending_refreshes(self) -> int:
+        return sum(1 for kind, _, _ in self._ops if kind == "refresh")
+
     # -- enqueue ------------------------------------------------------------
 
     def enqueue_join(self, client: Any) -> None:
@@ -267,9 +294,32 @@ class ChurnQueue:
         self._ops.append(("leave", int(pos), None))
         self.stats.enqueued_leaves += 1
 
+    def enqueue_refresh(self, pos: int, client: Any) -> None:
+        """Queue a signature refresh: the client at ``pos`` re-uploads with
+        shifted local data.  Like a join, the replacement signature is
+        computed **now** (the re-SVD overlaps the in-flight round); like a
+        leave, ``pos`` indexes the membership as it will stand after all
+        earlier queued operations have applied.  A refresh never changes
+        the membership size, so positions inside one refresh run are
+        mutually independent."""
+        sig = None
+        if self.signature_fn is not None:
+            t0 = time.perf_counter()
+            sig = self.signature_fn(client)
+            self.stats.signature_us += (time.perf_counter() - t0) * 1e6
+        self._ops.append(("refresh", (int(pos), client), sig))
+        self.stats.enqueued_refreshes += 1
+
     def enqueue_event(self, event) -> None:
         """Thin adapter for a :class:`~repro.fl.trainer.ChurnEvent`:
-        departures enqueue before joins, matching the synchronous order.
+        refreshes enqueue first, then departures, then joins, matching the
+        synchronous order.
+
+        An event's ``refresh`` positions index the membership *as the event
+        fires*; enqueueing them before the event's leaves (and a refresh
+        not changing the size) keeps those indices valid under the queue's
+        sequential contract.  Duplicate refresh positions are ambiguous
+        (which payload wins?) and raise.
 
         An event's ``leave`` list is *simultaneous* (all positions index the
         list as the event fires, and duplicates collapse to one removal,
@@ -279,6 +329,16 @@ class ChurnQueue:
         lower position unshifted, which makes the sequential application
         identical to the simultaneous one.
         """
+        refresh = list(getattr(event, "refresh", ()) or ())
+        seen: set[int] = set()
+        for pos, _ in refresh:
+            if int(pos) in seen:
+                raise ValueError(
+                    f"duplicate refresh position {int(pos)} in event"
+                )
+            seen.add(int(pos))
+        for pos, client in refresh:
+            self.enqueue_refresh(pos, client)
         for pos in sorted(set(event.leave), reverse=True):
             self.enqueue_leave(pos)
         for client in event.join:
@@ -303,17 +363,25 @@ class ChurnQueue:
         c0 = max(policy.dispatch_cost_us, 0.0)
         c1 = max(policy.per_newcomer_us, 0.0)
         spent = 0.0
-        run = 0  # joins in the current (unflushed) admission batch
+        jrun = 0  # joins in the current (unflushed) admission batch
+        rrun = 0  # refreshes in the current (unflushed) fused-move batch
         limit = 0
         for kind, _, _ in self._ops:
             if kind == "leave":
                 cost = c0
-                run = 0
+                jrun = rrun = 0
+            elif kind == "refresh":
+                cost = c1 + (c0 if rrun == 0 else 0.0)
+                jrun = 0
+                rrun += 1
+                if rrun == B:
+                    rrun = 0
             else:
-                cost = c1 + (c0 if run == 0 else 0.0)
-                run += 1
-                if run == B:
-                    run = 0
+                cost = c1 + (c0 if jrun == 0 else 0.0)
+                rrun = 0
+                jrun += 1
+                if jrun == B:
+                    jrun = 0
             if limit and spent + cost > budget_us:
                 break
             spent += cost
@@ -332,10 +400,14 @@ class ChurnQueue:
 
         Arrival order is preserved: departures bound join runs, adjacent
         joins coalesce into admission batches of at most
-        ``policy.batch_size``.  With ``force=False`` a trailing join-only
+        ``policy.batch_size``, and adjacent refreshes coalesce into
+        **exclusive** fused-move batches of at most ``policy.batch_size``
+        (every kind boundary flushes, so no batch mixes refreshes with
+        leaves or joins).  With ``force=False`` a trailing join-only
         remainder smaller than the policy batch is *held back* for the next
         drain (throughput mode: admissions amortize the dispatch cost);
-        departures always drain.
+        departures and refreshes always drain — a stale signature serves
+        wrong assignments for as long as it is held.
 
         ``deadline_s`` (default: the policy's ``deadline_s``) bounds the
         drain to the longest arrival-order *prefix* whose modelled apply
@@ -355,22 +427,37 @@ class ChurnQueue:
         batches: list[ChurnBatch] = []
         cur = ChurnBatch()
         sigs: list[jnp.ndarray] = []
+        rsigs: list[jnp.ndarray] = []
 
         def flush() -> None:
-            nonlocal cur, sigs
+            nonlocal cur, sigs, rsigs
             if cur:
                 if sigs:
                     cur.signatures = jnp.stack(sigs)
+                if rsigs:
+                    cur.refresh_signatures = jnp.stack(rsigs)
                 batches.append(cur)
-            cur, sigs = ChurnBatch(), []
+            cur, sigs, rsigs = ChurnBatch(), [], []
 
         consumed = 0
         for kind, payload, sig in ops:
             if kind == "leave":
-                if cur.join:
+                if cur.join or cur.refresh:
                     flush()
                 cur.leave.append(payload)
+            elif kind == "refresh":
+                if cur.join or cur.leave:
+                    flush()
+                pos, client = payload
+                cur.refresh.append(pos)
+                cur.refresh_clients.append(client)
+                if sig is not None:
+                    rsigs.append(jnp.asarray(sig).reshape(sig.shape[-2:]))
+                if B is not None and len(cur.refresh) == B:
+                    flush()
             else:
+                if cur.refresh:
+                    flush()
                 cur.join.append(payload)
                 if sig is not None:
                     sigs.append(jnp.asarray(sig).reshape(sig.shape[-2:]))
@@ -389,4 +476,5 @@ class ChurnQueue:
         self.stats.drained_batches += len(batches)
         self.stats.drained_joins += sum(len(b.join) for b in batches)
         self.stats.drained_leaves += sum(len(b.leave) for b in batches)
+        self.stats.drained_refreshes += sum(len(b.refresh) for b in batches)
         return batches

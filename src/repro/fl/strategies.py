@@ -680,25 +680,56 @@ class PACFL(Strategy):
         return signature
 
     def handle_churn(self, data, batch):
-        """Fold one drained churn batch into the engine (depart, then admit).
+        """Fold one drained churn batch into the engine (move/depart/admit).
 
         Deliberately mutates ``self.clustering.engine`` in place — the
         strategy owns its clustering for the federation's lifetime, and the
         engine IS the streaming-mutation API (the fork-on-write convention
         of ``PACFLClustering.extend``/``depart`` is for core callers that
-        hand out snapshots).  Engine rows track the trainer's client-list
-        order (survivors keep their order, newcomers append), so leave
-        positions map straight to engine stable ids.  Newcomer signatures
+        hand out snapshots).  The strategy tracks the trainer's client-list
+        order as a stable-id roster (``self._client_ids``): leave positions
+        resolve against it, joins append the engine-assigned ids, and
+        refreshes leave it untouched — necessary because a fused ``move``
+        re-orders engine *rows* (movers re-enter at the tail) while the
+        trainer's list keeps movers in place, so row order and list order
+        diverge after the first refresh.  Newcomer signatures
         arrive precomputed on the batch (eager enqueue-time SVD); a batch
         without them (direct legacy calls) falls back to computing from the
-        stacked data.  New clusters (a newcomer unlike every seen client,
-        or an old cluster split by departures) get fresh models from
-        theta_g^0; existing clusters keep their trained models.
+        stacked data.  Refresh batches (a client's distribution shifted;
+        drained exclusive of leaves/joins) route through the engine's fused
+        ``move`` — one replay pass, movers keep their stable client ids —
+        and pay the same signature upload a newcomer would.  New clusters
+        (a newcomer unlike every seen client, or an old cluster split by
+        departures or moves) get fresh models from theta_g^0; existing
+        clusters keep their trained models.
         """
         engine = self.clustering.engine
-        snapshot = engine.membership()
+        roster = getattr(self, "_client_ids", None)
+        if roster is None:
+            # engine rows == trainer positions until the first move
+            roster = [int(i) for i in engine.membership().ids]
+        if getattr(batch, "refresh", None):
+            ids_mv = np.asarray(
+                [roster[p] for p in batch.refresh], dtype=np.int64
+            )
+            U_ref = getattr(batch, "refresh_signatures", None)
+            if U_ref is None:
+                payloads = (
+                    [jnp.asarray(c.x_train.T) for c in batch.refresh_clients]
+                    if self.cfg.pacfl.family == "svd"
+                    else list(batch.refresh_clients)
+                )
+                U_ref = compute_signatures(
+                    payloads, self.cfg.pacfl,
+                    key=jax.random.fold_in(self._key, engine.version),
+                    context=self._fam_ctx,
+                )
+            engine.move(ids_mv, U_ref)
+            extra = self._family.upload_bytes(U_ref)
+            self.clustering.signature_bytes += extra
+            self.comm_up += extra
         if batch.leave:
-            gone, _ = batch.resolve_leaves(snapshot.ids)
+            gone, roster = batch.resolve_leaves(roster)
             engine.depart(np.asarray(gone, dtype=np.int64))
         if batch.join:
             U_new = getattr(batch, "signatures", None)
@@ -715,11 +746,19 @@ class PACFL(Strategy):
                     key=jax.random.fold_in(self._key, engine.version),
                     context=self._fam_ctx,
                 )
-            engine.admit(U_new)
+            admitted = engine.admit(U_new)
+            roster.extend(int(i) for i in admitted.ids)
             extra = self._family.upload_bytes(U_new)
             self.clustering.signature_bytes += extra
             self.comm_up += extra
-        self.labels = engine.labels
+        self._client_ids = roster
+        # trainer-ordered labels: look stable labels up by client id (engine
+        # row order stops matching trainer order after the first move)
+        snap = engine.membership()
+        label_of = {int(i): l for i, l in zip(snap.ids, snap.labels)}
+        self.labels = np.asarray(
+            [label_of[i] for i in roster], dtype=snap.labels.dtype
+        )
         # grow the per-cluster model stack for any fresh stable ids
         Z_have = jax.tree.leaves(self.cluster_params)[0].shape[0]
         Z_need = int(self.labels.max()) + 1

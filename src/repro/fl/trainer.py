@@ -39,8 +39,13 @@ class ChurnEvent:
 
     ``leave`` holds positions into the client list *as it stands when the
     event fires* (after earlier events); ``join`` appends new clients at the
-    end, in order.  A single event may do both — departures are enqueued
-    first, matching the engine's depart-then-admit order.  Events are an
+    end, in order.  ``refresh`` pairs ``(pos, new_client)`` — the client at
+    ``pos`` stays but its local data shifted, so its signature must be
+    recomputed and its membership re-decided (PACFL routes the drained
+    refresh batch through the engine's fused ``move``).  A single event may
+    do all three — refreshes are enqueued first (they index the membership
+    as the event fires and do not change its size), then departures, then
+    joins, matching the engine's move/depart/admit order.  Events are an
     adapter over the async queue: the trainer enqueues them at their round
     and drains the queue at every round boundary, so a pure event schedule
     behaves exactly like the old synchronous path.
@@ -49,6 +54,7 @@ class ChurnEvent:
     rnd: int
     join: list[ClientData] = field(default_factory=list)
     leave: list[int] = field(default_factory=list)
+    refresh: list[tuple[int, ClientData]] = field(default_factory=list)
 
 
 @dataclass
@@ -115,6 +121,11 @@ def apply_churn_batches(
     # keeps a bad later batch from leaving the strategy half-churned
     n = len(clients)
     for batch in batches:
+        for pos in batch.refresh:
+            if not 0 <= pos < n:
+                raise IndexError(
+                    f"churn round {rnd}: refresh position {pos} out of range"
+                )
         for pos in batch.leave:
             if not 0 <= pos < n:
                 raise IndexError(
@@ -127,6 +138,8 @@ def apply_churn_batches(
     if not batches:
         return clients, None, batches
     for batch in batches:
+        for pos, client in zip(batch.refresh, batch.refresh_clients):
+            clients[pos] = client
         _, clients = batch.resolve_leaves(clients)
         clients.extend(batch.join)
     data = stack_clients(clients)
@@ -188,9 +201,10 @@ def run_federation(
             if verbose:
                 dj = sum(len(b.join) for b in batches)
                 dl = sum(len(b.leave) for b in batches)
+                dr = sum(len(b.refresh) for b in batches)
                 print(
                     f"[{strategy_name}] round {rnd:4d} churn: "
-                    f"-{dl} +{dj} in {len(batches)} batch(es) "
+                    f"-{dl} +{dj} ~{dr} in {len(batches)} batch(es) "
                     f"-> K={len(clients)}"
                 )
         K = data.n_clients

@@ -23,6 +23,10 @@ _SANITIZED_MODULES = {
     "test_serving",
     "tests.test_store_backends",
     "test_store_backends",
+    "tests.test_engine_fuzz",
+    "test_engine_fuzz",
+    "tests.test_drift",
+    "test_drift",
 }
 
 

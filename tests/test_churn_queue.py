@@ -4,6 +4,10 @@
   the engine level and end-to-end through ``run_federation``,
 * drain ordering/coalescing semantics + the throughput hold-back mode,
 * eager signature computation at enqueue time,
+* signature *refresh* churn: exclusive coalesced refresh batches, the
+  refresh-first event adapter, deadline cost accounting, refreshes never
+  held back, and drained refreshes reproducing the synchronous fused-move
+  schedule bitwise (engine level and through PACFL's roster tracking),
 * ``DrainPolicy`` batch-size formula (pure, deterministic) and the seeded
   timing probe,
 * satellite regressions: post-churn local-steps refresh (FedNova tau
@@ -315,6 +319,258 @@ class TestQueueParity:
         assert len(batches) == 1
         assert strat.labels.shape == (11,)
         assert strat.clustering.engine.n_clients == 11
+
+
+# ---------------------------------------------------------------------------
+# Signature refresh churn
+# ---------------------------------------------------------------------------
+
+
+class TestRefreshQueueSemantics:
+    def test_refresh_batches_exclusive_and_capped(self):
+        q = ChurnQueue(policy=DrainPolicy(100.0, 1.0, target_overhead=0.5,
+                                          max_batch=2))
+        q.enqueue_refresh(0, "rA")
+        q.enqueue_refresh(1, "rB")
+        q.enqueue_refresh(2, "rC")      # cap 2: flushes after rB
+        q.enqueue_join("jA")
+        q.enqueue_refresh(3, "rD")
+        q.enqueue_leave(4)
+        q.enqueue_refresh(5, "rE")
+        batches = q.drain()
+        # every kind boundary flushes: no batch mixes refreshes with
+        # leaves or joins, and refresh runs cap at the policy batch size
+        assert [(b.refresh, b.leave, b.join) for b in batches] == [
+            ([0, 1], [], []),
+            ([2], [], []),
+            ([], [], ["jA"]),
+            ([3], [], []),
+            ([], [4], []),
+            ([5], [], []),
+        ]
+        names = {0: "rA", 1: "rB", 2: "rC", 3: "rD", 5: "rE"}
+        assert all(
+            b.refresh_clients == [names[i] for i in b.refresh]
+            for b in batches
+        )
+        assert q.stats.enqueued_refreshes == 5
+        assert q.stats.drained_refreshes == 5
+        assert len(q) == 0
+
+    def test_refresh_signatures_eager_and_stacked(self):
+        calls = []
+
+        def sig_fn(client):
+            calls.append(client)
+            return jnp.full((4, 2), float(len(calls)))
+
+        q = ChurnQueue(signature_fn=sig_fn)
+        q.enqueue_refresh(2, "a")
+        q.enqueue_refresh(0, "b")
+        assert calls == ["a", "b"]          # re-SVD at enqueue, not drain
+        assert q.pending_refreshes == 2
+        (batch,) = q.drain()
+        assert batch.refresh == [2, 0]
+        assert batch.refresh_clients == ["a", "b"]
+        assert batch.refresh_signatures.shape == (2, 4, 2)
+        np.testing.assert_array_equal(
+            np.asarray(batch.refresh_signatures[1]), 2.0
+        )
+        assert batch.signatures is None     # join stack stays empty
+
+    def test_event_orders_refresh_first_and_rejects_duplicates(self):
+        q = ChurnQueue()
+        q.enqueue_event(ChurnEvent(rnd=1, join=["x"], leave=[1],
+                                   refresh=[(0, "rA"), (2, "rB")]))
+        batches = q.drain()
+        # refresh positions index the membership as the event fires, so
+        # they enqueue before the event's leaves and joins
+        assert [(b.refresh, b.leave, b.join) for b in batches] == [
+            ([0, 2], [], []), ([], [1], ["x"]),
+        ]
+        with pytest.raises(ValueError, match="duplicate refresh position"):
+            q.enqueue_event(ChurnEvent(rnd=2, refresh=[(3, "a"), (3, "b")]))
+
+    def test_refreshes_never_held_back(self):
+        """force=False holds under-sized trailing join runs, never
+        refreshes — a stale signature serves wrong assignments for as
+        long as it is held."""
+        q = ChurnQueue(policy=DrainPolicy(300.0, 1.0, target_overhead=0.5,
+                                          max_batch=8))
+        B = q.policy.batch_size
+        q.enqueue_refresh(0, "r0")
+        for i in range(B - 1):
+            q.enqueue_join(f"j{i}")
+        batches = q.drain(force=False)
+        assert [(b.refresh, len(b.join)) for b in batches] == [([0], 0)]
+        assert q.pending_joins == B - 1 and q.pending_refreshes == 0
+
+    def test_estimated_batch_us_models_refresh_as_fused_admission(self):
+        p = DrainPolicy(100.0, 10.0)
+        assert p.estimated_batch_us(0, 0, 3) == 100.0 + 30.0
+        assert p.estimated_batch_us(2, 1, 3) == 200.0 + 110.0 + 130.0
+        assert p.estimated_batch_us(1, 2) == 100.0 + 120.0  # refresh-free
+
+    def test_deadline_slices_refresh_runs_progressively(self):
+        # c0=100us, c1=10us: a refresh run costs 110, 10, 10, ... — a
+        # 120us deadline takes two refreshes, the third stays queued
+        q = ChurnQueue(policy=DrainPolicy(100.0, 10.0, max_batch=4,
+                                          deadline_s=120e-6))
+        for i in range(3):
+            q.enqueue_refresh(i, f"r{i}")
+        (b1,) = q.drain()
+        assert b1.refresh == [0, 1]
+        assert q.pending_refreshes == 1
+        (b2,) = q.drain()
+        assert b2.refresh == [2]
+
+
+class TestRefreshParity:
+    def test_engine_labels_bitwise_vs_synchronous_moves(self):
+        """Drained refresh batches reproduce the synchronous per-event
+        fused-move schedule bitwise — including when the drain coalesces
+        refreshes across events into one bigger ``move``."""
+        key = jax.random.PRNGKey(11)
+        U = clustered_signatures(key, 20, n_bases=4)
+        re_sigs = clustered_signatures(jax.random.fold_in(key, 2), 5,
+                                       n_bases=4, spread=0.3)
+        joins = clustered_signatures(jax.random.fold_in(key, 1), 3, n_bases=4)
+        cfg = EngineConfig(beta=55.0, measure="eq2")
+        schedule = [
+            ChurnEvent(rnd=1, refresh=[(2, re_sigs[0]), (7, re_sigs[1])]),
+            ChurnEvent(rnd=2, refresh=[(0, re_sigs[2])], leave=[3],
+                       join=[joins[0]]),
+            ChurnEvent(rnd=3, refresh=[(4, re_sigs[3]), (10, re_sigs[4])],
+                       join=[joins[1], joins[2]]),
+        ]
+
+        def apply_sync():
+            eng = ClusterEngine.from_signatures(U, cfg)
+            roster = [int(i) for i in eng.ids]
+            for ev in schedule:
+                if ev.refresh:
+                    ids = np.asarray([roster[p] for p, _ in ev.refresh])
+                    eng.move(ids, jnp.stack([c for _, c in ev.refresh]))
+                for pos in sorted(set(ev.leave), reverse=True):
+                    eng.depart(np.asarray([roster.pop(pos)]))
+                if ev.join:
+                    res = eng.admit(jnp.stack(ev.join))
+                    roster.extend(int(i) for i in res.ids)
+            return eng
+
+        sync = apply_sync()
+
+        queued = ClusterEngine.from_signatures(U, cfg)
+        roster = [int(i) for i in queued.ids]
+        q = ChurnQueue(signature_fn=lambda u: u)
+        for ev in schedule:
+            q.enqueue_event(ev)
+        n_moves = 0
+        for batch in q.drain():
+            if batch.refresh:
+                ids = np.asarray([roster[p] for p in batch.refresh])
+                queued.move(ids, batch.refresh_signatures)
+                n_moves += 1
+            if batch.leave:
+                gone, roster = batch.resolve_leaves(roster)
+                queued.depart(np.asarray(gone))
+            if batch.join:
+                res = queued.admit(batch.signatures)
+                roster.extend(int(i) for i in res.ids)
+        # events 1 and 2 refreshed back-to-back: coalesced into one move
+        assert n_moves == 2
+
+        np.testing.assert_array_equal(sync.labels, queued.labels)
+        np.testing.assert_array_equal(sync.canonical_labels,
+                                      queued.canonical_labels)
+        # distances agree to float32 ulps — the coalesced move computes its
+        # cross block at a different batch shape than the two smaller ones,
+        # so the blocked reduction may round differently; the *labels*
+        # (the membership contract) are bitwise above
+        np.testing.assert_allclose(sync.dense(), queued.dense(), rtol=1e-6)
+
+    def test_federation_refresh_invariant_to_batch_split(self, small_fed):
+        """End-to-end: a refresh schedule produces bitwise the same PACFL
+        membership and evaluation whether refreshes drain coalesced or as
+        single-client moves."""
+        clients, init_fn, cfg = small_fed
+        churn = [
+            ChurnEvent(rnd=2, refresh=[(0, clients[10]), (2, clients[11])]),
+            ChurnEvent(rnd=3, refresh=[(1, clients[12])], leave=[3]),
+        ]
+        res_a = run_federation("pacfl", clients[:10], mlp_clf_apply, init_fn,
+                               cfg, seed=0, churn=churn)
+        res_b = run_federation("pacfl", clients[:10], mlp_clf_apply, init_fn,
+                               cfg, seed=0, churn=churn,
+                               drain_policy=DrainPolicy(0.0, 1.0, max_batch=1))
+        np.testing.assert_array_equal(res_a.strategy_obj.labels,
+                                      res_b.strategy_obj.labels)
+        np.testing.assert_array_equal(res_a.final_accs, res_b.final_accs)
+        assert res_b.strategy_obj.clustering.engine.version > \
+            res_a.strategy_obj.clustering.engine.version
+
+
+class TestRefreshTrainer:
+    def test_refresh_out_of_range_fails_before_mutation(self, small_fed):
+        clients, init_fn, cfg = small_fed
+        from repro.fl.strategies import PACFL
+
+        strat = PACFL(mlp_clf_apply, init_fn, cfg)
+        strat.setup(KEY, stack_clients(clients[:6]))
+        labels0 = strat.labels.copy()
+        q = ChurnQueue(signature_fn=strat.churn_signature_fn())
+        q.enqueue_refresh(0, clients[6])
+        q.enqueue_refresh(99, clients[7])
+        with pytest.raises(IndexError, match="refresh position.*out of range"):
+            apply_churn_batches(q, strat, clients[:6])
+        assert strat.clustering.engine.n_clients == 6
+        np.testing.assert_array_equal(strat.labels, labels0)
+
+    def test_refresh_replaces_payload_and_preserves_stable_ids(self, small_fed):
+        clients, init_fn, cfg = small_fed
+        from repro.fl.strategies import PACFL
+
+        strat = PACFL(mlp_clf_apply, init_fn, cfg)
+        strat.setup(KEY, stack_clients(clients[:8]))
+        ids0 = [int(i) for i in strat.clustering.engine.membership().ids]
+        q = ChurnQueue(signature_fn=strat.churn_signature_fn())
+        q.enqueue_event(ChurnEvent(rnd=1, refresh=[(1, clients[9])]))
+        new_clients, data, _ = apply_churn_batches(q, strat, clients[:8])
+        # the roster keeps its size; position 1 carries the new payload
+        assert len(new_clients) == 8 and data.n_clients == 8
+        assert new_clients[1] is clients[9]
+        assert new_clients[0] is clients[0]
+        # a move, not a depart+admit: every stable client id survives
+        assert sorted(int(i) for i in strat.clustering.engine.ids) == \
+            sorted(ids0)
+        assert strat.labels.shape == (8,)
+
+    def test_leave_after_refresh_removes_refreshed_client(self, small_fed):
+        """Roster tracking after a fused move: engine row order diverges
+        from the trainer list (movers re-enter at tail rows), so a later
+        positional leave must resolve through PACFL's id roster — not
+        engine row order (regression for the move/row misalignment)."""
+        clients, init_fn, cfg = small_fed
+        from repro.fl.strategies import PACFL
+
+        strat = PACFL(mlp_clf_apply, init_fn, cfg)
+        strat.setup(KEY, stack_clients(clients[:8]))
+        ids0 = [int(i) for i in strat.clustering.engine.membership().ids]
+        q = ChurnQueue(signature_fn=strat.churn_signature_fn())
+        q.enqueue_event(ChurnEvent(rnd=1, refresh=[(1, clients[9])]))
+        q.enqueue_leave(1)
+        new_clients, _, _ = apply_churn_batches(q, strat, clients[:8])
+        assert len(new_clients) == 7
+        # the refreshed client is the one who left
+        assert all(c is not clients[9] for c in new_clients)
+        # the engine dropped exactly the refreshed client's stable id
+        assert sorted(int(i) for i in strat.clustering.engine.ids) == \
+            sorted(i for i in ids0 if i != ids0[1])
+        # per-position labels stay aligned with the trainer roster
+        snap = strat.clustering.engine.membership()
+        label_of = {int(i): int(l) for i, l in zip(snap.ids, snap.labels)}
+        expect = [label_of[i] for i in ids0 if i != ids0[1]]
+        np.testing.assert_array_equal(strat.labels, expect)
 
 
 # ---------------------------------------------------------------------------

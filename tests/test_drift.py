@@ -1,0 +1,298 @@
+"""Drift stack tests: seeded generator, subprocess determinism, tracker.
+
+* ``DriftGenerator`` — covariate drift is an *exact* subspace rotation
+  (every principal angle between the original frame and its drifted image
+  equals ``rnd * angle_per_round_deg``), label drift resamples from the
+  original rows only, both are bitwise deterministic per
+  ``(spec, dim, name, rnd)``.
+* Cross-process determinism — drifted arrays must not depend on the
+  per-process string hash salt (the ``hash()``-seeding bug class repro-lint
+  R1 guards; drift RNG keys go through ``zlib.crc32``).
+* ``DriftTracker`` — per-cluster dispersion, split/merge candidate flags,
+  delta tracking across observations, and memory-tier independence of the
+  whole report.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import clustered_signatures
+from repro.data.synthetic import DriftGenerator, DriftSpec
+from repro.core.engine import ClusterEngine, DriftTracker, EngineConfig
+
+KEY = jax.random.PRNGKey(0)
+
+DIM = 48
+
+
+def principal_angles_deg(Qa, Qb):
+    """Principal angles (degrees) between the column spans of Qa and Qb."""
+    Qa, _ = np.linalg.qr(np.asarray(Qa, dtype=np.float64))
+    Qb, _ = np.linalg.qr(np.asarray(Qb, dtype=np.float64))
+    s = np.linalg.svd(Qa.T @ Qb, compute_uv=False)
+    return np.degrees(np.arccos(np.clip(s, -1.0, 1.0)))
+
+
+class TestDriftGeneratorCovariate:
+    def gen(self, **kw):
+        spec = DriftSpec(kind="covariate", angle_per_round_deg=7.0, rank=3,
+                         seed=5, **kw)
+        return DriftGenerator(spec, DIM)
+
+    def test_rotation_angle_is_exact(self):
+        """Drifting data inside span(B) tilts the span by exactly
+        rnd * angle_per_round_deg — every principal angle, not just the
+        largest."""
+        gen = self.gen()
+        B, _ = gen.frame("client-3")
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal((64, 3)) @ B.T).astype(np.float32)
+        for rnd in (1, 2, 4):
+            x2, _ = gen.apply("client-3", rnd, x, np.zeros(64, dtype=np.int64))
+            img = np.linalg.svd(np.asarray(x2, dtype=np.float64).T,
+                                full_matrices=False)[0][:, :3]
+            np.testing.assert_allclose(
+                principal_angles_deg(B, img),
+                np.full(3, 7.0 * rnd),
+                atol=1e-6,
+            )
+
+    def test_orthogonal_complement_untouched(self):
+        gen = self.gen()
+        B, C = gen.frame("c")
+        # a vector orthogonal to the whole rotation plane is a fixed point
+        v = np.linalg.qr(
+            np.concatenate([B, C], axis=1), mode="complete"
+        )[0][:, -1]
+        x = np.tile(v, (4, 1)).astype(np.float32)
+        x2, _ = gen.apply("c", 3, x, np.zeros(4, dtype=np.int64))
+        np.testing.assert_allclose(x2, x, atol=1e-6)
+
+    def test_round_zero_is_identity_copy(self):
+        gen = self.gen()
+        x = np.random.default_rng(1).standard_normal((5, DIM)).astype(np.float32)
+        y = np.arange(5, dtype=np.int64)
+        x2, y2 = gen.apply("c", 0, x, y)
+        np.testing.assert_array_equal(x2, x)
+        np.testing.assert_array_equal(y2, y)
+        x2[0, 0] = 99.0  # copies: mutating output must not touch input
+        assert x[0, 0] != 99.0
+
+    def test_cumulative_from_origin_and_deterministic(self):
+        gen = self.gen()
+        x = np.random.default_rng(2).standard_normal((6, DIM)).astype(np.float32)
+        y = np.zeros(6, dtype=np.int64)
+        a1, _ = gen.apply("c", 2, x, y)
+        a2, _ = gen.apply("c", 2, x, y)
+        np.testing.assert_array_equal(a1, a2)   # bitwise repeatable
+        b, _ = gen.apply("other", 2, x, y)      # name keys the trajectory
+        assert not np.array_equal(a1, b)
+        assert a1.dtype == x.dtype
+
+    def test_frames_are_orthonormal_and_private(self):
+        gen = self.gen()
+        B, C = gen.frame("c")
+        F = np.concatenate([B, C], axis=1)
+        np.testing.assert_allclose(F.T @ F, np.eye(6), atol=1e-12)
+        B2, _ = gen.frame("d")
+        assert not np.allclose(B, B2)
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="unknown drift kind"):
+            DriftGenerator(DriftSpec(kind="nope"), DIM)
+        with pytest.raises(ValueError, match="complement"):
+            DriftGenerator(DriftSpec(kind="covariate", rank=DIM), DIM)
+
+
+class TestDriftGeneratorLabel:
+    def test_resamples_from_original_rows_with_skew(self):
+        gen = DriftGenerator(
+            DriftSpec(kind="label", label_gamma=0.3, seed=9), DIM
+        )
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((200, DIM)).astype(np.float32)
+        y = rng.integers(0, 4, size=200).astype(np.int64)
+        x2, y2 = gen.apply("c", 1, x, y)
+        assert x2.shape == x.shape and y2.shape == y.shape
+        # every output row IS an original row with its original label
+        lookup = {x[i].tobytes(): int(y[i]) for i in range(len(y))}
+        assert all(lookup[x2[i].tobytes()] == int(y2[i]) for i in range(len(y2)))
+        # Dirichlet(0.3) over 4 classes is skewed vs the uniform input
+        counts = np.bincount(y2, minlength=4)
+        assert counts.max() > 1.5 * counts.min() + 1
+        # per-round resample: a later round draws a different mixture
+        _, y3 = gen.apply("c", 2, x, y)
+        assert not np.array_equal(y2, y3)
+
+
+class TestDriftSubprocessDeterminism:
+    def test_drift_stable_across_hash_salts(self):
+        """Drift schedules are keyed by client *name* — a string.  The RNG
+        digest must go through crc32, not the salted ``hash()`` (the
+        make_dataset bug class), so two interpreters with different
+        PYTHONHASHSEED produce bitwise-identical drifted data."""
+        import os
+        import subprocess
+        import sys
+
+        code = (
+            "import numpy as np, zlib\n"
+            "from repro.data.synthetic import DriftGenerator, DriftSpec\n"
+            "gen = DriftGenerator(DriftSpec(kind='covariate', "
+            "angle_per_round_deg=11.0, rank=4, seed=7), 32)\n"
+            "x = np.random.default_rng(0).standard_normal((16, 32))\n"
+            "y = np.arange(16) % 3\n"
+            "for kind in ('covariate', 'label'):\n"
+            "    g = DriftGenerator(DriftSpec(kind=kind, seed=7), 32)\n"
+            "    x2, y2 = g.apply('client-0', 3, x, y)\n"
+            "    print(kind, zlib.crc32(x2.tobytes()), zlib.crc32(y2.tobytes()))\n"
+        )
+
+        def run(salt):
+            env = dict(os.environ, PYTHONHASHSEED=salt)
+            env["PYTHONPATH"] = os.pathsep.join(
+                filter(None, ["src", env.get("PYTHONPATH")])
+            )
+            out = subprocess.run(
+                [sys.executable, "-c", code], capture_output=True,
+                text=True, env=env,
+                cwd=os.path.dirname(os.path.dirname(__file__)),
+            )
+            assert out.returncode == 0, out.stderr
+            return out.stdout
+
+        assert run("1") == run("4242")
+
+
+@pytest.mark.lint
+class TestDriftLintCoverage:
+    def test_r1_catches_hash_keyed_drift_rng(self, tmp_path):
+        """The exact bug the drift RNG design avoids: seeding from a
+        process-salted string hash."""
+        import textwrap
+
+        from tools.repro_lint.rules import lint_files
+
+        p = tmp_path / "src" / "bad_drift.py"
+        p.parent.mkdir(parents=True)
+        p.write_text(textwrap.dedent("""\
+            import numpy as np
+            def drift_rng(name, seed):
+                return np.random.default_rng([seed, hash(name)])
+        """))
+        fs = lint_files(tmp_path, ["src/bad_drift.py"])
+        assert [f.rule for f in fs] == ["R1"]
+        assert "PYTHONHASHSEED" in fs[0].message
+
+    def test_synthetic_module_is_r1_clean(self):
+        from pathlib import Path
+
+        from tools.repro_lint.rules import lint_files
+
+        root = Path(__file__).resolve().parents[1]
+        fs = lint_files(root, ["src/repro/data/synthetic.py"])
+        assert [f for f in fs if f.rule == "R1"] == []
+
+
+# ---------------------------------------------------------------------------
+# DriftTracker
+# ---------------------------------------------------------------------------
+
+
+MEMORY_TIERS = (
+    {"memory": "dense"},
+    {"memory": "banded", "band_rows": 8},
+    {"memory": "condensed_only"},
+    {"memory": "spilled", "memory_budget_bytes": 1 << 12,
+     "spill_segment_rows": 16},
+)
+
+
+def _engine(mem_kw=None, beta=55.0, **cfg_kw):
+    U = clustered_signatures(KEY, 24, n_bases=3)
+    cfg = EngineConfig(beta=beta, measure="eq2", **(mem_kw or {}), **cfg_kw)
+    return ClusterEngine.from_signatures(U, cfg)
+
+
+class TestDriftTracker:
+    def test_report_shape_and_delta_lifecycle(self):
+        eng = _engine()
+        tr = DriftTracker()
+        rep = tr.observe(eng)
+        assert rep.version == eng.version
+        assert rep.n_clients == 24
+        assert rep.threshold_deg == 55.0          # defaults to engine beta
+        assert sum(c.size for c in rep.clusters) == 24
+        assert all(c.delta_mean_deg is None for c in rep.clusters)
+        assert all(
+            0.0 <= c.mean_intra_deg <= c.max_intra_deg for c in rep.clusters
+        )
+        # tight synthetic clusters under a quantile-style threshold:
+        # no drift yet
+        assert rep.split_candidates == ()
+        rep2 = tr.observe(eng)                    # nothing changed between obs
+        assert all(c.delta_mean_deg == 0.0 for c in rep2.clusters)
+        assert tr.history == [rep, rep2]
+        assert rep.drift_of(rep.clusters[0].label) is rep.clusters[0]
+        assert rep.drift_of(10**9) is None
+
+    def test_split_and_merge_flags_bracket_the_dispersion(self):
+        eng = _engine()
+        base = DriftTracker().observe(eng)
+        widest = max(c.mean_intra_deg for c in base.clusters if c.size >= 2)
+        # threshold below the widest cluster's dispersion -> it splits
+        tight = DriftTracker(threshold_deg=widest * 0.5).observe(eng)
+        assert tight.split_candidates != ()
+        assert all(
+            tight.drift_of(l).size >= 2 for l in tight.split_candidates
+        )
+        # threshold above every inter-cluster distance -> everything merges
+        loose = DriftTracker(threshold_deg=180.0).observe(eng)
+        n = len(loose.clusters)
+        assert len(loose.merge_candidates) == n * (n - 1) // 2
+        assert all(d <= 180.0 for _, _, d in loose.merge_candidates)
+        # distances are reported with the pair
+        assert all(a < b for a, b, _ in loose.merge_candidates)
+
+    def test_n_clusters_mode_needs_explicit_threshold(self):
+        U = clustered_signatures(KEY, 16, n_bases=3)
+        eng = ClusterEngine.from_signatures(
+            U, EngineConfig(n_clusters=3, measure="eq2")
+        )
+        with pytest.raises(ValueError, match="n_clusters mode"):
+            DriftTracker().observe(eng)
+        rep = DriftTracker(threshold_deg=50.0).observe(eng)
+        assert rep.threshold_deg == 50.0
+        assert len(rep.clusters) == 3
+
+    @pytest.mark.parametrize("mem_kw", MEMORY_TIERS[1:],
+                             ids=lambda kw: kw["memory"])
+    def test_report_is_memory_tier_independent(self, mem_kw):
+        ref = DriftTracker().observe(_engine())
+        got = DriftTracker().observe(_engine(mem_kw))
+        assert got.split_candidates == ref.split_candidates
+        assert [
+            (a, b) for a, b, _ in got.merge_candidates
+        ] == [(a, b) for a, b, _ in ref.merge_candidates]
+        for cg, cr in zip(got.clusters, ref.clusters):
+            assert (cg.label, cg.size) == (cr.label, cr.size)
+            np.testing.assert_allclose(cg.mean_intra_deg, cr.mean_intra_deg)
+            np.testing.assert_allclose(cg.max_intra_deg, cr.max_intra_deg)
+
+    def test_fused_move_shows_up_as_dispersion_delta(self):
+        """Refreshing members via ``move`` with noisier signatures widens
+        their cluster; the tracker keyed by stable labels sees the delta."""
+        eng = _engine()
+        tr = DriftTracker()
+        tr.observe(eng)
+        moved = eng.ids[:2]
+        eng.move(moved, clustered_signatures(
+            jax.random.fold_in(KEY, 77), 2, n_bases=3, spread=0.5))
+        rep = tr.observe(eng)
+        assert rep.version == eng.version
+        deltas = [
+            c.delta_mean_deg for c in rep.clusters
+            if c.delta_mean_deg is not None
+        ]
+        assert deltas and any(abs(d) > 0 for d in deltas)

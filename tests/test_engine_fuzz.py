@@ -1,0 +1,275 @@
+"""Oracle-fuzzed engine harness: interleaved admit / depart / move schedules.
+
+Property-based when ``hypothesis`` is installed (requirements-dev.txt puts
+it in CI); degrades to a fixed example grid through
+``tests._hypothesis_compat`` otherwise, so tier-1 keeps the coverage shape
+without the package.
+
+Every drawn schedule — ragged batch sizes, ids picked from the live
+roster, signature refreshes routed through the fused ``move`` — is applied
+to engines in all four memory tiers and checked after *every* op against
+the full re-cluster oracle (``hierarchical_clustering`` of the engine's
+own store):
+
+* canonical labels match the oracle partition,
+* the cached merge script IS the full re-cluster script (pairs exactly,
+  heights to float tolerance) — the invariant that keeps every future
+  replay oracle-exact,
+* all four memory tiers agree bitwise on stable and canonical labels.
+
+Two data flavors: ``smooth`` clustered signatures exercise the real
+measure pipeline; ``grid`` integer distances force maximal height ties
+(the hardest case for script-vs-dirty interleaving) by monkeypatching
+``repro.core.pme.proximity_blocks`` to slice a pregenerated grid matrix —
+signatures encode their grid index, so refreshed movers genuinely pick up
+new rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.pme as pme
+from conftest import clustered_signatures
+from repro.core.engine import ClusterEngine, EngineConfig
+from repro.core.hc import hierarchical_clustering
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+
+# Tier kwargs mirror benchmarks/proximity_scale.py's parity gates; budgets
+# are tiny so the spilled tier actually spills at fuzz-test sizes.
+MEMORY_TIERS = (
+    ("dense", {"memory": "dense"}),
+    ("banded", {"memory": "banded", "band_rows": 8}),
+    ("condensed_only", {"memory": "condensed_only"}),
+    ("spilled", {"memory": "spilled", "memory_budget_bytes": 1 << 12,
+                 "spill_segment_rows": 16}),
+)
+
+
+def canon(labels):
+    """Canonical relabel by first occurrence (partition comparison)."""
+    seen = {}
+    return np.array([seen.setdefault(int(x), len(seen)) for x in labels])
+
+
+def _oracle_kw(cfg):
+    return (
+        {"n_clusters": cfg.n_clusters}
+        if cfg.n_clusters is not None
+        else {"beta": cfg.beta}
+    )
+
+
+def _check_oracle_and_script(eng, cfg, ctx):
+    """The engine's partition AND cached script match a full re-cluster."""
+    oracle = hierarchical_clustering(
+        eng.dense(np.float64), linkage=cfg.linkage, **_oracle_kw(cfg)
+    )
+    assert (canon(oracle) == canon(eng.canonical_labels)).all(), ctx
+    fresh = ClusterEngine.from_proximity(eng.store.dense(), eng.U, cfg)
+    assert [(a, b) for a, b, _ in eng._script] == [
+        (a, b) for a, b, _ in fresh._script
+    ], ctx
+    np.testing.assert_allclose(
+        [h for _, _, h in eng._script],
+        [h for _, _, h in fresh._script],
+        rtol=1e-6, err_msg=str(ctx),
+    )
+
+
+def _drive(eng, schedule, sig_of, rng):
+    """Apply one schedule to one engine; yields after every op."""
+    for step, (op, size) in enumerate(schedule):
+        if op == "depart" and eng.n_clients > size + 4:
+            eng.depart(np.sort(rng.choice(eng.ids, size=size, replace=False)))
+        elif op == "move" and eng.n_clients > size + 4:
+            ids = np.sort(rng.choice(eng.ids, size=size, replace=False))
+            eng.move(ids, sig_of(step, size))
+        else:  # admit — also the fallback when the roster is too small
+            eng.admit(sig_of(step, size))
+        yield step
+
+
+def _schedule(rng, n_ops=6):
+    """Ragged interleaved op schedule: (kind, batch_size) pairs."""
+    kinds = np.array(["admit", "depart", "move"])
+    return [
+        (str(kinds[rng.integers(0, 3)]), int(rng.integers(1, 5)))
+        for _ in range(n_ops)
+    ]
+
+
+class TestFuzzSmooth:
+    """Clustered-signature flavor: the real measure pipeline end to end."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(0, 3),
+        st.sampled_from(["beta", "n_clusters"]),
+        st.sampled_from(["average", "complete"]),
+    )
+    def test_interleaved_schedule_tracks_oracle_all_tiers(
+        self, seed, mode, linkage
+    ):
+        key = jax.random.fold_in(KEY, seed)
+        U0 = clustered_signatures(key, 20, n_bases=4)
+        schedule = _schedule(np.random.default_rng(seed))
+        mode_kw = (
+            {"beta": 55.0, "measure": "eq2"}
+            if mode == "beta"
+            else {"n_clusters": 4, "measure": "eq2"}
+        )
+
+        def sig_of(step, size):
+            return clustered_signatures(
+                jax.random.fold_in(key, 100 + step), size, n_bases=4
+            )
+
+        per_tier = {}
+        for tier, mem_kw in MEMORY_TIERS:
+            cfg = EngineConfig(linkage=linkage, **mode_kw, **mem_kw)
+            eng = ClusterEngine.from_signatures(U0, cfg)
+            rng = np.random.default_rng([seed, 1])  # same draws per tier
+            snaps = []
+            for step in _drive(eng, schedule, sig_of, rng):
+                if tier == "dense":
+                    _check_oracle_and_script(
+                        eng, cfg, (seed, mode, linkage, step)
+                    )
+                snaps.append((eng.labels.copy(), eng.canonical_labels.copy()))
+            per_tier[tier] = snaps
+        for tier, snaps in per_tier.items():
+            for (s, c), (sd, cd) in zip(snaps, per_tier["dense"]):
+                np.testing.assert_array_equal(s, sd, err_msg=tier)
+                np.testing.assert_array_equal(c, cd, err_msg=tier)
+
+
+class TestFuzzTieHeavyGrid:
+    """Integer-grid flavor: exact height ties on every merge decision.
+
+    ``proximity_blocks`` is monkeypatched to slice a pregenerated grid
+    matrix; each signature's ``[0, 0]`` entry encodes its grid row, so
+    admitted newcomers and refreshed movers pull genuinely new
+    distances while departures drop theirs.
+    """
+
+    TOTAL = 96  # grid rows available to one schedule (start + churn)
+
+    @staticmethod
+    def _grid(rng, K):
+        X = rng.integers(1, 16, size=(K, K)).astype(np.float64)
+        A = (X + X.T) / 2
+        np.fill_diagonal(A, 0)
+        return A
+
+    @staticmethod
+    def _sig(idxs):
+        u = np.zeros((len(idxs), 2, 1), dtype=np.float32)
+        u[:, 0, 0] = np.asarray(idxs, dtype=np.float32)
+        return jnp.asarray(u)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(0, 4),
+        st.sampled_from(["beta", "n_clusters"]),
+    )
+    def test_tie_heavy_schedule_tracks_oracle_all_tiers(self, seed, mode):
+        data_rng = np.random.default_rng([seed, 7])
+        A_full = self._grid(data_rng, self.TOTAL)
+        schedule = _schedule(np.random.default_rng(seed), n_ops=8)
+        mode_kw = {"beta": 7.0} if mode == "beta" else {"n_clusters": 3}
+
+        def fake_blocks(U_old, U_new, **kw):
+            io = np.asarray(U_old)[:, 0, 0].astype(int)
+            inew = np.asarray(U_new)[:, 0, 0].astype(int)
+            return A_full[np.ix_(io, inew)], A_full[np.ix_(inew, inew)]
+
+        per_tier = {}
+        with pytest.MonkeyPatch.context() as mp:
+            mp.setattr(pme, "proximity_blocks", fake_blocks)
+            for tier, mem_kw in MEMORY_TIERS:
+                M = 10
+                cfg = EngineConfig(**mode_kw, **mem_kw)
+                eng = ClusterEngine.from_proximity(
+                    A_full[:M, :M], self._sig(range(M)), cfg
+                )
+                next_idx = M
+                rng = np.random.default_rng([seed, 1])
+                snaps = []
+                counter = [next_idx]
+
+                def sig_of(step, size):
+                    lo = counter[0]
+                    counter[0] += size
+                    assert counter[0] <= self.TOTAL
+                    return self._sig(range(lo, lo + size))
+
+                for step in _drive(eng, schedule, sig_of, rng):
+                    if tier == "dense":
+                        _check_oracle_and_script(
+                            eng, cfg, (seed, mode, step)
+                        )
+                    snaps.append(
+                        (eng.labels.copy(), eng.canonical_labels.copy())
+                    )
+                per_tier[tier] = snaps
+        for tier, snaps in per_tier.items():
+            for (s, c), (sd, cd) in zip(snaps, per_tier["dense"]):
+                np.testing.assert_array_equal(s, sd, err_msg=tier)
+                np.testing.assert_array_equal(c, cd, err_msg=tier)
+
+
+class TestSanitizerCatchesSmuggledDense:
+    def test_injected_dense_build_inside_move_trips_s1(self, monkeypatch):
+        """Injection proof for the REPRO_SANITIZE pass: a dense (K, K)
+        materialization smuggled into ``move()``'s replay path must trip
+        the armed sanitizer's S1 contract — i.e. the sanitizer genuinely
+        watches the fused-move read path, it is not a no-op there."""
+        import repro.core.engine.engine as engine_mod
+        from repro.core.engine import sanitize
+
+        real_replay = engine_mod.replay
+
+        def smuggling_replay(store, *args, **kwargs):
+            store.dense(np.float64)      # the contraband allocation
+            return real_replay(store, *args, **kwargs)
+
+        U = clustered_signatures(KEY, 16, n_bases=3)
+        eng = ClusterEngine.from_signatures(
+            U, EngineConfig(beta=55.0, measure="eq2", memory="condensed_only")
+        )
+        movers = eng.ids[:2]
+        U_ref = clustered_signatures(jax.random.fold_in(KEY, 3), 2, n_bases=3)
+        monkeypatch.setattr(engine_mod, "replay", smuggling_replay)
+        with sanitize.sanitized():
+            with pytest.raises(sanitize.SanitizerViolation):
+                eng.move(movers, U_ref)
+        # with the S1 escape hatch held open the same build is permitted —
+        # the contract check, not the monkeypatch, produced the failure
+        # above (works both armed-by-env and armed only by this test)
+        eng2 = ClusterEngine.from_signatures(
+            U, EngineConfig(beta=55.0, measure="eq2", memory="condensed_only")
+        )
+        with sanitize.sanitized(), sanitize.allow_dense():
+            res = eng2.move(movers, U_ref)
+        assert res.canonical.shape == (16,)
+
+
+class TestFuzzHarnessMeta:
+    def test_compat_shim_mode_is_reported(self):
+        """Collection-time breadcrumb: which branch of the shim ran."""
+        assert isinstance(HAVE_HYPOTHESIS, bool)
+
+    def test_move_all_rebootstrap_keeps_oracle(self):
+        """Edge: moving every client re-bootstraps and stays oracle-exact."""
+        U = clustered_signatures(KEY, 12, n_bases=3)
+        cfg = EngineConfig(beta=55.0, measure="eq2")
+        eng = ClusterEngine.from_signatures(U, cfg)
+        ids_before = eng.ids.copy()
+        eng.move(eng.ids, clustered_signatures(
+            jax.random.fold_in(KEY, 9), 12, n_bases=3))
+        np.testing.assert_array_equal(np.sort(eng.ids), np.sort(ids_before))
+        _check_oracle_and_script(eng, cfg, "move-all")
